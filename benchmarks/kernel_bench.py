@@ -1,0 +1,82 @@
+"""SPM operator scaling benchmark (paper §5 complexity claim) + kernel
+traffic model.
+
+Wall-clock on this CPU container: dense O(n^2) matmul vs SPM O(nL)
+composition at growing width (the paper's crossover, Tables 1-2 compute
+columns).  The Pallas kernel itself is validated in interpret mode
+(timing it under interpret is meaningless), so the TPU claim is reported
+via the traffic model: fused VMEM kernel = 1 HBM read + 1 write vs L+1
+round-trips for the naive composition.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_step
+from repro.core import SPMConfig, init_spm, spm_apply
+from repro.core.pairings import default_n_stages
+from repro.kernels.spm_stack import pick_block_rows, vmem_bytes
+
+KEY = jax.random.PRNGKey(0)
+
+
+def bench_width(n: int, batch: int = 256):
+    L = default_n_stages(n)
+    cfg = SPMConfig(n=n, n_stages=L, variant="general", backward="custom")
+    p = init_spm(KEY, cfg)
+    x = jax.random.normal(KEY, (batch, n))
+    w = jax.random.normal(KEY, (n, n)) / n ** 0.5
+
+    spm_f = jax.jit(lambda x: spm_apply(p, x, cfg))
+    dense_f = jax.jit(lambda x: x @ w)
+    t_spm = time_step(spm_f, x)
+    t_dense = time_step(dense_f, x)
+
+    # fwd+bwd (training step shape)
+    spm_g = jax.jit(jax.grad(lambda x: jnp.sum(spm_apply(p, x, cfg) ** 2)))
+    dense_g = jax.jit(jax.grad(lambda x: jnp.sum((x @ w) ** 2)))
+    tg_spm = time_step(spm_g, x)
+    tg_dense = time_step(dense_g, x)
+    return {"L": L, "fwd_spm_us": t_spm * 1e6, "fwd_dense_us": t_dense * 1e6,
+            "bwd_spm_us": tg_spm * 1e6, "bwd_dense_us": tg_dense * 1e6}
+
+
+def traffic_model(n: int, batch: int, L: int) -> dict:
+    """HBM bytes per call: naive composition vs fused kernel (f32)."""
+    act = batch * n * 4
+    naive = (L + 1) * 2 * act            # read+write per stage
+    fused = 2 * act + L * (n // 2) * 16  # one read+write + coeffs
+    br = pick_block_rows(min(n, 2048), L)
+    return {"naive_bytes": naive, "fused_bytes": fused,
+            "reduction": naive / fused,
+            "block_rows": br,
+            "vmem_bytes": vmem_bytes(br, min(n, 2048), L)}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    widths = (512, 1024, 2048, 4096) if args.full else (256, 512, 1024)
+
+    print("# SPM vs dense scaling (CPU wall-clock) + kernel traffic model")
+    print("n,L,fwd_dense_us,fwd_spm_us,fwd_speedup,"
+          "bwd_dense_us,bwd_spm_us,bwd_speedup,hbm_reduction,vmem_bytes")
+    for n in widths:
+        r = bench_width(n)
+        t = traffic_model(n, 256, r["L"])
+        print(f"{n},{r['L']},{r['fwd_dense_us']:.0f},{r['fwd_spm_us']:.0f},"
+              f"{r['fwd_dense_us']/r['fwd_spm_us']:.2f}x,"
+              f"{r['bwd_dense_us']:.0f},{r['bwd_spm_us']:.0f},"
+              f"{r['bwd_dense_us']/r['bwd_spm_us']:.2f}x,"
+              f"{t['reduction']:.1f}x,{t['vmem_bytes']}")
+        emit(f"kernel/n{n}/spm_fwd", r["fwd_spm_us"],
+             f"dense={r['fwd_dense_us']:.0f}us")
+
+
+if __name__ == "__main__":
+    main()

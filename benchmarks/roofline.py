@@ -1,0 +1,60 @@
+"""Roofline table builder: reads results/dryrun/<mesh>/*.json (produced by
+launch/dryrun.py) and prints the §Roofline table per (arch x shape):
+three terms in seconds, dominant bottleneck, MODEL_FLOPS ratio."""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load(mesh: str):
+    recs = []
+    for fp in sorted(glob.glob(os.path.join(RESULTS, mesh, "*.json"))):
+        with open(fp) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_row(r: dict) -> str:
+    if not r.get("ok"):
+        return (f"| {r['arch']} | {r['shape']} | FAIL | | | | | "
+                f"{r.get('error','')[:60]} |")
+    t = r["roofline"]
+    ratio = r.get("useful_flops_ratio")
+    return ("| {arch} | {shape} | {c:.3g} | {m:.3g} | {x:.3g} | {dom} | "
+            "{rf:.2%} | {ur} |".format(
+                arch=r["arch"], shape=r["shape"],
+                c=t["compute_s"], m=t["memory_s"], x=t["collective_s"],
+                dom=t["dominant"].replace("_s", ""),
+                rf=t["roofline_fraction"],
+                ur=f"{ratio:.2f}" if ratio else "-"))
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args(argv)
+    recs = load(args.mesh)
+    if not recs:
+        print(f"(no dry-run results for mesh={args.mesh} yet — run "
+              f"python -m repro.launch.dryrun --all)")
+        return
+    print(f"# Roofline table ({args.mesh} mesh, per-chip terms, TPU v5e "
+          f"constants)")
+    print("| arch | shape | compute_s | memory_s | collective_s | dominant "
+          "| roofline_frac | useful_flops |")
+    print("|---|---|---|---|---|---|---|---|")
+    n_ok = 0
+    for r in recs:
+        print(fmt_row(r))
+        n_ok += bool(r.get("ok"))
+    print(f"\n{n_ok}/{len(recs)} cells OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Benchmark runner: one section per paper table + kernel + roofline.
+
+Emits ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit)
+interleaved with per-table reports.  Quick mode by default (CPU-sized);
+``--full`` reproduces paper-scale widths.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    choices=(None, "table1", "table2", "table34", "kernel",
+                             "roofline"))
+    args = ap.parse_args()
+    flags = ["--full"] if args.full else []
+
+    from benchmarks import (kernel_bench, roofline, table1_teacher,
+                            table2_agnews, table34_charlm)
+    sections = {
+        "table1": lambda: table1_teacher.main(flags),
+        "table2": lambda: table2_agnews.main(flags),
+        "table34": lambda: table34_charlm.main(flags),
+        "kernel": lambda: kernel_bench.main(flags),
+        "roofline": lambda: roofline.main([]),
+    }
+    for name, fn in sections.items():
+        if args.only and name != args.only:
+            continue
+        print(f"\n===== {name} =====", flush=True)
+        try:
+            fn()
+        except Exception as e:    # noqa: BLE001 — report, continue suite
+            print(f"[bench {name} FAILED] {e}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""End-to-end driver: train a char-level transformer LM (a few hundred
+steps) with SPM projections, deterministic data, checkpoints, and resume.
+
+Default is CPU-sized; --d-model 512 --layers 8 gives a ~20M model, and the
+same script scales to ~100M (--d-model 1024 --layers 12) given time.
+
+  PYTHONPATH=src python examples/train_char_lm.py --steps 200
+  PYTHONPATH=src python examples/train_char_lm.py --steps 400  # resumes
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import build_corpus
+from repro.models import LayerSpec, ModelConfig, init_model
+from repro.models import causal_lm as LM
+from repro.optim import OptimizerConfig
+from repro.train import (latest_step, make_train_state, make_train_step,
+                         restore_checkpoint, save_checkpoint)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--heads", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--impl", default="spm_general",
+                    choices=("dense", "spm_general", "spm_rotation"))
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_char_lm")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name="char-lm", d_model=args.d_model, n_layers=args.layers,
+        n_heads=args.heads, n_kv_heads=args.heads,
+        head_dim=args.d_model // args.heads, d_ff=4 * args.d_model,
+        vocab_size=256, layers=tuple([LayerSpec()] * args.layers),
+        scan_group=1, linear_impl=args.impl, spm_backward="custom",
+        dtype=jnp.float32, q_chunk=64, k_chunk=64)
+
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    state = make_train_state(params)
+    print(f"char-LM {args.impl}: "
+          f"{sum(x.size for x in jax.tree.leaves(params)):,} params")
+
+    corpus = build_corpus(400_000)
+    split = int(0.9 * len(corpus))
+    rng = np.random.default_rng(0)
+
+    def draw(lo, hi, batch):
+        starts = rng.integers(lo, hi - args.seq - 1, size=batch)
+        idx = starts[:, None] + np.arange(args.seq + 1)[None, :]
+        ch = corpus[idx]
+        return {"tokens": jnp.asarray(ch[:, :-1], jnp.int32),
+                "labels": jnp.asarray(ch[:, 1:], jnp.int32)}
+
+    opt = OptimizerConfig(lr=1e-3, total_steps=args.steps, warmup_steps=20)
+    step = jax.jit(make_train_step(lambda p, b: LM.lm_loss(p, b, cfg), opt))
+
+    start = 0
+    if latest_step(args.ckpt_dir) is not None:
+        state, extra = restore_checkpoint(args.ckpt_dir, state)
+        start = int(extra["step"])
+        print(f"resumed at step {start}")
+
+    t0 = time.time()
+    for s in range(start, args.steps):
+        state, m = step(state, draw(0, split, args.batch))
+        if (s + 1) % 20 == 0:
+            vb = draw(split, len(corpus), args.batch)
+            _, vm = LM.lm_loss(state["params"], vb, cfg)
+            dt = (time.time() - t0) / (s + 1 - start) * 1e3
+            print(f"step {s+1:4d}  train={float(m['ce']):.3f} "
+                  f"valid={float(vm['ce']):.3f} "
+                  f"bpc={float(vm['ce'])/np.log(2):.3f}  {dt:.0f} ms/step")
+        if (s + 1) % 100 == 0:
+            save_checkpoint(args.ckpt_dir, s + 1, state,
+                            extra={"step": s + 1})
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Config construction helpers shared by the per-arch files."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.models.transformer import LayerSpec, ModelConfig
+
+__all__ = ["dense_layers", "local_global_layers", "moe_layers",
+           "mamba_layers", "hybrid_layers", "with_overrides"]
+
+
+def dense_layers(n: int) -> Tuple[LayerSpec, ...]:
+    return tuple([LayerSpec()] * n)
+
+
+def local_global_layers(n: int, local_per_global: int,
+                        window: int) -> Tuple[LayerSpec, ...]:
+    """Gemma3 pattern: ``local_per_global`` sliding-window layers then one
+    global layer, repeated."""
+    group = ([LayerSpec(window=window, rope="local")] * local_per_global
+             + [LayerSpec()])
+    reps = n // len(group)
+    assert reps * len(group) == n, (n, len(group))
+    return tuple(group * reps)
+
+
+def moe_layers(n: int) -> Tuple[LayerSpec, ...]:
+    return tuple([LayerSpec(mlp="moe")] * n)
+
+
+def mamba_layers(n: int) -> Tuple[LayerSpec, ...]:
+    return tuple([LayerSpec(mixer="mamba", mlp="none")] * n)
+
+
+def hybrid_layers(n: int, attn_every: int) -> Tuple[LayerSpec, ...]:
+    """Zamba2 pattern: all-mamba backbone with the SHARED attention+FFN
+    block applied before every ``attn_every``-th mamba layer."""
+    return tuple(LayerSpec(mixer="mamba", mlp="none",
+                           shared_block=(i % attn_every == 0))
+                 for i in range(n))
+
+
+def with_overrides(cfg: ModelConfig, **kw) -> ModelConfig:
+    return dataclasses.replace(cfg, **kw)

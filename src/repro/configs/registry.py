@@ -1,0 +1,71 @@
+"""Architecture registry: ``--arch <id>`` resolution, shape applicability.
+
+Every assigned architecture is selectable; ``long_500k`` is gated on
+SUBQUADRATIC (pure full-attention archs skip it — noted in DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Tuple
+
+from repro.configs.shapes import SHAPES, ShapeSpec
+from repro.models.transformer import ModelConfig
+
+__all__ = ["ARCH_IDS", "get_config", "get_smoke", "arch_shapes",
+           "is_subquadratic", "all_cells"]
+
+_MODULES = {
+    "zamba2-1.2b": "repro.configs.zamba2_1_2b",
+    "qwen3-32b": "repro.configs.qwen3_32b",
+    "qwen3-1.7b": "repro.configs.qwen3_1_7b",
+    "gemma3-12b": "repro.configs.gemma3_12b",
+    "minitron-4b": "repro.configs.minitron_4b",
+    "musicgen-medium": "repro.configs.musicgen_medium",
+    "qwen2-vl-7b": "repro.configs.qwen2_vl_7b",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "llama4-scout-17b-a16e": "repro.configs.llama4_scout_17b_a16e",
+    "mamba2-370m": "repro.configs.mamba2_370m",
+}
+
+ARCH_IDS: Tuple[str, ...] = tuple(_MODULES)
+
+
+def _mod(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {list(_MODULES)}")
+    return importlib.import_module(_MODULES[arch])
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _mod(arch).CONFIG
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    return _mod(arch).SMOKE
+
+
+def is_subquadratic(arch: str) -> bool:
+    return bool(_mod(arch).SUBQUADRATIC)
+
+
+def arch_shapes(arch: str) -> Tuple[ShapeSpec, ...]:
+    """All 4 LM shapes; long_500k only for sub-quadratic archs.  Every
+    assigned (arch x shape) pair is a dry-run cell; skipped long_500k
+    cells are recorded as skipped, not silently dropped."""
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    if is_subquadratic(arch):
+        names.append("long_500k")
+    return tuple(SHAPES[n] for n in names)
+
+
+def all_cells():
+    """Every (arch, shape) cell, including inapplicable long_500k marked
+    with applicable=False."""
+    cells = []
+    for arch in ARCH_IDS:
+        sub = is_subquadratic(arch)
+        for name, spec in SHAPES.items():
+            applicable = (name != "long_500k") or sub
+            cells.append((arch, spec, applicable))
+    return cells

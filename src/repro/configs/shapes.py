@@ -1,0 +1,33 @@
+"""Assigned input-shape registry (LM-family shape set).
+
+``train_*`` lowers ``train_step``; ``prefill_*`` lowers a cache-free
+forward over the prompt; ``decode_*`` / ``long_*`` lower ``serve_step``
+(one new token against a KV cache of ``seq_len``).  ``long_500k`` is only
+applicable to sub-quadratic archs (registry gates it).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["ShapeSpec", "SHAPES", "LM_SHAPES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # "train" | "prefill" | "decode"
+    seq_sharded: bool = False  # sequence-parallel KV (B too small to DP)
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode",
+                           seq_sharded=True),
+}
+
+LM_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")

@@ -1,0 +1,14 @@
+"""Core SPM operator (the paper's contribution) and the linear factory."""
+
+from repro.core.pairings import (  # noqa: F401
+    Schedule, Stage, butterfly_schedule, brick_schedule, random_schedule,
+    two_level_schedule, make_schedule, default_n_stages,
+    connectivity_components,
+)
+from repro.core.spm import (  # noqa: F401
+    SPMConfig, init_spm, spm_apply, spm_matrix, stage_coeffs,
+)
+from repro.core.linear import (  # noqa: F401
+    LinearConfig, init_linear, linear_apply, linear_param_count,
+    LINEAR_IMPLS, SPM_IMPLS,
+)

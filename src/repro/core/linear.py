@@ -1,0 +1,110 @@
+"""Drop-in linear layer factory: dense baseline or SPM (paper's technique).
+
+``linear_impl`` is the framework-wide knob (every architecture config carries
+it) selecting how projection linears are parameterized:
+
+  * "dense"        — y = x W + b, W (d_in, d_out).  The paper's baseline.
+  * "spm_general"  — SPM with unconstrained 2x2 blocks (paper §3.2).
+  * "spm_rotation" — SPM with orthogonal rotation blocks (paper §3.1).
+
+Rectangular handling (DESIGN.md §5 — beyond the paper, which defines SPM for
+square maps only): the SPM operates over ``n = even_ceil(max(d_in, d_out))``;
+inputs are zero-padded up to n, outputs sliced down to d_out.  For
+``d_in == d_out`` (even) this reduces exactly to the paper's operator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import spm as spm_mod
+from repro.core.pairings import default_n_stages
+from repro.core.spm import SPMConfig
+
+__all__ = ["LinearConfig", "init_linear", "linear_apply", "linear_param_count"]
+
+SPM_IMPLS = ("spm_general", "spm_rotation")
+LINEAR_IMPLS = ("dense",) + SPM_IMPLS
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearConfig:
+    d_in: int
+    d_out: int
+    impl: str = "dense"
+    use_bias: bool = True
+    n_stages: Optional[int] = None       # None -> min(ceil(log2 n), 12)
+    schedule: str = "butterfly"
+    backward: str = "autodiff"
+    init_scale: float = 0.05
+    n_shards: int = 1
+    param_dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if self.impl not in LINEAR_IMPLS:
+            raise ValueError(f"unknown linear impl {self.impl!r}")
+
+    @property
+    def is_spm(self) -> bool:
+        return self.impl in SPM_IMPLS
+
+    @property
+    def n(self) -> int:
+        """Internal SPM operator width."""
+        m = max(self.d_in, self.d_out)
+        return m + (m % 2)
+
+    def spm_config(self) -> SPMConfig:
+        variant = "rotation" if self.impl == "spm_rotation" else "general"
+        n_stages = (self.n_stages if self.n_stages is not None
+                    else default_n_stages(self.n))
+        backward = self.backward
+        if backward == "custom_inverse" and variant != "rotation":
+            backward = "custom"
+        return SPMConfig(
+            n=self.n, n_stages=n_stages, variant=variant,
+            schedule=self.schedule, use_diag=True, use_bias=self.use_bias,
+            backward=backward, init_scale=self.init_scale,
+            n_shards=self.n_shards, param_dtype=self.param_dtype)
+
+
+def init_linear(key: jax.Array, cfg: LinearConfig) -> dict:
+    if cfg.impl == "dense":
+        kw, _ = jax.random.split(key)
+        std = cfg.d_in ** -0.5
+        p = {"w": std * jax.random.normal(
+            kw, (cfg.d_in, cfg.d_out), cfg.param_dtype)}
+        if cfg.use_bias:
+            p["b"] = jnp.zeros((cfg.d_out,), cfg.param_dtype)
+        return p
+    return spm_mod.init_spm(key, cfg.spm_config())
+
+
+def linear_apply(params: dict, x: jax.Array, cfg: LinearConfig) -> jax.Array:
+    """Apply to the last axis of x: (..., d_in) -> (..., d_out)."""
+    if cfg.impl == "dense":
+        y = x @ params["w"].astype(x.dtype)
+        if cfg.use_bias:
+            y = y + params["b"].astype(x.dtype)
+        return y
+    scfg = cfg.spm_config()
+    n = scfg.n
+    if x.shape[-1] != cfg.d_in:
+        raise ValueError(f"expected (..., {cfg.d_in}), got {x.shape}")
+    if cfg.d_in < n:
+        pad = [(0, 0)] * (x.ndim - 1) + [(0, n - cfg.d_in)]
+        x = jnp.pad(x, pad)
+    y = spm_mod.spm_apply(params, x, scfg)
+    if cfg.d_out < n:
+        y = y[..., : cfg.d_out]
+    return y
+
+
+def linear_param_count(cfg: LinearConfig) -> int:
+    if cfg.impl == "dense":
+        return cfg.d_in * cfg.d_out + (cfg.d_out if cfg.use_bias else 0)
+    return cfg.spm_config().param_count()

@@ -1,0 +1,6 @@
+"""Data pipeline: paper-experiment generators + deterministic loader."""
+
+from repro.data.teacher import TeacherConfig, make_teacher, teacher_batch  # noqa: F401
+from repro.data.hashed_text import HashedTextConfig, hashed_text_batch  # noqa: F401
+from repro.data.char_corpus import build_corpus, corpus_batches, VOCAB  # noqa: F401
+from repro.data.loader import DataCursor, DeterministicLoader  # noqa: F401

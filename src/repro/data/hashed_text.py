@@ -1,0 +1,55 @@
+"""AG News proxy: class-conditional hashed sparse features (paper §9.2).
+
+No internet in this container, so the real AG News corpus is SIMULATED:
+each of 4 classes owns a sparse set of "topic" hash buckets; a document
+activates ``nnz`` buckets drawn from a mixture of its class distribution
+and a shared background, with tf-style magnitudes.  This matches the
+regime of the paper's experiment (hashed sparse features, 4 classes,
+120k train / 7.6k test) without reproducing its exact numbers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["HashedTextConfig", "hashed_text_batch"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HashedTextConfig:
+    width: int                  # hash-feature dimension (n in the paper)
+    n_classes: int = 4
+    nnz: int = 64               # active buckets per document
+    class_frac: float = 0.35    # fraction of buckets drawn class-specific
+    topics_per_class: int = 200
+    seed: int = 0
+
+
+def _class_tables(cfg: HashedTextConfig) -> jax.Array:
+    key = jax.random.PRNGKey(cfg.seed)
+    return jax.random.randint(
+        key, (cfg.n_classes, cfg.topics_per_class), 0, cfg.width)
+
+
+def hashed_text_batch(cfg: HashedTextConfig, key: jax.Array,
+                      batch: int) -> dict:
+    """Returns {x: (B, width) float32 sparse-ish, y: (B,) int32}."""
+    tables = _class_tables(cfg)
+    ky, kc, kb, km, kv = jax.random.split(key, 5)
+    y = jax.random.randint(ky, (batch,), 0, cfg.n_classes)
+    n_class = int(cfg.nnz * cfg.class_frac)
+    n_bg = cfg.nnz - n_class
+    # class-specific buckets
+    tidx = jax.random.randint(kc, (batch, n_class), 0, cfg.topics_per_class)
+    cls_buckets = tables[y[:, None], tidx]                   # (B, n_class)
+    # background buckets
+    bg_buckets = jax.random.randint(kb, (batch, n_bg), 0, cfg.width)
+    buckets = jnp.concatenate([cls_buckets, bg_buckets], axis=1)
+    mags = 0.5 + jax.random.exponential(kv, buckets.shape)
+    x = jnp.zeros((batch, cfg.width)).at[
+        jnp.arange(batch)[:, None], buckets].add(mags)
+    x = x / jnp.maximum(jnp.linalg.norm(x, axis=1, keepdims=True), 1e-6)
+    return {"x": x, "y": y.astype(jnp.int32)}

@@ -1,0 +1,180 @@
+"""Public entry for the fused SPM stage-stack kernel.
+
+``spm_stack_fused(x, coeffs, strides)`` applies the L structured mixing
+stages to the last axis of ``x`` with:
+
+  * **run planning** — the stride schedule is split into maximal consecutive
+    *runs* such that every stride in a run keeps its pairs inside one feature
+    tile (``n_tile % (2*s) == 0``).  Each run is one ``pallas_call`` that
+    fuses all its stages in VMEM (DESIGN.md §3.2); run boundaries are the
+    only HBM round-trips.
+  * **custom_vjp** — backward uses the fused backward kernel per run
+    (paper §4 closed forms, recomputing stage inputs in VMEM), so training
+    gets the same one-read-one-write property as the forward.
+  * **batch/tile padding** — leading dims are flattened; rows are padded to
+    the row-block so arbitrary batch sizes work.
+
+On CPU (this container) kernels run with ``interpret=True``; on TPU the
+same BlockSpecs compile natively.  ``kernels/ref.py`` is the oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import spm_stack as K
+
+__all__ = ["spm_stack_fused", "plan_runs", "default_interpret"]
+
+MAX_TILE = 2048  # lane-dim tile cap: 16 VREG lanes x 128; VMEM-comfortable
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _lcm(a: int, b: int) -> int:
+    return a * b // math.gcd(a, b)
+
+
+@functools.lru_cache(maxsize=None)
+def plan_runs(n: int, strides: Tuple[int, ...],
+              max_tile: int = MAX_TILE) -> Tuple[Tuple[Tuple[int, ...], int], ...]:
+    """Split ``strides`` into runs of (strides, n_tile).
+
+    Every stride s in a run satisfies ``n_tile % (2*s) == 0`` and
+    ``n % n_tile == 0``.  Greedy: extend the current run while the lcm of
+    pair spans stays within ``max_tile``; the tile is the largest multiple
+    of that lcm that divides n and is <= max_tile (>= lcm always exists
+    because the lcm of divisors of n divides n).
+    """
+    for s in strides:
+        if n % (2 * s) != 0:
+            raise ValueError(f"stride {s} invalid for n={n}")
+    runs = []
+    cur: list = []
+    cur_lcm = 1
+
+    def close():
+        nonlocal cur, cur_lcm
+        if not cur:
+            return
+        # largest multiple of cur_lcm dividing n, capped at max_tile
+        tile = cur_lcm
+        k = 1
+        while True:
+            cand = cur_lcm * (k + 1)
+            if cand > max_tile or n % cand != 0:
+                break
+            k += 1
+            tile = cand
+        runs.append((tuple(cur), tile))
+        cur, cur_lcm = [], 1
+
+    for s in strides:
+        span = 2 * s
+        new_lcm = _lcm(cur_lcm, span)
+        if cur and new_lcm > max_tile:
+            close()
+            new_lcm = span
+        cur.append(s)
+        cur_lcm = new_lcm
+    close()
+    return tuple(runs)
+
+
+def _flatten_rows(x: jax.Array) -> Tuple[jax.Array, Tuple[int, ...]]:
+    lead = x.shape[:-1]
+    rows = 1
+    for d in lead:
+        rows *= d
+    return x.reshape(rows, x.shape[-1]), lead
+
+
+def _pad_rows(x2: jax.Array, block_rows: int) -> Tuple[jax.Array, int]:
+    rows = x2.shape[0]
+    padded = -(-rows // block_rows) * block_rows
+    if padded != rows:
+        x2 = jnp.pad(x2, ((0, padded - rows), (0, 0)))
+    return x2, rows
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _fused_core(x2, coeffs, strides, block_rows, interpret):
+    """x2: (B, n) row-major; coeffs: (L, n//2, 4)."""
+    z = x2
+    off = 0
+    for run_strides, n_tile in plan_runs(x2.shape[-1], strides):
+        cf = coeffs[off: off + len(run_strides)]
+        z = K.spm_stack_kernel_call(
+            z, cf, strides=run_strides, block_rows=block_rows,
+            n_tile=n_tile, interpret=interpret)
+        off += len(run_strides)
+    return z
+
+
+def _fused_fwd(x2, coeffs, strides, block_rows, interpret):
+    zs = []
+    z = x2
+    off = 0
+    for run_strides, n_tile in plan_runs(x2.shape[-1], strides):
+        zs.append(z)
+        cf = coeffs[off: off + len(run_strides)]
+        z = K.spm_stack_kernel_call(
+            z, cf, strides=run_strides, block_rows=block_rows,
+            n_tile=n_tile, interpret=interpret)
+        off += len(run_strides)
+    return z, (tuple(zs), coeffs)
+
+
+def _fused_bwd(strides, block_rows, interpret, res, gy):
+    zs, coeffs = res
+    runs = plan_runs(gy.shape[-1], strides)
+    offsets = []
+    off = 0
+    for run_strides, _ in runs:
+        offsets.append(off)
+        off += len(run_strides)
+    delta = gy
+    g_cf_parts = [None] * len(runs)
+    for r in range(len(runs) - 1, -1, -1):
+        run_strides, n_tile = runs[r]
+        cf = coeffs[offsets[r]: offsets[r] + len(run_strides)]
+        delta, gcf = K.spm_stack_bwd_kernel_call(
+            zs[r], cf, delta, strides=run_strides, block_rows=block_rows,
+            n_tile=n_tile, interpret=interpret)
+        g_cf_parts[r] = gcf
+    g_coeffs = jnp.concatenate(g_cf_parts, axis=0).astype(coeffs.dtype)
+    return delta, g_coeffs
+
+
+_fused_core.defvjp(_fused_fwd, _fused_bwd)
+
+
+def spm_stack_fused(x: jax.Array, coeffs: jax.Array,
+                    strides: Sequence[int], *,
+                    block_rows: int | None = None,
+                    interpret: bool | None = None) -> jax.Array:
+    """Fused L-stage SPM over the last axis of ``x``.
+
+    x: (..., n) with n divisible by 2*s for every stride; coeffs
+    (L, n//2, 4).  Differentiable in x and coeffs (closed-form VJP).
+    """
+    strides = tuple(int(s) for s in strides)
+    n = x.shape[-1]
+    if interpret is None:
+        interpret = default_interpret()
+    x2, lead = _flatten_rows(x)
+    if block_rows is None:
+        min_tile = min(t for _, t in plan_runs(n, strides))
+        block_rows = K.pick_block_rows(min_tile, len(strides),
+                                       dtype_bytes=x.dtype.itemsize)
+        block_rows = min(block_rows, max(8, 1 << (x2.shape[0] - 1).bit_length()))
+    x2p, rows = _pad_rows(x2, block_rows)
+    y2 = _fused_core(x2p, coeffs, strides, block_rows, interpret)
+    return y2[:rows].reshape(lead + (n,))

@@ -1,0 +1,78 @@
+"""Pure-jnp oracle for the fused SPM stage-stack kernel.
+
+Semantics shared with ``kernels/spm_stack.py``: apply L structured
+(stride-pairing) mixing stages to the last axis of ``x``.
+
+    z_0 = x;   z_l = B_l z_{l-1};   return z_L
+
+``coeffs`` is (L, n//2, 4) holding (a, b, c, d) per pair; ``strides`` is a
+static tuple of per-stage strides with ``n % (2*s) == 0``.
+
+This module is the correctness reference: tests assert the Pallas kernel
+(interpret mode on CPU) matches ``spm_stack_ref`` across shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["spm_stack_ref", "spm_stack_grads_ref"]
+
+
+def _stage(z, cf, s):
+    """One stride-s stage.  z: (..., n); cf: (n//2, 4)."""
+    n = z.shape[-1]
+    lead = z.shape[:-1]
+    g = n // (2 * s)
+    zr = z.reshape(lead + (g, 2, s))
+    x0, x1 = zr[..., 0, :], zr[..., 1, :]
+    a, b, c, d = (cf[:, i].reshape(g, s) for i in range(4))
+    y0 = a * x0 + b * x1
+    y1 = c * x0 + d * x1
+    return jnp.stack([y0, y1], axis=-2).reshape(lead + (n,))
+
+
+def spm_stack_ref(x: jnp.ndarray, coeffs: jnp.ndarray,
+                  strides: Tuple[int, ...]) -> jnp.ndarray:
+    z = x
+    for ell, s in enumerate(strides):
+        z = _stage(z, coeffs[ell].astype(z.dtype), s)
+    return z
+
+
+def spm_stack_grads_ref(x, coeffs, strides, gy):
+    """Closed-form (paper §4.2) backward for the stage stack.
+
+    Returns (g_x, g_coeffs).  Used to validate the kernel-wrapped custom_vjp.
+    """
+    # forward, collecting stage inputs
+    zs = []
+    z = x
+    for ell, s in enumerate(strides):
+        zs.append(z)
+        z = _stage(z, coeffs[ell].astype(z.dtype), s)
+    g_coeffs = []
+    delta = gy
+    n = x.shape[-1]
+    lead = x.shape[:-1]
+    bdims = tuple(range(len(lead)))
+    for ell in range(len(strides) - 1, -1, -1):
+        s = strides[ell]
+        g = n // (2 * s)
+        cf = coeffs[ell].astype(delta.dtype)
+        a, b, c, d = (cf[:, i].reshape(g, s) for i in range(4))
+        zr = zs[ell].reshape(lead + (g, 2, s))
+        dr = delta.reshape(lead + (g, 2, s))
+        x0, x1 = zr[..., 0, :], zr[..., 1, :]
+        d0, d1 = dr[..., 0, :], dr[..., 1, :]
+        ga = jnp.sum(d0 * x0, axis=bdims).reshape(-1)
+        gb = jnp.sum(d0 * x1, axis=bdims).reshape(-1)
+        gc = jnp.sum(d1 * x0, axis=bdims).reshape(-1)
+        gd = jnp.sum(d1 * x1, axis=bdims).reshape(-1)
+        g_coeffs.append(jnp.stack([ga, gb, gc, gd], axis=-1))
+        gx0 = a * d0 + c * d1
+        gx1 = b * d0 + d * d1
+        delta = jnp.stack([gx0, gx1], axis=-2).reshape(lead + (n,))
+    return delta, jnp.stack(g_coeffs[::-1], axis=0)

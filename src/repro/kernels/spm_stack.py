@@ -1,0 +1,220 @@
+"""Fused L-stage SPM kernel (Pallas / TPU).
+
+Why a kernel (DESIGN.md §3.2): SPM has arithmetic intensity ~O(L) FLOP/byte
+(vs ~n/2 for a dense matmul), far below the TPU v5e balance point
+(~240 FLOP/byte @ 197 TFLOP/s bf16 / 819 GB/s HBM), so SPM is memory-bound by
+construction.  Lowering each stage separately costs L+1 HBM round-trips of
+the full activation; this kernel keeps an activation tile resident in VMEM
+and applies ALL stages before writing back — one read + one write, an
+(L+1)/2x reduction of the memory-roofline term.
+
+Layout notes (TPU-native adaptation of the paper's CPU loop):
+  * The feature axis rides the 128-wide lane dimension; batch rides sublanes.
+  * A stride-s stage is the relayout (bb, n) -> (bb, g, 2, s) + vectorized
+    2x2 FMA on the VPU (the MXU would be >97% idle at k=2, so we stay off it).
+  * Stages with s >= 128 are lane-aligned relayouts (free-ish).  Stages with
+    s < 128 induce intra-lane shuffles; the benchmark harness quantifies the
+    residual cost and the two_level schedule orders them first so they fuse
+    while the tile is hot.
+  * Grid tiles: (batch_tile, feature_tile).  A feature tile of width n_t can
+    fuse every stage with n_t % (2 s) == 0 (pair stays inside the tile);
+    ops.py splits the schedule into maximal tile-local runs and composes.
+
+Validated in interpret mode on CPU against kernels/ref.py (this container
+has no TPU); the BlockSpec tiling is sized for v5e VMEM (~16 MiB budget).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["spm_stack_kernel_call", "spm_stack_bwd_kernel_call",
+           "pick_block_rows", "vmem_bytes"]
+
+_F32 = jnp.float32
+
+
+def _kernel(x_ref, cf_ref, o_ref, *, strides: Tuple[int, ...]):
+    """Kernel body: x_ref (bb, nt), cf_ref (L, nt//2, 4), o_ref (bb, nt)."""
+    z = x_ref[...].astype(_F32)
+    bb, nt = z.shape
+    for ell, s in enumerate(strides):
+        g = nt // (2 * s)
+        zr = z.reshape(bb, g, 2, s)
+        cf = cf_ref[ell].astype(_F32)          # (nt//2, 4)
+        a = cf[:, 0].reshape(g, 1, s)
+        b = cf[:, 1].reshape(g, 1, s)
+        c = cf[:, 2].reshape(g, 1, s)
+        d = cf[:, 3].reshape(g, 1, s)
+        x0 = zr[:, :, 0, :].reshape(bb, g, 1, s)
+        x1 = zr[:, :, 1, :].reshape(bb, g, 1, s)
+        y0 = a * x0 + b * x1
+        y1 = c * x0 + d * x1
+        z = jnp.concatenate([y0, y1], axis=2).reshape(bb, nt)
+    o_ref[...] = z.astype(o_ref.dtype)
+
+
+def vmem_bytes(block_rows: int, n_tile: int, n_stages: int,
+               dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set: in + out tiles (f32 compute copy) + coeffs."""
+    act = 2 * block_rows * n_tile * 4          # f32 compute copies
+    io = 2 * block_rows * n_tile * dtype_bytes
+    cf = n_stages * (n_tile // 2) * 4 * 4
+    return act + io + cf
+
+
+def pick_block_rows(n_tile: int, n_stages: int, dtype_bytes: int = 4,
+                    budget: int = 12 * 2**20) -> int:
+    """Largest power-of-two row-block (>=8) within the VMEM budget."""
+    bb = 8
+    while bb < 1024 and vmem_bytes(bb * 2, n_tile, n_stages,
+                                   dtype_bytes) <= budget:
+        bb *= 2
+    return bb
+
+
+@functools.partial(jax.jit, static_argnames=("strides", "block_rows",
+                                             "n_tile", "interpret"))
+def spm_stack_kernel_call(x: jax.Array, coeffs: jax.Array, *,
+                          strides: Tuple[int, ...],
+                          block_rows: int,
+                          n_tile: int,
+                          interpret: bool = False) -> jax.Array:
+    """pallas_call wrapper.  x: (B, n); coeffs: (L, n//2, 4).
+
+    Requires: B % block_rows == 0, n % n_tile == 0, and every stride s
+    satisfies n_tile % (2*s) == 0 (pairs tile-local).  ops.py guarantees
+    these by padding/splitting; this function is the raw kernel entry.
+    """
+    B, n = x.shape
+    L = coeffs.shape[0]
+    assert B % block_rows == 0 and n % n_tile == 0
+    for s in strides:
+        assert n_tile % (2 * s) == 0, (s, n_tile)
+    grid = (B // block_rows, n // n_tile)
+
+    # Pair indices for feature tile j are the contiguous slab
+    # [j * n_tile/2, (j+1) * n_tile/2): groups are sequential in the flat
+    # pair index, and each tile covers whole groups for every fused stride.
+    x_spec = pl.BlockSpec((block_rows, n_tile), lambda i, j: (i, j))
+    cf_spec = pl.BlockSpec((L, n_tile // 2, 4), lambda i, j: (0, j, 0))
+    o_spec = pl.BlockSpec((block_rows, n_tile), lambda i, j: (i, j))
+
+    return pl.pallas_call(
+        functools.partial(_kernel, strides=strides),
+        grid=grid,
+        in_specs=[x_spec, cf_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((B, n), x.dtype),
+        interpret=interpret,
+    )(x, coeffs)
+
+
+# ---------------------------------------------------------------------------
+# fused backward kernel
+# ---------------------------------------------------------------------------
+#
+# Training is 2/3 backward; without a fused backward the forward fusion win
+# is capped at 1.5x end-to-end.  The backward kernel recomputes the stage
+# inputs IN VMEM from the x tile (no HBM traffic for intermediates — the
+# Pallas analogue of remat), then walks the stages in reverse applying the
+# paper's closed forms: delta <- B_l^T delta (eqs. 12-13) and the rank-1 pair
+# accumulations for (a, b, c, d) grads (eq. 14).  Coefficient-gradient
+# partials are accumulated across batch tiles in the output block itself
+# (grid iterates feature-minor, so for a fixed feature tile the batch index
+# is the slow axis: init at i == 0, accumulate after).
+
+def _bwd_kernel(x_ref, cf_ref, gy_ref, gx_ref, gcf_ref, *,
+                strides: Tuple[int, ...]):
+    bb, nt = x_ref.shape
+    L = len(strides)
+
+    # recompute stage inputs in VMEM (forward remat)
+    zs = []
+    z = x_ref[...].astype(_F32)
+    for ell, s in enumerate(strides):
+        zs.append(z)
+        g = nt // (2 * s)
+        zr = z.reshape(bb, g, 2, s)
+        cf = cf_ref[ell].astype(_F32)
+        a = cf[:, 0].reshape(g, 1, s)
+        b = cf[:, 1].reshape(g, 1, s)
+        c = cf[:, 2].reshape(g, 1, s)
+        d = cf[:, 3].reshape(g, 1, s)
+        x0 = zr[:, :, 0, :].reshape(bb, g, 1, s)
+        x1 = zr[:, :, 1, :].reshape(bb, g, 1, s)
+        z = jnp.concatenate([a * x0 + b * x1, c * x0 + d * x1],
+                            axis=2).reshape(bb, nt)
+
+    delta = gy_ref[...].astype(_F32)
+    gcf_parts = []
+    for ell in range(L - 1, -1, -1):
+        s = strides[ell]
+        g = nt // (2 * s)
+        cf = cf_ref[ell].astype(_F32)
+        a = cf[:, 0].reshape(g, 1, s)
+        b = cf[:, 1].reshape(g, 1, s)
+        c = cf[:, 2].reshape(g, 1, s)
+        d = cf[:, 3].reshape(g, 1, s)
+        zr = zs[ell].reshape(bb, g, 2, s)
+        dr = delta.reshape(bb, g, 2, s)
+        x0 = zr[:, :, 0, :].reshape(bb, g, 1, s)
+        x1 = zr[:, :, 1, :].reshape(bb, g, 1, s)
+        d0 = dr[:, :, 0, :].reshape(bb, g, 1, s)
+        d1 = dr[:, :, 1, :].reshape(bb, g, 1, s)
+        # eq. 14 pair grads, reduced over the batch-tile rows
+        ga = jnp.sum(d0 * x0, axis=0).reshape(g * s)
+        gb = jnp.sum(d0 * x1, axis=0).reshape(g * s)
+        gc = jnp.sum(d1 * x0, axis=0).reshape(g * s)
+        gd = jnp.sum(d1 * x1, axis=0).reshape(g * s)
+        gcf_parts.append(jnp.stack([ga, gb, gc, gd], axis=-1))
+        # eqs. 12-13: delta <- B^T delta
+        delta = jnp.concatenate([a * d0 + c * d1, b * d0 + d * d1],
+                                axis=2).reshape(bb, nt)
+
+    gx_ref[...] = delta.astype(gx_ref.dtype)
+    gcf_tile = jnp.stack(gcf_parts[::-1], axis=0)  # (L, nt//2, 4)
+
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        gcf_ref[...] = gcf_tile
+
+    @pl.when(i > 0)
+    def _acc():
+        gcf_ref[...] += gcf_tile
+
+
+@functools.partial(jax.jit, static_argnames=("strides", "block_rows",
+                                             "n_tile", "interpret"))
+def spm_stack_bwd_kernel_call(x: jax.Array, coeffs: jax.Array,
+                              gy: jax.Array, *,
+                              strides: Tuple[int, ...],
+                              block_rows: int,
+                              n_tile: int,
+                              interpret: bool = False):
+    """Fused backward.  Returns (g_x (B, n), g_coeffs (L, n//2, 4) f32)."""
+    B, n = x.shape
+    L = coeffs.shape[0]
+    assert B % block_rows == 0 and n % n_tile == 0
+    grid = (B // block_rows, n // n_tile)
+    x_spec = pl.BlockSpec((block_rows, n_tile), lambda i, j: (i, j))
+    cf_spec = pl.BlockSpec((L, n_tile // 2, 4), lambda i, j: (0, j, 0))
+    gy_spec = pl.BlockSpec((block_rows, n_tile), lambda i, j: (i, j))
+    gx_spec = pl.BlockSpec((block_rows, n_tile), lambda i, j: (i, j))
+    gcf_spec = pl.BlockSpec((L, n_tile // 2, 4), lambda i, j: (0, j, 0))
+    return pl.pallas_call(
+        functools.partial(_bwd_kernel, strides=strides),
+        grid=grid,
+        in_specs=[x_spec, cf_spec, gy_spec],
+        out_specs=[gx_spec, gcf_spec],
+        out_shape=[jax.ShapeDtypeStruct((B, n), x.dtype),
+                   jax.ShapeDtypeStruct((L, n // 2, 4), jnp.float32)],
+        interpret=interpret,
+    )(x, coeffs, gy)

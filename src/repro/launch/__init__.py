@@ -1,0 +1,7 @@
+"""Launchers: production mesh, multi-pod dry-run, train/serve drivers.
+
+NOTE: do not import repro.launch.dryrun from library code — it sets
+XLA_FLAGS for 512 host devices at import time (dry-run only).
+"""
+
+from repro.launch.mesh import make_production_mesh, make_host_mesh  # noqa: F401

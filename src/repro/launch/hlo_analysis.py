@@ -1,0 +1,112 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+* ``collective_bytes(hlo_text)`` — parse post-optimization HLO and sum the
+  result-shape bytes of every all-gather / all-reduce / reduce-scatter /
+  all-to-all / collective-permute (cost_analysis does not report these).
+* ``roofline_terms(...)`` — the three §Roofline terms in seconds, per
+  chip, on TPU v5e constants (197 TFLOP/s bf16, 819 GB/s HBM,
+  ~50 GB/s/link ICI).
+
+``compiled.cost_analysis()`` / ``memory_analysis()`` describe the
+PER-DEVICE partitioned program, so terms are computed per chip directly:
+compute = flops/chip / peak, memory = bytes/chip / bw, collective =
+coll_bytes/chip / link_bw.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional
+
+__all__ = ["collective_bytes", "roofline_terms", "HW", "parse_shape_bytes"]
+
+HW = {
+    "peak_flops": 197e12,     # bf16 per chip
+    "hbm_bw": 819e9,          # bytes/s
+    "ici_bw": 50e9,           # bytes/s/link (~ per-chip usable)
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+# result shapes sit between "= " and " <opname>("
+_LINE_RE = re.compile(
+    r"=\s+(.*?)\s+(" + "|".join(_COLL_OPS) + r")(?:-start|-done)?\(")
+
+
+def parse_shape_bytes(shape_str: str) -> int:
+    """Sum bytes over every dtype[dims] occurrence in shape_str (handles
+    tuple results)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-op-kind result bytes; '-done' twins of async pairs are skipped
+    so started collectives are counted once."""
+    out = {k: 0 for k in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue
+        kind = m.group(2)
+        out[kind] += parse_shape_bytes(m.group(1))
+    out["total"] = sum(out[k] for k in _COLL_OPS)
+    return out
+
+
+def roofline_terms(flops_per_chip: float, bytes_per_chip: float,
+                   coll_bytes_per_chip: float,
+                   hw: Optional[dict] = None) -> Dict[str, float]:
+    hw = hw or HW
+    t_c = flops_per_chip / hw["peak_flops"]
+    t_m = bytes_per_chip / hw["hbm_bw"]
+    t_x = coll_bytes_per_chip / hw["ici_bw"]
+    terms = {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom
+    bound = max(t_c, t_m, t_x)
+    terms["roofline_fraction"] = (t_c / bound) if bound > 0 else 0.0
+    return terms
+
+
+def cost_analysis_terms(compiled) -> Dict[str, float]:
+    """Pull flops / bytes-accessed from compiled.cost_analysis(), tolerant
+    of backend differences (dict vs list-of-dicts)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    flops = float(ca.get("flops", 0.0))
+    byt = float(ca.get("bytes accessed", 0.0))
+    return {"flops": flops, "bytes_accessed": byt, "raw_keys": len(ca)}
+
+
+def memory_analysis_terms(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out

@@ -1,0 +1,64 @@
+"""ShapeDtypeStruct stand-ins for every dry-run cell (no allocation).
+
+``input_specs(cfg, shape)`` builds the abstract batch for a cell;
+``abstract_state`` / ``abstract_cache`` eval_shape the train state and KV
+cache.  Everything here is weak-type-correct and shardable.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import ShapeSpec
+from repro.models import transformer as T
+from repro.optim.adamw import OptimizerConfig
+from repro.train.state import make_train_state
+
+__all__ = ["input_specs", "abstract_state", "abstract_cache",
+           "abstract_params"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: T.ModelConfig, shape: ShapeSpec) -> dict:
+    """Abstract batch for (cfg, shape).
+
+    train:   {tokens|embeds, labels[, positions]}
+    prefill: {tokens|embeds[, positions]}
+    decode:  {tokens (B,), index ()}  — the cache comes from
+             ``abstract_cache`` (it is carried state, not an input).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"tokens": _sds((B,), jnp.int32),
+                "index": _sds((), jnp.int32)}
+    out: dict = {}
+    if cfg.input_kind == "tokens":
+        out["tokens"] = _sds((B, S), jnp.int32)
+    else:
+        out["embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16)
+        if cfg.rope_kind == "mrope":
+            out["positions"] = _sds((3, B, S), jnp.int32)
+    if shape.kind == "train":
+        out["labels"] = _sds((B, S), jnp.int32)
+    return out
+
+
+def abstract_params(cfg: T.ModelConfig):
+    return jax.eval_shape(lambda: T.init_model(jax.random.PRNGKey(0), cfg))
+
+
+def abstract_state(cfg: T.ModelConfig):
+    return jax.eval_shape(
+        lambda: make_train_state(T.init_model(jax.random.PRNGKey(0), cfg)))
+
+
+def abstract_cache(cfg: T.ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: T.init_cache(batch, max_len, cfg, dtype))

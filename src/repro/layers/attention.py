@@ -1,0 +1,229 @@
+"""GQA attention: chunked (flash-style) training path + KV-cache decode.
+
+Projections go through the ``linear_impl`` factory so the paper's SPM
+operator can replace every dense Q/K/V/O map (paper §7).  The score
+computation ``Q K^T`` is untouched (paper §7.2: "attention score
+computation remains unchanged").
+
+The training/prefill path is an online-softmax over key chunks written
+with ``jax.lax`` control flow: memory is O(T * chunk) instead of O(T^2),
+which is what lets the 32k-prefill dry-run cells fit HBM.  Sliding-window
+(Gemma3 local layers) is a mask refinement of the same loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linear import LinearConfig, init_linear, linear_apply
+from repro.layers.norms import qk_norm
+from repro.layers.rope import apply_rope
+from repro.parallel.ctx import constrain
+
+__all__ = ["AttentionConfig", "init_attention", "attention_apply",
+           "init_kv_cache", "chunked_causal_attention"]
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    use_qk_norm: bool = False
+    window: Optional[int] = None        # sliding window (None = global)
+    linear_impl: str = "dense"
+    spm_stages: Optional[int] = None
+    spm_backward: str = "autodiff"
+    q_chunk: int = 1024
+    k_chunk: int = 1024
+    param_dtype: Any = jnp.float32
+
+    def _lin(self, d_in: int, d_out: int) -> LinearConfig:
+        return LinearConfig(
+            d_in=d_in, d_out=d_out, impl=self.linear_impl, use_bias=False,
+            n_stages=self.spm_stages, backward=self.spm_backward,
+            param_dtype=self.param_dtype)
+
+    @property
+    def q_proj(self) -> LinearConfig:
+        return self._lin(self.d_model, self.n_heads * self.head_dim)
+
+    @property
+    def kv_proj(self) -> LinearConfig:
+        return self._lin(self.d_model, self.n_kv_heads * self.head_dim)
+
+    @property
+    def o_proj(self) -> LinearConfig:
+        return self._lin(self.n_heads * self.head_dim, self.d_model)
+
+
+def init_attention(key: jax.Array, cfg: AttentionConfig) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "q": init_linear(kq, cfg.q_proj),
+        "k": init_linear(kk, cfg.kv_proj),
+        "v": init_linear(kv, cfg.kv_proj),
+        "o": init_linear(ko, cfg.o_proj),
+    }
+    if cfg.use_qk_norm:
+        p["q_norm"] = jnp.ones((cfg.head_dim,), cfg.param_dtype)
+        p["k_norm"] = jnp.ones((cfg.head_dim,), cfg.param_dtype)
+    return p
+
+
+def init_kv_cache(batch: int, max_len: int, cfg: AttentionConfig,
+                  dtype=jnp.bfloat16) -> dict:
+    """Decode-time cache.  ``window`` layers allocate only the window."""
+    s = max_len if cfg.window is None else min(max_len, cfg.window)
+    shape = (batch, s, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# chunked online-softmax attention
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q, k):
+    """q: (B, Tq, Hkv, G, dh); k: (B, Tk, Hkv, dh) -> (B, Hkv, G, Tq, Tk).
+
+    Standard GQA convention: q head h shares kv head h // G (consecutive
+    q heads share one kv head)."""
+    return jnp.einsum("bthgd,bshd->bhgts", q, k)
+
+
+def chunked_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                             window: Optional[int] = None,
+                             q_offset: int = 0,
+                             q_chunk: int = 1024,
+                             k_chunk: int = 1024) -> jax.Array:
+    """Causal GQA attention with online softmax over key chunks.
+
+    q: (B, Tq, H, dh); k, v: (B, Tk, Hkv, dh) with H % Hkv == 0.
+    q position i attends to k positions j <= i + q_offset (and
+    j > i + q_offset - window when windowed).  Returns (B, Tq, H, dh).
+    """
+    B, Tq, H, dh = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = dh ** -0.5
+
+    q_chunk = min(q_chunk, Tq)
+    while Tq % q_chunk:
+        q_chunk -= 1
+    k_chunk = min(k_chunk, Tk)
+    while Tk % k_chunk:
+        k_chunk -= 1
+    nq, nk = Tq // q_chunk, Tk // k_chunk
+
+    qg = (q.reshape(B, nq, q_chunk, Hkv, G, dh).astype(jnp.float32) * scale)
+    kg = k.reshape(B, nk, k_chunk, Hkv, dh).astype(jnp.float32)
+    vg = v.reshape(B, nk, k_chunk, Hkv, dh).astype(jnp.float32)
+
+    q_pos = q_offset + jnp.arange(Tq).reshape(nq, q_chunk)
+    k_pos = jnp.arange(Tk).reshape(nk, k_chunk)
+
+    def per_q_chunk(qi, qc):
+        # qc: (B, q_chunk, Hkv, G, dh)
+        qp = q_pos[qi]  # (q_chunk,)
+
+        def body(carry, inputs):
+            m, l, acc = carry
+            kc, vc, kp = inputs   # (B,k_chunk,Hkv,dh) x2, (k_chunk,)
+            s = _gqa_scores(qc, kc)                       # (B,Hkv,G,qc,kc)
+            mask = kp[None, :] <= qp[:, None]             # causal
+            if window is not None:
+                mask &= kp[None, :] > qp[:, None] - window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgts,bshd->bhgtd", p, vc)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, q_chunk, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0),
+            (jnp.moveaxis(kg, 1, 0), jnp.moveaxis(vg, 1, 0), k_pos))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]      # (B,Hkv,G,qc,dh)
+        return jnp.transpose(out, (0, 3, 1, 2, 4))        # (B,qc,Hkv,G,dh)
+
+    outs = jax.lax.map(lambda i: per_q_chunk(i, qg[:, i]), jnp.arange(nq))
+    # outs: (nq, B, q_chunk, G, Hkv, dh)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Tq, H, dh)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# full layer apply
+# ---------------------------------------------------------------------------
+
+def attention_apply(params: dict, x: jax.Array, cfg: AttentionConfig, *,
+                    cos: jax.Array, sin: jax.Array,
+                    cache: Optional[dict] = None,
+                    cache_index: Optional[jax.Array] = None
+                    ) -> Tuple[jax.Array, Optional[dict]]:
+    """x: (B, T, d).  Training/prefill when cache is None; single-token
+    decode when cache is given (T == 1, cache_index = current length)."""
+    B, T, _ = x.shape
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    q = constrain(linear_apply(params["q"], x, cfg.q_proj)
+                  .reshape(B, T, H, dh), "heads")
+    k = constrain(linear_apply(params["k"], x, cfg.kv_proj)
+                  .reshape(B, T, Hkv, dh), "kv_heads")
+    v = constrain(linear_apply(params["v"], x, cfg.kv_proj)
+                  .reshape(B, T, Hkv, dh), "kv_heads")
+
+    if cfg.use_qk_norm:
+        q = qk_norm(params["q_norm"], q)
+        k = qk_norm(params["k_norm"], k)
+
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    if cache is None:
+        out = chunked_causal_attention(
+            q, k, v, window=cfg.window,
+            q_chunk=cfg.q_chunk, k_chunk=cfg.k_chunk)
+        new_cache = None
+    else:
+        # decode: append k/v at cache_index (ring-buffer for windowed layers)
+        s_cache = cache["k"].shape[1]
+        slot = (cache_index % s_cache) if cfg.window is not None else cache_index
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        scale = dh ** -0.5
+        qf = q.astype(jnp.float32) * scale                 # (B,1,H,dh)
+        kf = ck.astype(jnp.float32)
+        vf = cv.astype(jnp.float32)
+        qg = qf.reshape(B, 1, Hkv, H // Hkv, dh)
+        s = jnp.einsum("bthgd,bshd->bhgts", qg, kf)        # (B,Hkv,G,1,S)
+        pos = jnp.arange(s_cache)
+        if cfg.window is None:
+            valid = pos <= cache_index
+        else:
+            # ring buffer: valid slots are the last min(index+1, window)
+            n_valid = jnp.minimum(cache_index + 1, s_cache)
+            age = (slot - pos) % s_cache                   # 0 = newest
+            valid = age < n_valid
+        s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhgts,bshd->bthgd", p, vf).reshape(B, 1, H, dh)
+
+    out = out.astype(x.dtype).reshape(B, T, H * dh)
+    y = linear_apply(params["o"], out, cfg.o_proj)
+    return y, new_cache

@@ -1,0 +1,55 @@
+"""SwiGLU feed-forward block (projections via the linear factory)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linear import LinearConfig, init_linear, linear_apply
+
+__all__ = ["FFNConfig", "init_ffn", "ffn_apply"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FFNConfig:
+    d_model: int
+    d_ff: int
+    linear_impl: str = "dense"
+    spm_stages: Optional[int] = None
+    spm_backward: str = "autodiff"
+    param_dtype: Any = jnp.float32
+
+    def _lin(self, d_in: int, d_out: int) -> LinearConfig:
+        return LinearConfig(
+            d_in=d_in, d_out=d_out, impl=self.linear_impl, use_bias=False,
+            n_stages=self.spm_stages, backward=self.spm_backward,
+            param_dtype=self.param_dtype)
+
+    @property
+    def up(self) -> LinearConfig:
+        return self._lin(self.d_model, self.d_ff)
+
+    @property
+    def gate(self) -> LinearConfig:
+        return self._lin(self.d_model, self.d_ff)
+
+    @property
+    def down(self) -> LinearConfig:
+        return self._lin(self.d_ff, self.d_model)
+
+
+def init_ffn(key: jax.Array, cfg: FFNConfig) -> dict:
+    ku, kg, kd = jax.random.split(key, 3)
+    return {"up": init_linear(ku, cfg.up),
+            "gate": init_linear(kg, cfg.gate),
+            "down": init_linear(kd, cfg.down)}
+
+
+def ffn_apply(params: dict, x: jax.Array, cfg: FFNConfig) -> jax.Array:
+    u = linear_apply(params["up"], x, cfg.up)
+    g = linear_apply(params["gate"], x, cfg.gate)
+    h = jax.nn.silu(g) * u
+    return linear_apply(params["down"], h, cfg.down)

@@ -1,0 +1,81 @@
+"""GRU with SPM-substituted dense maps (paper §6).
+
+Every one of the six affine maps (W_z, U_z, W_r, U_r, W_h, U_h) is an
+independent instance of the linear factory, so ``linear_impl`` switches
+the whole recurrence between the paper's dense baseline and SPM.  The
+recurrence itself (gates, convex update) is untouched — paper §6.2:
+"preserves the algebraic structure of the GRU".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linear import LinearConfig, init_linear, linear_apply
+
+__all__ = ["GRUConfig", "init_gru", "gru_apply", "gru_cell"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GRUConfig:
+    d_in: int
+    d_hidden: int
+    linear_impl: str = "dense"
+    spm_stages: Optional[int] = None
+    spm_backward: str = "autodiff"
+    param_dtype: Any = jnp.float32
+
+    def _lin(self, d_in: int, d_out: int, bias: bool) -> LinearConfig:
+        return LinearConfig(
+            d_in=d_in, d_out=d_out, impl=self.linear_impl, use_bias=bias,
+            n_stages=self.spm_stages, backward=self.spm_backward,
+            param_dtype=self.param_dtype)
+
+    @property
+    def w(self) -> LinearConfig:    # input maps W_. (with bias b_.)
+        return self._lin(self.d_in, self.d_hidden, True)
+
+    @property
+    def u(self) -> LinearConfig:    # recurrent maps U_. (no bias)
+        return self._lin(self.d_hidden, self.d_hidden, False)
+
+
+def init_gru(key: jax.Array, cfg: GRUConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    return {
+        "wz": init_linear(ks[0], cfg.w), "uz": init_linear(ks[1], cfg.u),
+        "wr": init_linear(ks[2], cfg.w), "ur": init_linear(ks[3], cfg.u),
+        "wh": init_linear(ks[4], cfg.w), "uh": init_linear(ks[5], cfg.u),
+    }
+
+
+def gru_cell(params: dict, x_t: jax.Array, h_prev: jax.Array,
+             cfg: GRUConfig) -> jax.Array:
+    """One step (paper eqs. 20–23).  x_t: (B, d_in); h_prev: (B, d_h)."""
+    z = jax.nn.sigmoid(linear_apply(params["wz"], x_t, cfg.w)
+                       + linear_apply(params["uz"], h_prev, cfg.u))
+    r = jax.nn.sigmoid(linear_apply(params["wr"], x_t, cfg.w)
+                       + linear_apply(params["ur"], h_prev, cfg.u))
+    h_tilde = jnp.tanh(linear_apply(params["wh"], x_t, cfg.w)
+                       + linear_apply(params["uh"], r * h_prev, cfg.u))
+    return (1.0 - z) * h_prev + z * h_tilde
+
+
+def gru_apply(params: dict, x: jax.Array, cfg: GRUConfig,
+              h0: Optional[jax.Array] = None
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, T, d_in) -> (hs (B, T, d_h), h_T)."""
+    B = x.shape[0]
+    if h0 is None:
+        h0 = jnp.zeros((B, cfg.d_hidden), x.dtype)
+
+    def step(h, x_t):
+        h_new = gru_cell(params, x_t, h, cfg)
+        return h_new, h_new
+
+    h_final, hs = jax.lax.scan(step, h0, jnp.moveaxis(x, 1, 0))
+    return jnp.moveaxis(hs, 0, 1), h_final

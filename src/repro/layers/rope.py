@@ -1,0 +1,59 @@
+"""Rotary position embeddings: standard RoPE and multi-axis M-RoPE.
+
+M-RoPE (Qwen2-VL, arXiv:2409.12191) splits the head dimension into
+sections rotated by separate (temporal, height, width) position ids.  For
+the text-only backbone path all three ids coincide, which reduces M-RoPE
+exactly to 1-D RoPE; the section machinery is exercised by the VLM config
+through ``input_specs`` patch-grid positions.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rope_angles", "apply_rope", "mrope_angles"]
+
+
+def rope_angles(positions: jax.Array, head_dim: int,
+                theta: float = 10000.0) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables.  positions: (..., T) int -> (..., T, head_dim//2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_angles(positions: jax.Array, head_dim: int,
+                 sections: Sequence[int],
+                 theta: float = 10000.0) -> Tuple[jax.Array, jax.Array]:
+    """M-RoPE tables.  positions: (3, ..., T) for (t, h, w) ids; sections are
+    half-dim section sizes summing to head_dim // 2 (e.g. (16, 24, 24) for
+    head_dim 128)."""
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, head_dim)
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang_all = positions.astype(jnp.float32)[..., None] * freqs  # (3,...,T,half)
+    parts = []
+    off = 0
+    for axis, sec in enumerate(sections):
+        parts.append(ang_all[axis][..., off: off + sec])
+        off += sec
+    ang = jnp.concatenate(parts, axis=-1)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate pairs (x[..2i], x[..2i+1]).  x: (..., T, H, head_dim);
+    cos/sin: (..., T, head_dim//2) broadcast over the head axis."""
+    half = x.shape[-1] // 2
+    xf = x.astype(jnp.float32)
+    x1 = xf[..., :half]
+    x2 = xf[..., half:]
+    c = cos[..., None, :]   # add head axis
+    s = sin[..., None, :]
+    y1 = x1 * c - x2 * s
+    y2 = x2 * c + x1 * s
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)

@@ -1,0 +1,14 @@
+"""Model compositions: block-pattern transformer, causal-LM heads, the
+paper's MLP students/teacher, and the §6 GRU-LM."""
+
+from repro.models.transformer import (  # noqa: F401
+    LayerSpec, ModelConfig, init_model, forward, init_cache,
+    model_param_count,
+)
+from repro.models.causal_lm import (  # noqa: F401
+    lm_loss, prefill, decode_step,
+)
+from repro.models.mlp import MLPConfig, init_mlp, mlp_apply, mlp_loss  # noqa: F401
+from repro.models.gru_lm import (  # noqa: F401
+    GRULMConfig, init_gru_lm, gru_lm_forward, gru_lm_loss,
+)

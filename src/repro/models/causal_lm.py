@@ -1,0 +1,90 @@
+"""Causal-LM heads over the transformer composer: loss, prefill, decode."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+
+__all__ = ["lm_loss", "train_metrics", "prefill", "decode_step"]
+
+MOE_AUX_COEF = 0.01
+
+
+def lm_loss(params: dict, batch: dict, cfg: T.ModelConfig
+            ) -> Tuple[jax.Array, dict]:
+    """Next-token cross-entropy.  batch: {tokens|embeds, labels, [mask],
+    [positions]}.  labels align with inputs (already shifted by the data
+    pipeline).  Returns (loss, metrics)."""
+    kw = {}
+    if cfg.input_kind == "tokens":
+        kw["tokens"] = batch["tokens"]
+    else:
+        kw["embeds"] = batch["embeds"]
+    logits, _, aux = T.forward(params, cfg, positions=batch.get("positions"),
+                               **kw)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    ce = jnp.sum(nll * mask) / denom
+    loss = ce + MOE_AUX_COEF * aux
+    metrics = {"loss": loss, "ce": ce, "aux": aux,
+               "ppl_proxy": jnp.exp(jnp.clip(ce, a_max=20.0))}
+    return loss, metrics
+
+
+def train_metrics(metrics: dict) -> dict:
+    return {k: float(v) for k, v in metrics.items()}
+
+
+def prefill(params: dict, cfg: T.ModelConfig, *, max_len: int,
+            tokens: Optional[jax.Array] = None,
+            embeds: Optional[jax.Array] = None,
+            cache_dtype=jnp.bfloat16):
+    """Run the prompt through the model and build a decode-ready cache.
+
+    Implementation: token-parallel forward for the logits (cheap, chunked
+    attention), then the cache is filled by replaying K/V projections —
+    here we simply run the forward in cache-filling mode token-block-wise
+    is avoided: we recompute K/V per layer via a cache-free forward and
+    scatter.  For simplicity and exactness we fill the cache by running
+    decode over the prompt with ``lax.scan`` (state-carried); logits of the
+    last position are returned.  O(T) steps but each is O(1) — acceptable
+    for the CPU validation path; the dry-run lowers the fused variant.
+    """
+    if tokens is not None:
+        B, T_len = tokens.shape
+    else:
+        B, T_len = embeds.shape[:2]
+    cache = T.init_cache(B, max_len, cfg, cache_dtype)
+
+    def step(carry, t):
+        cache = carry
+        if tokens is not None:
+            tok = jax.lax.dynamic_slice_in_dim(tokens, t, 1, axis=1)
+            logits, cache, _ = T.forward(params, cfg, tokens=tok,
+                                         cache=cache, cache_index=t)
+        else:
+            emb = jax.lax.dynamic_slice_in_dim(embeds, t, 1, axis=1)
+            logits, cache, _ = T.forward(params, cfg, embeds=emb,
+                                         cache=cache, cache_index=t)
+        return cache, logits[:, 0]
+
+    cache, logits_all = jax.lax.scan(step, cache, jnp.arange(T_len))
+    return logits_all[-1], cache
+
+
+def decode_step(params: dict, cfg: T.ModelConfig, token: jax.Array,
+                cache, cache_index: jax.Array):
+    """One-token decode.  token: (B,) int32 -> (logits (B, V), new cache)."""
+    logits, cache, _ = T.forward(params, cfg, tokens=token[:, None],
+                                 cache=cache, cache_index=cache_index)
+    return logits[:, 0], cache

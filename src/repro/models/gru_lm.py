@@ -1,0 +1,64 @@
+"""GRU language model (paper §6 host architecture).
+
+embed -> N stacked GRU layers (dense or SPM recurrent/input maps) -> head.
+Used by the char-LM reproduction and the §6 gradient-flow tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.embedding import EmbeddingConfig, embed, init_embedding, unembed
+from repro.layers.gru import GRUConfig, gru_apply, init_gru
+
+__all__ = ["GRULMConfig", "init_gru_lm", "gru_lm_forward", "gru_lm_loss"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GRULMConfig:
+    vocab_size: int
+    d_model: int
+    n_layers: int = 1
+    linear_impl: str = "dense"
+    spm_stages: Optional[int] = None
+    spm_backward: str = "custom"
+    param_dtype: Any = jnp.float32
+
+    def gru_cfg(self) -> GRUConfig:
+        return GRUConfig(d_in=self.d_model, d_hidden=self.d_model,
+                         linear_impl=self.linear_impl,
+                         spm_stages=self.spm_stages,
+                         spm_backward=self.spm_backward,
+                         param_dtype=self.param_dtype)
+
+    def embed_cfg(self) -> EmbeddingConfig:
+        return EmbeddingConfig(vocab_size=self.vocab_size,
+                               d_model=self.d_model, tie_output=True,
+                               param_dtype=self.param_dtype)
+
+
+def init_gru_lm(key: jax.Array, cfg: GRULMConfig) -> dict:
+    ke, *kls = jax.random.split(key, 1 + cfg.n_layers)
+    return {"embed": init_embedding(ke, cfg.embed_cfg()),
+            "grus": [init_gru(k, cfg.gru_cfg()) for k in kls]}
+
+
+def gru_lm_forward(params: dict, tokens: jax.Array, cfg: GRULMConfig
+                   ) -> jax.Array:
+    h = embed(params["embed"], tokens, cfg.embed_cfg())
+    for gp in params["grus"]:
+        h = h + gru_apply(gp, h, cfg.gru_cfg())[0]
+    return unembed(params["embed"], h, cfg.embed_cfg())
+
+
+def gru_lm_loss(params: dict, batch: dict, cfg: GRULMConfig
+                ) -> Tuple[jax.Array, dict]:
+    logits = gru_lm_forward(params, batch["tokens"], cfg)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][..., None], -1)[..., 0]
+    loss = jnp.mean(nll)
+    return loss, {"loss": loss, "bpc": loss / jnp.log(2.0)}

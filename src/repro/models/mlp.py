@@ -1,0 +1,68 @@
+"""MLP classifier + compositional teacher (paper §9.1–§9.2).
+
+Student: ``logits = W2 · φ(mix(x))`` where ``mix`` is dense or SPM via the
+linear factory — exactly the two students compared in Table 1.  The
+teacher is an SPM → ReLU → dense map whose argmax produces hard labels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linear import LinearConfig, init_linear, linear_apply
+
+__all__ = ["MLPConfig", "init_mlp", "mlp_apply", "mlp_loss"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    n_features: int
+    n_classes: int
+    width: Optional[int] = None        # None -> square (width = n_features)
+    linear_impl: str = "dense"         # the swept knob
+    spm_stages: Optional[int] = None
+    spm_backward: str = "custom"
+    param_dtype: Any = jnp.float32
+
+    @property
+    def d_hidden(self) -> int:
+        return self.width or self.n_features
+
+    @property
+    def mix(self) -> LinearConfig:
+        return LinearConfig(
+            d_in=self.n_features, d_out=self.d_hidden,
+            impl=self.linear_impl, n_stages=self.spm_stages,
+            backward=self.spm_backward, param_dtype=self.param_dtype)
+
+    @property
+    def head(self) -> LinearConfig:
+        # classification head stays dense in BOTH students (paper teacher is
+        # SPM -> ReLU -> Dense; the head is not a square mixer).
+        return LinearConfig(d_in=self.d_hidden, d_out=self.n_classes,
+                            impl="dense", param_dtype=self.param_dtype)
+
+
+def init_mlp(key: jax.Array, cfg: MLPConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {"mix": init_linear(k1, cfg.mix),
+            "head": init_linear(k2, cfg.head)}
+
+
+def mlp_apply(params: dict, x: jax.Array, cfg: MLPConfig) -> jax.Array:
+    h = jax.nn.relu(linear_apply(params["mix"], x, cfg.mix))
+    return linear_apply(params["head"], h, cfg.head)
+
+
+def mlp_loss(params: dict, batch: dict, cfg: MLPConfig
+             ) -> Tuple[jax.Array, dict]:
+    logits = mlp_apply(params, batch["x"], cfg)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["y"][:, None], axis=-1)[:, 0]
+    loss = jnp.mean(nll)
+    acc = jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+    return loss, {"loss": loss, "acc": acc}

@@ -1,0 +1,10 @@
+"""Optimizer substrate: AdamW/cosine/clip + int8 error-feedback gradient
+compression for the cross-pod axis."""
+
+from repro.optim.adamw import (  # noqa: F401
+    OptimizerConfig, init_opt_state, adamw_update, cosine_schedule,
+    global_norm, clip_by_global_norm,
+)
+from repro.optim.compression import (  # noqa: F401
+    compress, decompress, ef_step, psum_compressed, init_residual,
+)

@@ -1,0 +1,84 @@
+"""Int8 error-feedback gradient compression for the cross-pod all-reduce.
+
+At 512+ chips the pod axis crosses DCN (slow links): compressing the
+gradient all-reduce over ``pod`` by 4x (f32 -> int8 with per-tensor
+scale) cuts the dominant cross-pod collective term.  Error feedback keeps
+the quantization residual locally and adds it to the next step's gradient,
+preserving convergence (Karimireddy et al.-style EF-SGD argument).
+
+``compress_tree``/``decompress_tree`` are pure functions usable inside a
+jitted train step; ``psum_compressed`` wires them around
+``jax.lax.psum`` for use under ``shard_map`` on the pod axis.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress", "decompress", "compress_tree", "decompress_tree",
+           "ef_step", "psum_compressed"]
+
+
+def compress(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """f32 -> (int8 values, f32 scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress(q: jax.Array, scale: jax.Array, dtype=jnp.float32
+               ) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compress_tree(tree: Any) -> Any:
+    return jax.tree.map(lambda x: compress(x), tree,
+                        is_leaf=lambda x: isinstance(x, jax.Array))
+
+
+def decompress_tree(ctree: Any, like: Any) -> Any:
+    return jax.tree.map(
+        lambda c, x: decompress(c[0], c[1], x.dtype), ctree, like,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+
+
+def ef_step(grads: Any, residual: Any) -> Tuple[Any, Any]:
+    """Error-feedback: g' = g + residual; r' = g' - dequant(quant(g')).
+
+    Returns (compressed-then-decompressed grads, new residual)."""
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        q, s = compress(gf)
+        deq = decompress(q, s)
+        return deq.astype(g.dtype), gf - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]))
+
+
+def psum_compressed(grads: Any, axis_name: str) -> Any:
+    """All-reduce int8-compressed gradients over ``axis_name`` (shard_map
+    collective).  Sum of int8 payloads in int32, then rescale — exact for
+    the quantized values; per-member scales are all-gathered (tiny)."""
+    def one(g):
+        q, s = compress(g)
+        # each member may have a different scale; reduce in scaled space:
+        # sum_i q_i * s_i = psum(q * s) — but that defeats compression.
+        # Standard trick: use the axis-max scale so payload stays int8.
+        s_max = jax.lax.pmax(s, axis_name)
+        q2 = jnp.clip(jnp.round(g.astype(jnp.float32) / s_max),
+                      -127, 127).astype(jnp.int8)
+        total = jax.lax.psum(q2.astype(jnp.int32), axis_name)
+        return (total.astype(jnp.float32) * s_max).astype(g.dtype)
+    return jax.tree.map(one, grads)
+
+
+def init_residual(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)

@@ -1,0 +1,6 @@
+"""Mesh + PartitionSpec machinery (DP / FSDP / TP / EP / SP + pod axis)."""
+
+from repro.parallel.sharding import (  # noqa: F401
+    param_spec, param_shardings, batch_spec, cache_specs, data_axes,
+    tree_path_str,
+)

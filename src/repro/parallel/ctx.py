@@ -1,0 +1,72 @@
+"""Activation-sharding context: explicit constraints inside model code.
+
+SPM models have no large matmuls, so XLA's sharding propagation cannot
+discover head/feature parallelism on its own (DESIGN.md §3.4, EXPERIMENTS
+§Perf).  Layers call ``constrain(x, kind)`` at strategic points; outside
+any context this is the identity, so CPU smoke paths and the naive
+baseline are untouched.
+
+Kinds:
+  "heads":      (B, T, H, dh)   -> heads over "model", batch over DP axes
+  "kv_heads":   (B, T, Hkv, dh) -> same on the KV head axis
+  "btd":        (B, T, D)       -> batch over DP axes, feature replicated
+  "batch_full": (B, ...)        -> batch over DP axes + "model" (full-mesh
+                                   DP — the spm_dp training layout)
+  "feature":    (..., n)        -> feature over "model" (two-level SPM)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["activation_sharding", "constrain"]
+
+_STATE = threading.local()
+
+
+def _current() -> Optional[dict]:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, *, shard_heads: bool = True,
+                        shard_feature: bool = False,
+                        full_batch: bool = False):
+    """Enable explicit activation constraints within the block."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    prev = _current()
+    _STATE.ctx = {"mesh": mesh, "dp": dp, "shard_heads": shard_heads,
+                  "shard_feature": shard_feature, "full_batch": full_batch}
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def constrain(x: jax.Array, kind: str) -> jax.Array:
+    ctx = _current()
+    if ctx is None:
+        return x
+    mesh, dp = ctx["mesh"], ctx["dp"]
+    if kind in ("heads", "kv_heads"):
+        if not ctx["shard_heads"]:
+            return x
+        spec = P(dp, None, "model", None)
+    elif kind == "btd":
+        spec = P(dp, *([None] * (x.ndim - 1)))
+    elif kind == "batch_full":
+        if not ctx.get("full_batch"):
+            return x
+        spec = P(dp + ("model",), *([None] * (x.ndim - 1)))
+    elif kind == "feature":
+        if not ctx["shard_feature"]:
+            return x
+        spec = P(*([None] * (x.ndim - 1)), "model")
+    else:
+        raise ValueError(kind)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

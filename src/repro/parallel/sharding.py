@@ -1,0 +1,247 @@
+"""PartitionSpec rule table: parameters, activations, caches.
+
+Strategy (DESIGN.md §6): FSDP x TP inside a pod over mesh axes
+``("data", "model")``; the optional ``"pod"`` axis is an outer pure-DP
+axis (params replicated across pods, gradients all-reduced — the only
+cross-pod collective, matching ICI-vs-DCN bandwidth).
+
+Rules are written against the TRAILING dims of each parameter so they are
+insensitive to leading stacking axes (scan groups, vmapped experts): a
+rule returning k trailing axis names is left-padded with ``None``.
+Experts are the exception — the expert axis (just before the trailing
+dims) is sharded over ``model`` (expert parallelism), and inner dims fall
+back to ``data``-only sharding to avoid axis reuse.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["param_spec", "param_shardings", "batch_spec", "cache_specs",
+           "data_axes", "tree_path_str"]
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """All pure-DP axes present in the mesh (pod + data)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def tree_path_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+# trailing-dim rule table: (predicate on path, trailing spec)
+# order matters — first match wins.
+_RULES = (
+    # embeddings: (vocab, d) — vocab-parallel TP, FSDP over d
+    (lambda p: p.endswith("embed/table") or p.endswith("embed/out"),
+     ("model", "data")),
+    # routers are tiny classifiers: replicate
+    (lambda p: p.endswith("router"), (None, None)),
+    # output-expanding dense mats: (d_in, d_out) col-parallel + FSDP rows
+    (lambda p: any(p.endswith(s) for s in
+                   ("/q/w", "/k/w", "/v/w", "/up/w", "/gate/w", "/wz/w",
+                    "/wr/w", "/wh/w", "/uz/w", "/ur/w", "/uh/w", "/mix/w",
+                    "in_proj/w")),
+     ("data", "model")),
+    # input-contracting dense mats: (d_in, d_out) row-parallel + FSDP cols
+    (lambda p: any(p.endswith(s) for s in
+                   ("/o/w", "/down/w", "out_proj/w", "/head/w")),
+     ("model", "data")),
+    # SPM stage coeffs: (L, n_pairs, 4) — pairs over model (TP)
+    (lambda p: p.endswith("/mix"), (None, "model", None)),
+    (lambda p: p.endswith("/theta"), (None, "model")),
+    # SPM diagonals / bias: (n,) over model, matching the pair sharding
+    (lambda p: any(p.endswith(s) for s in
+                   ("/d_in", "/d_out", "/bias", "/res_scale")),
+     ("model",)),
+    # mamba conv: (K, conv_dim) — conv_dim over model
+    (lambda p: p.endswith("conv_w"), (None, "model")),
+)
+
+
+PROFILES = ("tp", "spm_dp", "spm_dp_g", "spm_dp_g2")
+
+
+def param_spec(path_str: str, ndim: int, mesh: Mesh,
+               profile: str = "tp") -> P:
+    """PartitionSpec for one parameter.
+
+    profile="tp":      classic Megatron-style rule table (the naive
+                       baseline for SPM models — XLA then has to guess
+                       how elementwise SPM stages interact with TP).
+    profile="spm_dp":  SPM-aware: SPM/norm/small params REPLICATED (they
+                       are O(nL)); the model axis is reserved for what
+                       actually scales — vocab-parallel embeddings and
+                       expert parallelism.  Activations stay batch-sharded
+                       over the data axes; heads are sharded via explicit
+                       activation constraints (parallel/ctx.py).
+    """
+    have_model = "model" in mesh.axis_names
+    have_data = "data" in mesh.axis_names
+
+    if profile.startswith("spm_dp"):
+        is_expert = "/experts/" in path_str
+        if path_str.endswith("embed/table") or path_str.endswith("embed/out"):
+            return P(*([None] * (ndim - 2)), "model", None)
+        if is_expert and ndim >= 2 and have_model:
+            # expert axis over model (EP); inner dims replicated.
+            expert_axis = (1 if path_str.startswith("layers/")
+                           and "/mlp/" in path_str else 0)
+            spec = [None] * ndim
+            spec[expert_axis] = "model"
+            return P(*spec)
+        return P(*([None] * ndim))
+
+    def mesh_ok(ax):
+        return (ax is None or (ax == "model" and have_model)
+                or (ax == "data" and have_data))
+
+    is_expert = "/experts/" in path_str or path_str.endswith("/experts")
+
+    for pred, trailing in _RULES:
+        if pred(path_str):
+            if is_expert:
+                # expert axis takes "model" (EP); free inner dims of the
+                # rule from "model" to avoid reuse within one spec.
+                trailing = tuple("data" if ax == "data" else None
+                                 for ax in trailing)
+                k = len(trailing)
+                if ndim < k + 1:   # scalar-ish expert param
+                    return P(*([None] * ndim))
+                lead = [None] * (ndim - k - 1) + ["model"]
+                return P(*lead, *trailing)
+            k = len(trailing)
+            if ndim < k:
+                return P(*([None] * ndim))
+            trailing = tuple(ax if mesh_ok(ax) else None for ax in trailing)
+            return P(*([None] * (ndim - k)), *trailing)
+    if is_expert and ndim >= 2 and have_model:
+        # unmatched expert param (SPM coeffs, norms inside experts): shard
+        # the expert axis, which sits right after any scan-group axis.  We
+        # cannot see stacking depth here, so shard the FIRST axis — correct
+        # for unscanned experts, and for scanned models the group axis is
+        # folded before experts only in "layers/<i>/mlp/experts/..." paths,
+        # where axis 0 is the group: fall back to axis 1.
+        expert_axis = 1 if path_str.startswith("layers/") and "/mlp/" in path_str else 0
+        spec = [None] * ndim
+        if expert_axis < ndim:
+            spec[expert_axis] = "model"
+        return P(*spec)
+    # norms, biases, small vectors: replicate
+    return P(*([None] * ndim))
+
+
+def _drop_indivisible(spec: P, shape, mesh: Mesh) -> P:
+    """jit in_shardings demands exact divisibility: drop any axis
+    assignment the dim size cannot honor (e.g. vocab 50280 on 16-way
+    model)."""
+    if shape is None:
+        return spec
+    out = []
+    for i, ax in enumerate(spec):
+        if ax is None or i >= len(shape):
+            out.append(None if i >= len(shape) else ax)
+            continue
+        szs = [mesh.shape[a] for a in (ax if isinstance(ax, tuple)
+                                       else (ax,))]
+        out.append(ax if shape[i] % int(np.prod(szs)) == 0 else None)
+    return P(*out)
+
+
+def param_shardings(mesh: Mesh, params: Any, profile: str = "tp") -> Any:
+    """Pytree of NamedShardings matching ``params`` (arrays or
+    ShapeDtypeStructs)."""
+    def one(path, x):
+        ndim = np.ndim(x) if not hasattr(x, "ndim") else x.ndim
+        shape = getattr(x, "shape", None)
+        spec = param_spec(tree_path_str(path), ndim, mesh, profile)
+        return NamedSharding(mesh, _drop_indivisible(spec, shape, mesh))
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_spec(mesh: Mesh, *, seq_sharded: bool = False) -> P:
+    """(B, T, ...) batch arrays: batch over all DP axes; optionally shard
+    the sequence axis over "data" (sequence parallelism for the 500k
+    decode cells where B == 1)."""
+    dp = data_axes(mesh)
+    if seq_sharded:
+        non_data = tuple(a for a in dp if a != "data")
+        return P(non_data if non_data else None, "data")
+    return P(dp)
+
+
+def cache_specs(mesh: Mesh, cache: Any, *, seq_sharded: bool = False) -> Any:
+    """KV / SSM cache shardings for decode.
+
+    Default: batch over DP axes, kv-heads over model.  When seq_sharded
+    (long-context, B=1): KV sequence axis over "data" instead.
+    KV caches are (B, S, Hkv, dh); SSM states (B, H, P, N); conv states
+    (B, K, C).
+    """
+    dp = data_axes(mesh)
+    n_model = mesh.shape.get("model", 1)
+    n_dp = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+
+    def pad(nd: int, trailing) -> P:
+        """Left-pad with None so scan-group stacking axes stay replicated."""
+        k = len(trailing)
+        if nd < k:
+            return P(*([None] * nd))
+        return P(*([None] * (nd - k)), *trailing)
+
+    def fit(shape, trailing):
+        """Drop axis assignments the dims cannot honor (jit in_shardings
+        demands exact divisibility); for KV caches fall back from the
+        head axis to head_dim when n_kv_heads < model size."""
+        nd = len(shape)
+        spec = list(trailing)
+        off = nd - len(spec)
+        for i, ax in enumerate(spec):
+            if ax is None:
+                continue
+            size = n_model if ax == "model" else n_dp
+            if ax == "model" and shape[off + i] % size:
+                # try the next dim to the right (e.g. Hkv -> head_dim)
+                spec[i] = None
+                if (i + 1 < len(spec) and spec[i + 1] is None
+                        and shape[off + i + 1] % size == 0):
+                    spec[i + 1] = "model"
+            elif ax != "model":
+                szs = ([mesh.shape[a] for a in ax]
+                       if isinstance(ax, tuple) else [mesh.shape[ax]])
+                if shape[off + i] % int(np.prod(szs)):
+                    spec[i] = None
+        return tuple(spec)
+
+    def one(path, x):
+        p = tree_path_str(path)
+        nd = x.ndim
+        if p.endswith("/k") or p.endswith("/v"):      # (B, S, Hkv, dh)
+            tr = ((None, "data", "model", None) if seq_sharded
+                  else (dp, None, "model", None))
+        elif p.endswith("/ssm"):                      # (B, H, P, N)
+            tr = ((None, "model", None, None) if seq_sharded
+                  else (dp, "model", None, None))
+        elif p.endswith("/conv"):                     # (B, K, C)
+            tr = ((None, None, "model") if seq_sharded
+                  else (dp, None, "model"))
+        else:
+            return NamedSharding(mesh, P(*([None] * nd)))
+        k = len(tr)
+        shape_trail = x.shape[-k:] if nd >= k else x.shape
+        return NamedSharding(mesh, pad(nd, fit(shape_trail, tr)))
+
+    return jax.tree_util.tree_map_with_path(one, cache)

@@ -1,0 +1,3 @@
+"""Serving: batched prefill + decode engine."""
+
+from repro.serve.engine import ServeEngine, serve_step  # noqa: F401

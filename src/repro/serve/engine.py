@@ -1,0 +1,65 @@
+"""KV-cache serving engine: batched prefill + decode loop.
+
+``ServeEngine`` holds jitted prefill/decode closures for one ModelConfig;
+``generate`` runs greedy or temperature sampling for a batch of prompts.
+``serve_step`` (module-level) is the function the decode-shape dry-run
+cells lower: one new token against a seq_len KV cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import causal_lm as LM
+from repro.models import transformer as T
+
+__all__ = ["ServeEngine", "serve_step"]
+
+
+def serve_step(params: dict, cfg: T.ModelConfig, tokens: jax.Array,
+               cache, cache_index: jax.Array):
+    """One decode step for the whole batch: (B,) int32 -> (logits, cache).
+    This is the unit the decode dry-run cells lower + compile."""
+    return LM.decode_step(params, cfg, tokens, cache, cache_index)
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    cfg: T.ModelConfig
+    params: dict
+    max_len: int
+    cache_dtype: object = jnp.bfloat16
+
+    def __post_init__(self):
+        self._decode = jax.jit(
+            lambda p, t, c, i: serve_step(p, self.cfg, t, c, i))
+
+    def generate(self, prompts: jax.Array, *, max_new_tokens: int = 32,
+                 temperature: float = 0.0,
+                 key: Optional[jax.Array] = None) -> jax.Array:
+        """prompts: (B, T_prompt) int32 -> (B, max_new_tokens)."""
+        B = prompts.shape[0]
+        logits, cache = LM.prefill(self.params, self.cfg,
+                                   max_len=self.max_len, tokens=prompts,
+                                   cache_dtype=self.cache_dtype)
+        idx = jnp.asarray(prompts.shape[1], jnp.int32)
+        out = []
+        tok = self._sample(logits, temperature, key, 0)
+        for t in range(max_new_tokens):
+            out.append(tok)
+            logits, cache = self._decode(self.params, tok, cache, idx + t)
+            tok = self._sample(logits, temperature, key, t + 1)
+        return jnp.stack(out, axis=1)
+
+    @staticmethod
+    def _sample(logits: jax.Array, temperature: float,
+                key: Optional[jax.Array], step: int) -> jax.Array:
+        if temperature <= 0.0 or key is None:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        k = jax.random.fold_in(key, step)
+        return jax.random.categorical(
+            k, logits / temperature, axis=-1).astype(jnp.int32)

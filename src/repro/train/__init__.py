@@ -1,0 +1,8 @@
+"""Training substrate: state, step factories, checkpointing, fault policy."""
+
+from repro.train.state import make_train_state, param_count  # noqa: F401
+from repro.train.step import make_train_step, make_eval_step  # noqa: F401
+from repro.train.checkpoint import (  # noqa: F401
+    save_checkpoint, restore_checkpoint, latest_step, list_checkpoints,
+)
+from repro.train.fault import FaultPolicy, run_with_recovery  # noqa: F401

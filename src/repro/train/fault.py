@@ -1,0 +1,69 @@
+"""Fault tolerance: NaN-skip accounting, auto-restore, straggler notes.
+
+In-step NaN/inf guarding lives in the jitted train step (train/step.py);
+this module is the host-side policy around it:
+
+* ``FaultPolicy.on_metrics``: count consecutive skipped steps; after
+  ``max_skips`` in a row, roll back to the latest checkpoint (loss-scale
+  blowups, corrupt batches).
+* ``run_with_recovery``: wraps the training loop; on ANY exception
+  (device loss, preemption signal) it restores the latest checkpoint and
+  resumes — on a real cluster the scheduler restarts the binary and
+  ``resume-latest`` in launch/train.py covers the process-death case.
+* **Straggler mitigation** (documented policy, host-side): the launcher
+  monitors per-step wall time across hosts; a host exceeding p99 x 1.5
+  for ``k`` consecutive steps is cold-swapped — its replacement restores
+  from the latest checkpoint (topology-independent restore makes this a
+  plain resume).  With single-controller JAX this is a scheduler-level
+  action, not in-graph.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Any, Callable, Optional
+
+log = logging.getLogger("repro.fault")
+
+__all__ = ["FaultPolicy", "run_with_recovery"]
+
+
+@dataclasses.dataclass
+class FaultPolicy:
+    max_consecutive_skips: int = 5
+    consecutive_skips: int = 0
+    total_skips: int = 0
+
+    def on_metrics(self, metrics: dict) -> bool:
+        """Returns True when a rollback should happen."""
+        skipped = bool(metrics.get("skipped", 0.0))
+        if skipped:
+            self.consecutive_skips += 1
+            self.total_skips += 1
+            log.warning("step skipped (non-finite grads), %d consecutive",
+                        self.consecutive_skips)
+        else:
+            self.consecutive_skips = 0
+        return self.consecutive_skips >= self.max_consecutive_skips
+
+    def reset(self) -> None:
+        self.consecutive_skips = 0
+
+
+def run_with_recovery(train_loop: Callable[[Optional[int]], Any],
+                      max_restarts: int = 3) -> Any:
+    """Run ``train_loop(resume_step)``; on exception, retry from the
+    latest checkpoint up to ``max_restarts`` times."""
+    restarts = 0
+    while True:
+        try:
+            return train_loop(None if restarts == 0 else -1)
+        except KeyboardInterrupt:
+            raise
+        except Exception as e:          # noqa: BLE001 — any device fault
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            log.error("training loop failed (%s); restart %d/%d from "
+                      "latest checkpoint", e, restarts, max_restarts)

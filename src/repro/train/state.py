@@ -1,0 +1,22 @@
+"""TrainState: params + optimizer state + step, as a plain pytree dict."""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import init_opt_state
+
+__all__ = ["make_train_state", "param_count"]
+
+
+def make_train_state(params: Any) -> dict:
+    return {"params": params,
+            "opt": init_opt_state(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def param_count(state: dict) -> int:
+    return sum(x.size for x in jax.tree.leaves(state["params"]))

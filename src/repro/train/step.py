@@ -1,0 +1,88 @@
+"""Train/eval step factories.
+
+``make_train_step(loss_fn, opt_cfg, ...)`` returns a jittable
+``step(state, batch) -> (state, metrics)`` with:
+
+  * optional microbatch gradient accumulation (``accum_steps`` splits the
+    per-device batch along axis 0 and ``lax.scan``s the grads — constant
+    memory in global batch),
+  * global-norm clipping + AdamW + cosine schedule,
+  * a NaN/inf GUARD: if the gradient global-norm is non-finite the update
+    is skipped entirely (params and opt state pass through) and
+    ``metrics["skipped"]`` flags it — the fault-tolerance layer counts
+    these (train/fault.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import OptimizerConfig, adamw_update
+
+__all__ = ["make_train_step", "make_eval_step"]
+
+
+def _split_microbatches(batch: Any, accum_steps: int) -> Any:
+    def re(x):
+        b = x.shape[0]
+        assert b % accum_steps == 0, (b, accum_steps)
+        return x.reshape((accum_steps, b // accum_steps) + x.shape[1:])
+    return jax.tree.map(re, batch)
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: OptimizerConfig, *,
+                    accum_steps: int = 1,
+                    nan_guard: bool = True) -> Callable:
+    """loss_fn(params, batch) -> (loss, metrics)."""
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+        mb = _split_microbatches(batch, accum_steps)
+
+        def body(carry, micro):
+            acc, loss_acc = carry
+            (loss, metrics), grads = grad_fn(params, micro)
+            acc = jax.tree.map(jnp.add, acc, grads)
+            return (acc, loss_acc + loss), metrics
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, loss_sum), metrics = jax.lax.scan(
+            body, (zero, jnp.zeros((), jnp.float32)), mb)
+        scale = 1.0 / accum_steps
+        grads = jax.tree.map(lambda g: g * scale, gsum)
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return loss_sum * scale, metrics, grads
+
+    def step(state: dict, batch: Any):
+        loss, metrics, grads = compute_grads(state["params"], batch)
+        new_params, new_opt, info = adamw_update(
+            state["params"], grads, state["opt"], opt_cfg)
+        metrics = dict(metrics)
+        metrics.update(info)
+        if nan_guard:
+            ok = jnp.isfinite(info["grad_norm"]) & jnp.isfinite(loss)
+            new_params = jax.tree.map(
+                lambda n, o: jnp.where(ok, n, o), new_params,
+                state["params"])
+            new_opt = jax.tree.map(
+                lambda n, o: jnp.where(ok, n, o), new_opt, state["opt"])
+            metrics["skipped"] = (~ok).astype(jnp.float32)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, metrics
+
+    return step
+
+
+def make_eval_step(loss_fn: Callable) -> Callable:
+    def step(params, batch):
+        _, metrics = loss_fn(params, batch)
+        return metrics
+    return step

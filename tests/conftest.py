@@ -1,0 +1,10 @@
+# NOTE: do NOT set --xla_force_host_platform_device_count here — smoke
+# tests and benches must see exactly 1 device; only launch/dryrun.py uses
+# 512 placeholder devices.
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,105 @@
+"""Pallas kernel allclose sweeps vs the pure-jnp oracle (kernels/ref.py).
+
+Shape x dtype sweep per instructions; interpret mode on CPU."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SPMConfig, init_spm, spm_apply
+from repro.kernels.ops import plan_runs, spm_stack_fused
+from repro.kernels.ref import spm_stack_grads_ref, spm_stack_ref
+from repro.kernels.spm_stack import (pick_block_rows, spm_stack_bwd_kernel_call,
+                                     spm_stack_kernel_call, vmem_bytes)
+
+KEY = jax.random.PRNGKey(0)
+
+SWEEP = [
+    # (B, n, strides, dtype, block_rows, n_tile)
+    (8, 128, (1, 2, 4, 8), jnp.float32, 8, 128),
+    (16, 256, (1, 2, 4, 8, 16, 32, 64, 128), jnp.float32, 8, 256),
+    (32, 512, (1, 4, 16, 64), jnp.float32, 16, 128),
+    (8, 128, (1, 2, 4, 8), jnp.bfloat16, 8, 128),
+    (16, 1024, (1, 2, 4, 8, 16), jnp.bfloat16, 8, 512),
+    (8, 96, (1, 2, 4, 48), jnp.float32, 8, 96),    # non-power-of-two n
+]
+
+
+@pytest.mark.parametrize("B,n,strides,dtype,br,nt", SWEEP)
+def test_fwd_kernel_matches_ref(B, n, strides, dtype, br, nt):
+    x = jax.random.normal(KEY, (B, n)).astype(dtype)
+    cf = (0.4 * jax.random.normal(jax.random.PRNGKey(1),
+                                  (len(strides), n // 2, 4)))
+    y = spm_stack_kernel_call(x, cf, strides=strides, block_rows=br,
+                              n_tile=nt, interpret=True)
+    ref = spm_stack_ref(x.astype(jnp.float32), cf, strides).astype(dtype)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(ref, np.float32), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("B,n,strides,dtype,br,nt", SWEEP[:4])
+def test_bwd_kernel_matches_ref(B, n, strides, dtype, br, nt):
+    x = jax.random.normal(KEY, (B, n)).astype(dtype)
+    gy = jax.random.normal(jax.random.PRNGKey(2), (B, n)).astype(dtype)
+    cf = (0.4 * jax.random.normal(jax.random.PRNGKey(1),
+                                  (len(strides), n // 2, 4)))
+    gx, gcf = spm_stack_bwd_kernel_call(x, cf, gy, strides=strides,
+                                        block_rows=br, n_tile=nt,
+                                        interpret=True)
+    rgx, rgcf = spm_stack_grads_ref(x.astype(jnp.float32), cf, strides,
+                                    gy.astype(jnp.float32))
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(gx, np.float32),
+                               np.asarray(rgx, np.float32),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(gcf), np.asarray(rgcf),
+                               atol=tol * 10, rtol=tol * 10)
+
+
+def test_fused_wrapper_odd_batch_and_3d():
+    n, strides = 256, (1, 2, 4, 8, 16, 32, 64, 128)
+    x = jax.random.normal(KEY, (3, 7, n))       # odd rows, 3-D
+    cf = 0.4 * jax.random.normal(KEY, (8, n // 2, 4))
+    y = spm_stack_fused(x, cf, strides)
+    np.testing.assert_allclose(y, spm_stack_ref(x, cf, strides), atol=1e-5)
+
+
+def test_fused_wrapper_grads():
+    n, strides = 128, (1, 2, 4, 8, 16, 32, 64)
+    x = jax.random.normal(KEY, (5, n))
+    cf = 0.4 * jax.random.normal(KEY, (7, n // 2, 4))
+    f = lambda x, cf: jnp.sum(spm_stack_fused(x, cf, strides) ** 2)
+    r = lambda x, cf: jnp.sum(spm_stack_ref(x, cf, strides) ** 2)
+    g = jax.grad(f, argnums=(0, 1))(x, cf)
+    gr = jax.grad(r, argnums=(0, 1))(x, cf)
+    for a, b in zip(g, gr):
+        np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-4)
+
+
+def test_kernel_path_in_spm_apply():
+    cfg0 = SPMConfig(n=64, n_stages=6, variant="general")
+    cfg1 = SPMConfig(n=64, n_stages=6, variant="general", use_kernel=True)
+    p = init_spm(KEY, cfg0)
+    x = jax.random.normal(KEY, (5, 64))
+    np.testing.assert_allclose(spm_apply(p, x, cfg0),
+                               spm_apply(p, x, cfg1), atol=1e-5)
+
+
+def test_plan_runs_covers_schedule():
+    runs = plan_runs(2048, (1, 2, 4, 8, 1024, 1, 2))
+    flat = [s for r, _ in runs for s in r]
+    assert flat == [1, 2, 4, 8, 1024, 1, 2]
+    for strides, tile in runs:
+        assert 2048 % tile == 0
+        for s in strides:
+            assert tile % (2 * s) == 0
+
+
+def test_vmem_budget_respected():
+    for nt in (128, 512, 2048):
+        br = pick_block_rows(nt, 12)
+        assert vmem_bytes(br, nt, 12) <= 12 * 2 ** 20 * 2  # within 2x budget
+        assert br >= 8

@@ -1,0 +1,82 @@
+"""Pairing-schedule unit tests (paper §2.1, §5; DESIGN.md §3.1/§3.4)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pairings as P
+
+
+def test_valid_strides():
+    assert P.valid_strides(8) == [1, 2, 4]
+    assert P.valid_strides(12) == [1, 2, 3, 6]
+    assert P.valid_strides(6) == [1, 3]
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.sampled_from([4, 8, 16, 48, 96, 256, 768]),
+       L=st.integers(1, 16))
+def test_butterfly_stages_are_valid(n, L):
+    sched = P.butterfly_schedule(n, L)
+    assert sched.n_stages == L
+    for st_ in sched.stages:
+        assert st_.structured and n % (2 * st_.stride) == 0
+
+
+def test_butterfly_connects_non_power_of_two():
+    # n = 96 = 2^5 * 3: cross strides must connect the three 32-blocks
+    sched = P.butterfly_schedule(96, 7)
+    assert P.connectivity_components(sched) == 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.sampled_from([8, 9, 17, 33]), L=st.integers(1, 6),
+       seed=st.integers(0, 5))
+def test_random_schedule_is_disjoint_pairing(n, L, seed):
+    sched = P.random_schedule(n, L, seed=seed)
+    for st_ in sched.stages:
+        perm = st_.perm
+        assert sorted(perm) == list(range(n))   # a permutation => disjoint
+
+
+def test_two_level_orders_local_before_cross():
+    """DESIGN §3.4: shard-local strides first, then cross-shard strides."""
+    n, shards = 256, 8
+    n_local = n // shards
+    sched = P.two_level_schedule(n, 8, shards)
+    strides = sched.strides()
+    seen_cross = False
+    for s in strides:
+        if s >= n_local:
+            seen_cross = True
+        else:
+            assert not seen_cross, strides
+    assert any(s >= n_local for s in strides)      # has cross-shard stages
+    assert P.connectivity_components(sched) == 1
+
+
+def test_two_level_cross_strides_are_shard_aligned():
+    n, shards = 128, 4
+    n_local = n // shards
+    sched = P.two_level_schedule(n, 10, shards)
+    for s in sched.strides():
+        if s >= n_local:
+            assert s % n_local == 0    # partner = shard j XOR k
+
+
+def test_default_n_stages_matches_paper():
+    # paper: L = log2 n, capped (paper uses fixed L=12 at n=2048/4096)
+    assert P.default_n_stages(2048) == 11
+    assert P.default_n_stages(4096) == 12
+    assert P.default_n_stages(1 << 20) == 12   # cap
+    assert P.default_n_stages(8) == 3
+
+
+def test_make_schedule_dispatch():
+    for kind in ("butterfly", "brick", "random"):
+        s = P.make_schedule(kind, 16, 4)
+        assert s.n_stages == 4
+    s = P.make_schedule("two_level", 64, 6, n_shards=4)
+    assert s.n_stages == 6
+    with pytest.raises(ValueError):
+        P.make_schedule("nope", 16, 4)

@@ -1,0 +1,172 @@
+"""Property + unit tests for the SPM operator (paper §2–§5)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (SPMConfig, connectivity_components, init_spm,
+                        make_schedule, spm_apply, spm_matrix)
+from repro.core.spm import stage_coeffs
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(n=16, L=4, variant="general", schedule="butterfly",
+         backward="autodiff", **kw):
+    return SPMConfig(n=n, n_stages=L, variant=variant, schedule=schedule,
+                     backward=backward, **kw)
+
+
+# ---------------------------------------------------------------------------
+# linearity + exactness properties
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.sampled_from([4, 8, 16, 32, 96]),
+       variant=st.sampled_from(["general", "rotation"]),
+       schedule=st.sampled_from(["butterfly", "random"]))
+def test_spm_is_linear(n, variant, schedule):
+    """SPM (bias off) is a linear operator: f(ax + by) = a f(x) + b f(y)."""
+    cfg = _cfg(n=n, variant=variant, schedule=schedule, use_bias=False)
+    p = init_spm(KEY, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    y = jax.random.normal(jax.random.PRNGKey(2), (n,))
+    f = lambda v: spm_apply(p, v, cfg)
+    lhs = f(2.5 * x - 1.5 * y)
+    rhs = 2.5 * f(x) - 1.5 * f(y)
+    np.testing.assert_allclose(lhs, rhs, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([8, 16, 64]),
+       variant=st.sampled_from(["general", "rotation"]),
+       schedule=st.sampled_from(["butterfly", "random"]))
+def test_custom_backward_matches_autodiff(n, variant, schedule):
+    """Paper §4 closed forms == reverse-mode AD through the forward."""
+    cfg_a = _cfg(n=n, variant=variant, schedule=schedule,
+                 backward="autodiff")
+    cfg_c = _cfg(n=n, variant=variant, schedule=schedule, backward="custom")
+    p = init_spm(KEY, cfg_a)
+    x = jax.random.normal(jax.random.PRNGKey(3), (5, n))
+
+    def loss(cfg):
+        return lambda p, x: jnp.sum(jnp.sin(spm_apply(p, x, cfg)))
+
+    ga = jax.grad(loss(cfg_a), argnums=(0, 1))(p, x)
+    gc = jax.grad(loss(cfg_c), argnums=(0, 1))(p, x)
+    for a, c in zip(jax.tree.leaves(ga), jax.tree.leaves(gc)):
+        np.testing.assert_allclose(a, c, atol=1e-4)
+
+
+def test_custom_inverse_matches_autodiff():
+    """Reversible backward (O(n) residuals) — rotation variant only."""
+    cfg_a = _cfg(n=32, L=6, variant="rotation", backward="autodiff")
+    cfg_i = _cfg(n=32, L=6, variant="rotation", backward="custom_inverse")
+    p = init_spm(KEY, cfg_a)
+    x = jax.random.normal(jax.random.PRNGKey(4), (3, 32))
+    f = lambda cfg: (lambda p, x: jnp.sum(spm_apply(p, x, cfg) ** 2))
+    ga = jax.grad(f(cfg_a), argnums=(0, 1))(p, x)
+    gi = jax.grad(f(cfg_i), argnums=(0, 1))(p, x)
+    for a, i in zip(jax.tree.leaves(ga), jax.tree.leaves(gi)):
+        np.testing.assert_allclose(a, i, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# orthogonality / norm preservation (paper §3.1, §8.4)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([8, 32, 128]), L=st.integers(1, 8))
+def test_rotation_preserves_norm(n, L):
+    cfg = _cfg(n=n, L=L, variant="rotation", use_diag=False, use_bias=False)
+    p = init_spm(KEY, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(5), (7, n))
+    y = spm_apply(p, x, cfg)
+    np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), rtol=1e-5)
+
+
+def test_rotation_matrix_is_orthogonal():
+    cfg = _cfg(n=16, L=5, variant="rotation", use_diag=False, use_bias=False)
+    p = init_spm(KEY, cfg)
+    W = spm_matrix(p, cfg)
+    np.testing.assert_allclose(W.T @ W, np.eye(16), atol=1e-5)
+    # operator norm of the composition == 1 (paper §8.4)
+    s = np.linalg.svd(np.asarray(W), compute_uv=False)
+    assert abs(s[0] - 1.0) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# structure: parameters, complexity, connectivity (paper §5, §8.2)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.sampled_from([8, 16, 64, 256]),
+       L=st.integers(1, 12),
+       variant=st.sampled_from(["general", "rotation"]))
+def test_param_count_is_O_nL(n, L, variant):
+    cfg = _cfg(n=n, L=L, variant=variant)
+    p = init_spm(KEY, cfg)
+    actual = sum(x.size for x in jax.tree.leaves(p))
+    assert actual == cfg.param_count()
+    per_pair = 1 if variant == "rotation" else 4
+    assert actual == L * (n // 2) * per_pair + 3 * n   # + diag x2 + bias
+    # paper §5: Θ(nL) ≪ Θ(n²) for L < n
+    if L < n // 8:
+        assert actual < n * n
+
+
+def test_butterfly_connectivity():
+    """log2(n) butterfly stages connect every coordinate pair."""
+    for n in (8, 64, 256, 96, 48):
+        L = int(np.ceil(np.log2(n)))
+        sched = make_schedule("butterfly", n, L)
+        assert connectivity_components(sched) == 1, n
+
+
+def test_spm_matrix_equals_stage_product():
+    cfg = _cfg(n=8, L=3, use_diag=True, use_bias=True)
+    p = init_spm(KEY, cfg)
+    W = spm_matrix(p, cfg)
+    # build explicitly: D_out @ B3 @ B2 @ B1 @ D_in
+    coeffs = stage_coeffs(p, cfg)
+    M = np.diag(np.asarray(p["d_in"]))
+    for ell, stage in enumerate(cfg.pairing.stages):
+        B = np.zeros((8, 8))
+        s = stage.stride
+        g = 8 // (2 * s)
+        cf = np.asarray(coeffs[ell])
+        idx = np.arange(8).reshape(g, 2, s)
+        for gi in range(g):
+            for si in range(s):
+                i0, i1 = idx[gi, 0, si], idx[gi, 1, si]
+                a, b, c, d = cf[gi * s + si]
+                B[i0, i0], B[i0, i1] = a, b
+                B[i1, i0], B[i1, i1] = c, d
+        M = B @ M
+    M = np.diag(np.asarray(p["d_out"])) @ M
+    np.testing.assert_allclose(W, M, atol=1e-5)
+
+
+def test_odd_n_residual_lane():
+    """Paper §5: odd n leaves one coordinate unpaired with a learned 1x1."""
+    cfg = _cfg(n=9, L=3, schedule="random")
+    p = init_spm(KEY, cfg)
+    assert "res_scale" in p and p["res_scale"].shape == (3,)
+    x = jax.random.normal(KEY, (4, 9))
+    y = spm_apply(p, x, cfg)
+    assert y.shape == (4, 9) and bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_flops_scaling_is_near_linear():
+    """O(nL) ops: count jaxpr mul/add ops grows ~linearly in n."""
+    def count_ops(n):
+        cfg = _cfg(n=n, L=4)
+        p = init_spm(KEY, cfg)
+        jaxpr = jax.make_jaxpr(lambda x: spm_apply(p, x, cfg))(
+            jnp.zeros((1, n)))
+        return sum(1 for e in jaxpr.jaxpr.eqns)
+    # op-count is schedule-structure dependent but must NOT grow with n
+    assert count_ops(512) <= count_ops(64) + 8

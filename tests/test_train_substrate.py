@@ -1,0 +1,222 @@
+"""Training substrate: optimizer, accumulation, NaN guard, checkpoints,
+deterministic data, fault policy, compression."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (DeterministicLoader, TeacherConfig, build_corpus,
+                        hashed_text_batch, make_teacher, teacher_batch)
+from repro.data.hashed_text import HashedTextConfig
+from repro.models import MLPConfig, init_mlp, mlp_loss
+from repro.optim import (OptimizerConfig, adamw_update, clip_by_global_norm,
+                         cosine_schedule, ef_step, global_norm,
+                         init_opt_state, init_residual)
+from repro.optim.compression import compress, decompress
+from repro.train import (FaultPolicy, latest_step, list_checkpoints,
+                         make_train_state, make_train_step,
+                         restore_checkpoint, save_checkpoint)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_cosine_schedule_shape():
+    cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_frac=0.1)
+    lrs = [float(cosine_schedule(cfg, jnp.array(s))) for s in
+           (0, 5, 10, 55, 100)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 0.5) < 0.06          # mid-warmup
+    assert lrs[2] == pytest.approx(1.0, abs=0.02)
+    assert 0.1 < lrs[3] < 1.0
+    assert lrs[4] == pytest.approx(0.1, abs=0.02)
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((4,), 3.0), "b": jnp.full((4,), 4.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(10.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_adamw_decreases_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = init_opt_state(params)
+    cfg = OptimizerConfig(lr=0.1, warmup_steps=0, total_steps=1000,
+                          weight_decay=0.0)
+    for _ in range(200):
+        g = {"w": 2 * params["w"]}
+        params, state, _ = adamw_update(params, g, state, cfg)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# train step: convergence, accumulation, NaN guard
+# ---------------------------------------------------------------------------
+
+def _mlp_setup(impl="spm_general", width=64):
+    cfg = MLPConfig(n_features=width, n_classes=10, linear_impl=impl)
+    tc = TeacherConfig(width=width)
+    teacher = make_teacher(tc)
+    loader = DeterministicLoader(
+        lambda k, n: teacher_batch(teacher, tc, k, n), 64, seed=1)
+    return cfg, loader
+
+
+def test_train_step_learns_teacher():
+    cfg, loader = _mlp_setup()
+    state = make_train_state(init_mlp(KEY, cfg))
+    step = jax.jit(make_train_step(lambda p, b: mlp_loss(p, b, cfg),
+                                   OptimizerConfig(lr=3e-3,
+                                                   total_steps=150)))
+    accs = []
+    for s in range(150):
+        state, m = step(state, loader.batch_at(s))
+        accs.append(float(m["acc"]))
+    assert np.mean(accs[-10:]) > np.mean(accs[:10]) + 0.2
+
+
+def test_grad_accumulation_matches_full_batch():
+    cfg, loader = _mlp_setup(width=32)
+    params = init_mlp(KEY, cfg)
+    batch = loader.batch_at(0)
+    s1 = make_train_state(params)
+    s2 = make_train_state(params)
+    ocfg = OptimizerConfig(lr=1e-2, total_steps=10)
+    st1 = jax.jit(make_train_step(lambda p, b: mlp_loss(p, b, cfg), ocfg))
+    st4 = jax.jit(make_train_step(lambda p, b: mlp_loss(p, b, cfg), ocfg,
+                                  accum_steps=4))
+    s1, m1 = st1(s1, batch)
+    s2, m2 = st4(s2, batch)
+    # same data, same params: accumulated grads == full-batch grads
+    for a, b in zip(jax.tree.leaves(s1["params"]),
+                    jax.tree.leaves(s2["params"])):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_nan_guard_skips_update():
+    cfg, loader = _mlp_setup(width=32)
+    state = make_train_state(init_mlp(KEY, cfg))
+    step = jax.jit(make_train_step(lambda p, b: mlp_loss(p, b, cfg),
+                                   OptimizerConfig(total_steps=10)))
+    bad = {"x": jnp.full((8, 32), jnp.nan),
+           "y": jnp.zeros((8,), jnp.int32)}
+    state2, m = step(state, bad)
+    assert float(m["skipped"]) == 1.0
+    for a, b in zip(jax.tree.leaves(state["params"]),
+                    jax.tree.leaves(state2["params"])):
+        np.testing.assert_allclose(a, b)
+    assert int(state2["step"]) == 1   # step counter still advances
+
+
+def test_fault_policy_rollback_threshold():
+    pol = FaultPolicy(max_consecutive_skips=3)
+    assert not pol.on_metrics({"skipped": 1.0})
+    assert not pol.on_metrics({"skipped": 1.0})
+    assert pol.on_metrics({"skipped": 1.0})       # third in a row
+    pol.reset()
+    assert not pol.on_metrics({"skipped": 0.0})
+    assert pol.total_skips == 3
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_atomic_keepN_resume():
+    cfg, loader = _mlp_setup(width=32)
+    state = make_train_state(init_mlp(KEY, cfg))
+    with tempfile.TemporaryDirectory() as d:
+        for s in (10, 20, 30, 40, 50):
+            save_checkpoint(d, s, state,
+                            extra={"cursor": {"seed": 1, "step": s}},
+                            keep=3)
+        assert list_checkpoints(d) == [30, 40, 50]
+        assert latest_step(d) == 50
+        restored, extra = restore_checkpoint(d, state)
+        assert extra["cursor"]["step"] == 50
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            np.testing.assert_allclose(a, b)
+        # no stale tmp dirs (atomicity)
+        assert not [f for f in os.listdir(d) if f.startswith("tmp.")]
+
+
+def test_resume_is_bitwise_reproducible():
+    """Train 10 steps straight == train 5, checkpoint, restore, train 5."""
+    cfg, loader = _mlp_setup(width=32)
+    ocfg = OptimizerConfig(lr=1e-2, total_steps=20)
+    step = jax.jit(make_train_step(lambda p, b: mlp_loss(p, b, cfg), ocfg))
+
+    sA = make_train_state(init_mlp(KEY, cfg))
+    for s in range(10):
+        sA, _ = step(sA, loader.batch_at(s))
+
+    sB = make_train_state(init_mlp(KEY, cfg))
+    for s in range(5):
+        sB, _ = step(sB, loader.batch_at(s))
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 5, sB, extra={"cursor": {"seed": 1, "step": 5}})
+        sB, extra = restore_checkpoint(d, sB)
+    for s in range(int(extra["cursor"]["step"]), 10):
+        sB, _ = step(sB, loader.batch_at(s))
+
+    for a, b in zip(jax.tree.leaves(sA["params"]),
+                    jax.tree.leaves(sB["params"])):
+        np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# data determinism + compression
+# ---------------------------------------------------------------------------
+
+def test_loader_determinism_and_host_sharding():
+    tc = TeacherConfig(width=16)
+    teacher = make_teacher(tc)
+    fn = lambda k, n: teacher_batch(teacher, tc, k, n)
+    full = DeterministicLoader(fn, 32, seed=3)
+    h0 = DeterministicLoader(fn, 32, seed=3, n_hosts=4, host_id=0)
+    h3 = DeterministicLoader(fn, 32, seed=3, n_hosts=4, host_id=3)
+    b = full.batch_at(7)
+    np.testing.assert_allclose(h0.batch_at(7)["x"], b["x"][:8])
+    np.testing.assert_allclose(h3.batch_at(7)["x"], b["x"][24:])
+
+
+def test_corpus_is_deterministic_and_textlike():
+    c1 = build_corpus(30_000, seed=2)
+    c2 = build_corpus(30_000, seed=2)
+    np.testing.assert_array_equal(c1, c2)
+    # mostly printable ASCII
+    printable = np.mean((c1 >= 32) & (c1 < 127) | (c1 == 10))
+    assert printable > 0.95
+
+
+@settings(max_examples=20, deadline=None)
+@given(scale=st.floats(0.01, 100.0))
+def test_int8_roundtrip_error_bound(scale):
+    x = scale * jax.random.normal(KEY, (256,))
+    q, s = compress(x)
+    err = jnp.max(jnp.abs(decompress(q, s) - x))
+    assert float(err) <= float(s) * 0.5 + 1e-6   # half-ULP of the quantizer
+
+
+def test_error_feedback_accumulates_residual():
+    g = {"w": 0.01 * jax.random.normal(KEY, (64,))}
+    r = init_residual(g)
+    # two EF steps: residual carries quantization error forward
+    gq1, r1 = ef_step(g, r)
+    gq2, r2 = ef_step(g, r1)
+    # sum of transmitted approximates sum of true grads better than 2x solo
+    true_sum = 2 * g["w"]
+    ef_sum = gq1["w"] + gq2["w"]
+    solo_err = jnp.linalg.norm(2 * gq1["w"] - true_sum)
+    ef_err = jnp.linalg.norm(ef_sum - true_sum)
+    assert float(ef_err) <= float(solo_err) + 1e-6
