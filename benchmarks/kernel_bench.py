@@ -1,24 +1,36 @@
 """SPM operator scaling benchmark (paper §5 complexity claim) + kernel
-traffic model.
+traffic model + fused-vs-unfused end-to-end ``linear_apply``.
 
 Wall-clock on this CPU container: dense O(n^2) matmul vs SPM O(nL)
 composition at growing width (the paper's crossover, Tables 1-2 compute
-columns).  The Pallas kernel itself is validated in interpret mode
-(timing it under interpret is meaningless), so the TPU claim is reported
-via the traffic model: fused VMEM kernel = 1 HBM read + 1 write vs L+1
-round-trips for the naive composition.
+columns), plus the end-to-end ``linear_apply`` hot path with the fused
+full-operator Pallas kernel ON vs OFF, forward and forward+backward.
+
+Off-TPU the fused path runs in interpret mode, so its wall-clock is a
+correctness/validation number, NOT a hardware claim (rows are tagged with
+the backend).  The TPU claim is reported via the traffic model: the fused
+full operator performs 1 HBM read + 1 write of the activation per boundary
+run — diag and bias folded in — vs the L+4 round-trips of the per-stage
+composition (L stages lowered separately cost L+1, and the d_in multiply,
+d_out multiply, and bias add each add one more).
+
+Emits ``BENCH_kernel.json`` (repo root by default) so later PRs have a
+trajectory to compare against.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_step
 from repro.core import SPMConfig, init_spm, spm_apply
+from repro.core.linear import LinearConfig, init_linear, linear_apply
 from repro.core.pairings import default_n_stages
+from repro.kernels.ops import plan_runs
 from repro.kernels.spm_stack import pick_block_rows, vmem_bytes
 
 KEY = jax.random.PRNGKey(0)
@@ -26,7 +38,8 @@ KEY = jax.random.PRNGKey(0)
 
 def bench_width(n: int, batch: int = 256):
     L = default_n_stages(n)
-    cfg = SPMConfig(n=n, n_stages=L, variant="general", backward="custom")
+    cfg = SPMConfig(n=n, n_stages=L, variant="general", backward="custom",
+                    use_kernel=False)
     p = init_spm(KEY, cfg)
     x = jax.random.normal(KEY, (batch, n))
     w = jax.random.normal(KEY, (n, n)) / n ** 0.5
@@ -45,37 +58,118 @@ def bench_width(n: int, batch: int = 256):
             "bwd_spm_us": tg_spm * 1e6, "bwd_dense_us": tg_dense * 1e6}
 
 
+def bench_linear_apply(n: int, batch: int = 64):
+    """End-to-end linear_apply (full operator: diag + stages + bias),
+    fused Pallas kernel vs unfused XLA composition, fwd and fwd+bwd.
+
+    Off-TPU the fused variant runs the kernels in interpret mode —
+    validation wall-clock only."""
+    L = default_n_stages(n)
+    mk = lambda uk: LinearConfig(d_in=n, d_out=n, impl="spm_general",
+                                 n_stages=L, backward="custom",
+                                 use_kernel=uk)
+    cfg0, cfg1 = mk(False), mk(True)
+    p = init_linear(KEY, cfg0)
+    x = jax.random.normal(KEY, (batch, n))
+
+    res = {}
+    for tag, cfg in (("unfused", cfg0), ("fused", cfg1)):
+        f = jax.jit(lambda x, cfg=cfg: linear_apply(p, x, cfg))
+        g = jax.jit(jax.grad(
+            lambda p, x, cfg=cfg: jnp.sum(linear_apply(p, x, cfg) ** 2)))
+        res[f"linear_fwd_{tag}_us"] = time_step(f, x) * 1e6
+        res[f"linear_fwdbwd_{tag}_us"] = time_step(g, p, x) * 1e6
+    return res
+
+
 def traffic_model(n: int, batch: int, L: int) -> dict:
-    """HBM bytes per call: naive composition vs fused kernel (f32)."""
+    """HBM bytes per FULL-operator call (f32 activations).
+
+    unfused — per-stage XLA composition with separate diag/bias: L+1
+    round-trips for the stage chain plus one each for d_in, d_out, bias
+    (L+4 total, each a read+write of the activation).
+    fused — 1 read + 1 write per boundary run of the kernel plan, diag and
+    bias folded into the boundary runs (plus the O(nL) coefficient reads,
+    which are batch-independent)."""
     act = batch * n * 4
-    naive = (L + 1) * 2 * act            # read+write per stage
-    fused = 2 * act + L * (n // 2) * 16  # one read+write + coeffs
-    br = pick_block_rows(min(n, 2048), L)
-    return {"naive_bytes": naive, "fused_bytes": fused,
-            "reduction": naive / fused,
+    strides = tuple(
+        SPMConfig(n=n, n_stages=L, variant="general").pairing.strides())
+    runs = plan_runs(n, strides)
+    n_runs = len(runs)
+    coeff_bytes = L * (n // 2) * 16 + 3 * n * 4    # (a,b,c,d) + diag/bias
+    unfused = (L + 4) * 2 * act
+    kernel_only = (n_runs + 3) * 2 * act + coeff_bytes  # pre-PR: diag/bias out
+    fused = n_runs * 2 * act + coeff_bytes
+    # block_rows/vmem describe the configuration spm_stack_fused actually
+    # runs: sized against the plan's LARGEST tile (matches ops.py)
+    max_tile = max(t for _, t in runs)
+    br = pick_block_rows(max_tile, L)
+    return {"unfused_roundtrips": L + 4,
+            "fused_roundtrips": n_runs,
+            "n_runs": n_runs,
+            "unfused_bytes": unfused,
+            "kernel_only_bytes": kernel_only,
+            "fused_bytes": fused,
+            "reduction": unfused / fused,
+            "reduction_vs_kernel_only": kernel_only / fused,
+            "max_tile": max_tile,
             "block_rows": br,
-            "vmem_bytes": vmem_bytes(br, min(n, 2048), L)}
+            "vmem_bytes": vmem_bytes(br, max_tile, L)}
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--linear-batch", type=int, default=64,
+                    help="batch for the end-to-end linear_apply rows "
+                         "(kept small: interpret mode off-TPU)")
+    ap.add_argument("--out", default="BENCH_kernel.json",
+                    help="JSON trajectory output ('' to skip)")
+    ap.add_argument("--skip-fused-timing", action="store_true",
+                    help="traffic model only (no interpret-mode wall-clock)")
     args = ap.parse_args(argv)
     widths = (512, 1024, 2048, 4096) if args.full else (256, 512, 1024)
+    backend = jax.default_backend()
 
-    print("# SPM vs dense scaling (CPU wall-clock) + kernel traffic model")
+    print(f"# SPM vs dense scaling + fused-operator bench (backend={backend})")
     print("n,L,fwd_dense_us,fwd_spm_us,fwd_speedup,"
-          "bwd_dense_us,bwd_spm_us,bwd_speedup,hbm_reduction,vmem_bytes")
+          "bwd_dense_us,bwd_spm_us,bwd_speedup,hbm_reduction,"
+          "fused_roundtrips,unfused_roundtrips,vmem_bytes")
+    records = []
     for n in widths:
-        r = bench_width(n)
-        t = traffic_model(n, 256, r["L"])
+        r = bench_width(n, args.batch)
+        t = traffic_model(n, args.batch, r["L"])
+        rec = {"n": n, **r, "traffic": t}
+        if not args.skip_fused_timing:
+            rec.update(bench_linear_apply(n, args.linear_batch))
+        records.append(rec)
         print(f"{n},{r['L']},{r['fwd_dense_us']:.0f},{r['fwd_spm_us']:.0f},"
               f"{r['fwd_dense_us']/r['fwd_spm_us']:.2f}x,"
               f"{r['bwd_dense_us']:.0f},{r['bwd_spm_us']:.0f},"
               f"{r['bwd_dense_us']/r['bwd_spm_us']:.2f}x,"
-              f"{t['reduction']:.1f}x,{t['vmem_bytes']}")
+              f"{t['reduction']:.1f}x,{t['fused_roundtrips']},"
+              f"{t['unfused_roundtrips']},{t['vmem_bytes']}")
         emit(f"kernel/n{n}/spm_fwd", r["fwd_spm_us"],
              f"dense={r['fwd_dense_us']:.0f}us")
+        if not args.skip_fused_timing:
+            emit(f"kernel/n{n}/linear_fused_fwd", rec["linear_fwd_fused_us"],
+                 f"unfused={rec['linear_fwd_unfused_us']:.0f}us "
+                 f"(interpret={backend != 'tpu'})")
+
+    if args.out:
+        payload = {
+            "generated_by": "benchmarks/kernel_bench.py",
+            "backend": backend,
+            "batch": args.batch,
+            "linear_batch": args.linear_batch,
+            "note": ("fused wall-clock is interpret-mode (validation only) "
+                     "off-TPU; the traffic model carries the HBM claim"),
+            "results": records,
+        }
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {args.out}")
 
 
 if __name__ == "__main__":

@@ -33,8 +33,12 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--impl", default="spm_general",
                     choices=("dense", "spm_general", "spm_rotation"))
+    ap.add_argument("--fused", default="auto", choices=("auto", "on", "off"),
+                    help="fused Pallas SPM operator (auto = on TPU only; "
+                         "'on' forces interpret mode off-TPU)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_char_lm")
     args = ap.parse_args()
+    use_kernel = {"auto": None, "on": True, "off": False}[args.fused]
 
     cfg = ModelConfig(
         name="char-lm", d_model=args.d_model, n_layers=args.layers,
@@ -42,7 +46,8 @@ def main() -> None:
         head_dim=args.d_model // args.heads, d_ff=4 * args.d_model,
         vocab_size=256, layers=tuple([LayerSpec()] * args.layers),
         scan_group=1, linear_impl=args.impl, spm_backward="custom",
-        dtype=jnp.float32, q_chunk=64, k_chunk=64)
+        spm_use_kernel=use_kernel, dtype=jnp.float32,
+        q_chunk=64, k_chunk=64)
 
     params = init_model(jax.random.PRNGKey(0), cfg)
     state = make_train_state(params)

@@ -8,7 +8,8 @@ from typing import Optional, Tuple
 from repro.models.transformer import LayerSpec, ModelConfig
 
 __all__ = ["dense_layers", "local_global_layers", "moe_layers",
-           "mamba_layers", "hybrid_layers", "with_overrides"]
+           "mamba_layers", "hybrid_layers", "with_overrides",
+           "with_fused_linears"]
 
 
 def dense_layers(n: int) -> Tuple[LayerSpec, ...]:
@@ -44,3 +45,12 @@ def hybrid_layers(n: int, attn_every: int) -> Tuple[LayerSpec, ...]:
 
 def with_overrides(cfg: ModelConfig, **kw) -> ModelConfig:
     return dataclasses.replace(cfg, **kw)
+
+
+def with_fused_linears(cfg: ModelConfig,
+                       on: Optional[bool] = True) -> ModelConfig:
+    """Set the fused-Pallas-operator knob on every SPM linear in the model
+    (``spm_use_kernel``: None = auto/on-TPU, True = force, False = off).
+    Ineligible operators (odd n, permutation pairings, custom_inverse)
+    fall back to the XLA composition regardless — see core/spm.py."""
+    return dataclasses.replace(cfg, spm_use_kernel=on)

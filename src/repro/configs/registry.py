@@ -7,8 +7,9 @@ SUBQUADRATIC (pure full-attention archs skip it — noted in DESIGN.md §4).
 from __future__ import annotations
 
 import importlib
-from typing import Tuple
+from typing import Any, Tuple
 
+from repro.configs.base import with_fused_linears
 from repro.configs.shapes import SHAPES, ShapeSpec
 from repro.models.transformer import ModelConfig
 
@@ -37,12 +38,27 @@ def _mod(arch: str):
     return importlib.import_module(_MODULES[arch])
 
 
-def get_config(arch: str) -> ModelConfig:
-    return _mod(arch).CONFIG
+_UNSET = object()  # distinct from None: None is itself a valid tri-state
+                   # value ("auto"), so absence needs its own sentinel
 
 
-def get_smoke(arch: str) -> ModelConfig:
-    return _mod(arch).SMOKE
+def get_config(arch: str,
+               use_kernel: Any = _UNSET) -> ModelConfig:
+    """Resolve an arch id; ``use_kernel`` (when passed) overrides the
+    fused-Pallas-linear knob: None = auto (fused on TPU backends, XLA
+    elsewhere), True = force, False = off.  Omit to keep the arch
+    config's own setting."""
+    cfg = _mod(arch).CONFIG
+    if use_kernel is not _UNSET:
+        cfg = with_fused_linears(cfg, use_kernel)
+    return cfg
+
+
+def get_smoke(arch: str, use_kernel: Any = _UNSET) -> ModelConfig:
+    cfg = _mod(arch).SMOKE
+    if use_kernel is not _UNSET:
+        cfg = with_fused_linears(cfg, use_kernel)
+    return cfg
 
 
 def is_subquadratic(arch: str) -> bool:

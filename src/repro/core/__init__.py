@@ -7,6 +7,7 @@ from repro.core.pairings import (  # noqa: F401
 )
 from repro.core.spm import (  # noqa: F401
     SPMConfig, init_spm, spm_apply, spm_matrix, stage_coeffs,
+    kernel_eligible, use_fused_kernel,
 )
 from repro.core.linear import (  # noqa: F401
     LinearConfig, init_linear, linear_apply, linear_param_count,

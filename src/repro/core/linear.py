@@ -11,6 +11,10 @@ Rectangular handling (DESIGN.md §5 — beyond the paper, which defines SPM for
 square maps only): the SPM operates over ``n = even_ceil(max(d_in, d_out))``;
 inputs are zero-padded up to n, outputs sliced down to d_out.  For
 ``d_in == d_out`` (even) this reduces exactly to the paper's operator.
+
+``use_kernel`` selects the fused Pallas full-operator path (tri-state:
+None = auto/on-TPU, True = force, False = off; see core/spm.py for the
+eligibility + fallback rules).
 """
 
 from __future__ import annotations
@@ -43,6 +47,8 @@ class LinearConfig:
     init_scale: float = 0.05
     n_shards: int = 1
     param_dtype: Any = jnp.float32
+    use_kernel: Optional[bool] = None    # fused Pallas operator: None=auto
+                                         # (on-TPU), True=force, False=off
 
     def __post_init__(self):
         if self.impl not in LINEAR_IMPLS:
@@ -69,7 +75,8 @@ class LinearConfig:
             n=self.n, n_stages=n_stages, variant=variant,
             schedule=self.schedule, use_diag=True, use_bias=self.use_bias,
             backward=backward, init_scale=self.init_scale,
-            n_shards=self.n_shards, param_dtype=self.param_dtype)
+            n_shards=self.n_shards, param_dtype=self.param_dtype,
+            use_kernel=self.use_kernel)
 
 
 def init_linear(key: jax.Array, cfg: LinearConfig) -> dict:

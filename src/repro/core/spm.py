@@ -24,6 +24,11 @@ Backward modes:
                        intermediate activations are stored (O(n) residuals
                        instead of O(nL)).  Beyond-paper memory optimization.
 
+Fused kernel path: ``use_kernel`` (tri-state, see SPMConfig) routes the
+WHOLE operator — diag, stages, and bias — through the Pallas kernel pair in
+``kernels/ops.py`` with its own closed-form custom_vjp; the selectable
+backward modes above only apply to the XLA composition fallback.
+
 All apply functions act on the last axis of arbitrarily-batched inputs.
 """
 
@@ -40,7 +45,8 @@ import numpy as np
 from repro.core import pairings
 from repro.core.pairings import Schedule, Stage
 
-__all__ = ["SPMConfig", "init_spm", "spm_apply", "spm_matrix", "stage_coeffs"]
+__all__ = ["SPMConfig", "init_spm", "spm_apply", "spm_matrix", "stage_coeffs",
+           "kernel_eligible", "use_fused_kernel"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,8 +66,18 @@ class SPMConfig:
     n_shards: int = 1                 # for schedule="two_level"
     seed: int = 0
     param_dtype: Any = jnp.float32
-    use_kernel: bool = False          # fused Pallas stage-stack (structured
-                                      # even-n schedules only; see kernels/)
+    # Fused full-operator Pallas kernel (kernels/ops.py): tri-state.
+    #   None  — auto: ON whenever the schedule is eligible AND we are on a
+    #           TPU backend (on CPU the kernel runs in interpret mode, which
+    #           is only useful for validation, so auto stays on XLA).
+    #   True  — force the fused path when eligible (interpret mode off-TPU;
+    #           used by tests/benchmarks).
+    #   False — never.
+    # Eligibility (graceful fallback otherwise): all stages structured
+    # (stride pairings), even n, and backward != "custom_inverse" (the
+    # reversible backward stores outputs, incompatible with the in-VMEM
+    # remat the kernel backward performs).
+    use_kernel: Optional[bool] = None
 
     def __post_init__(self):
         if self.variant not in ("general", "rotation"):
@@ -369,9 +385,48 @@ def _cached_core(sched: Schedule, mode: str):
 # public apply
 # ---------------------------------------------------------------------------
 
+def kernel_eligible(cfg: SPMConfig, sched: Optional[Schedule] = None) -> bool:
+    """Whether the fused Pallas kernel can express this operator exactly:
+    all-structured (stride) stages, even n, unsharded, and a backward mode
+    whose residual contract the kernel honors (custom_inverse stores
+    outputs instead of inputs, so it falls back to the XLA composition).
+    Sharded two_level operators (n_shards > 1) stay on the partitionable
+    XLA composition until the kernel grows collective_permute support for
+    the cross-shard stages (ROADMAP open item)."""
+    sched = cfg.pairing if sched is None else sched
+    return (sched.all_structured and not cfg.odd
+            and cfg.n_shards == 1
+            and cfg.backward != "custom_inverse")
+
+
+def use_fused_kernel(cfg: SPMConfig, sched: Optional[Schedule] = None) -> bool:
+    """Resolve the tri-state ``use_kernel`` knob (see SPMConfig)."""
+    if cfg.use_kernel is False:
+        return False
+    if not kernel_eligible(cfg, sched):
+        return False  # graceful fallback, even when forced on
+    if cfg.use_kernel:
+        return True
+    return jax.default_backend() == "tpu"
+
+
 def spm_apply(params: dict, x: jax.Array, cfg: SPMConfig) -> jax.Array:
     """Full SPM forward: y = D_out * (B_L ... B_1) * D_in * x + bias."""
     sched = cfg.pairing
+    if use_fused_kernel(cfg, sched):
+        # Fused full-operator path: the diag multiplies and bias add are
+        # folded into the boundary runs of the kernel plan (zero extra HBM
+        # round-trips), and the custom_vjp covers the whole operator.
+        # Coefficients stay in their param dtype (f32): the kernel computes
+        # f32 in VMEM regardless of the activation I/O dtype, and the
+        # rotation variant's theta -> (a, b, c, d) chain differentiates
+        # outside the kernel through the coefficient cotangent.
+        from repro.kernels import ops as kernel_ops  # lazy: keeps core light
+        return kernel_ops.spm_stack_fused(
+            x, stage_coeffs(params, cfg), sched.strides(),
+            d_in=params["d_in"] if cfg.use_diag else None,
+            d_out=params["d_out"] if cfg.use_diag else None,
+            bias=params["bias"] if cfg.use_bias else None)
     coeffs = stage_coeffs(params, cfg).astype(x.dtype)
     res_scales = params.get("res_scale")
     if res_scales is None:
@@ -381,12 +436,8 @@ def spm_apply(params: dict, x: jax.Array, cfg: SPMConfig) -> jax.Array:
     z = x
     if cfg.use_diag:
         z = z * params["d_in"].astype(x.dtype)
-    if cfg.use_kernel and sched.all_structured and not cfg.odd:
-        from repro.kernels import ops as kernel_ops  # lazy: keeps core light
-        z = kernel_ops.spm_stack_fused(z, coeffs, sched.strides())
-    else:
-        core = _cached_core(sched, cfg.backward)
-        z = core(coeffs, res_scales, z)
+    core = _cached_core(sched, cfg.backward)
+    z = core(coeffs, res_scales, z)
     if cfg.use_diag:
         z = z * params["d_out"].astype(x.dtype)
     if cfg.use_bias:

@@ -1,18 +1,36 @@
-"""Public entry for the fused SPM stage-stack kernel.
+"""Public entry for the fused SPM operator kernel.
 
-``spm_stack_fused(x, coeffs, strides)`` applies the L structured mixing
-stages to the last axis of ``x`` with:
+``spm_stack_fused(x, coeffs, strides, d_in=..., d_out=..., bias=...)``
+applies the paper's COMPLETE operator
+
+    y = D_out * (B_L ... B_1) * D_in * x + bias
+
+to the last axis of ``x`` with:
 
   * **run planning** — the stride schedule is split into maximal consecutive
     *runs* such that every stride in a run keeps its pairs inside one feature
     tile (``n_tile % (2*s) == 0``).  Each run is one ``pallas_call`` that
     fuses all its stages in VMEM (DESIGN.md §3.2); run boundaries are the
     only HBM round-trips.
-  * **custom_vjp** — backward uses the fused backward kernel per run
-    (paper §4 closed forms, recomputing stage inputs in VMEM), so training
-    gets the same one-read-one-write property as the forward.
+  * **boundary folding** — ``d_in`` is folded into the FIRST run and
+    ``d_out``/``bias`` into the LAST run of the plan, so the diagonal
+    multiplies and the bias add cost zero extra HBM round-trips: the full
+    operator is 1 read + 1 write of the activation per run (a single
+    round-trip total for schedules that plan to one run) instead of the
+    L+4 round-trips of the per-stage composition with unfused diag/bias.
+  * **custom_vjp over the full operator** — backward uses the fused backward
+    kernel per run (paper §4 closed forms, recomputing stage inputs in
+    VMEM); the boundary runs additionally emit the closed-form diag/bias
+    grads (g_dout = sum gy*z_L, g_bias = sum gy, g_din = sum delta_0*x), so
+    training gets the same one-read-one-write property as the forward.
+    The rotation variant's ``theta -> (a, b, c, d)`` chain stays OUTSIDE the
+    kernel: it is O(nL), not activation-sized, and plain autodiff composes
+    with the coefficient cotangent this VJP returns.
   * **batch/tile padding** — leading dims are flattened; rows are padded to
-    the row-block so arbitrary batch sizes work.
+    the row-block so arbitrary batch sizes work (padded rows carry zero
+    cotangents, so the batch-summed parameter grads are unaffected).
+  * **bf16 I/O** — activations may be bf16; in-VMEM compute is f32 and all
+    parameter grads are returned f32 (cast back to the param dtype here).
 
 On CPU (this container) kernels run with ``interpret=True``; on TPU the
 same BlockSpecs compile natively.  ``kernels/ref.py`` is the oracle.
@@ -22,7 +40,7 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -104,53 +122,100 @@ def _pad_rows(x2: jax.Array, block_rows: int) -> Tuple[jax.Array, int]:
     return x2, rows
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
-def _fused_core(x2, coeffs, strides, block_rows, interpret):
-    """x2: (B, n) row-major; coeffs: (L, n//2, 4)."""
-    z = x2
-    off = 0
-    for run_strides, n_tile in plan_runs(x2.shape[-1], strides):
-        cf = coeffs[off: off + len(run_strides)]
-        z = K.spm_stack_kernel_call(
-            z, cf, strides=run_strides, block_rows=block_rows,
-            n_tile=n_tile, interpret=interpret)
+# ---------------------------------------------------------------------------
+# full-operator custom_vjp core
+# ---------------------------------------------------------------------------
+#
+# Diff args: (x2, coeffs, d_in, d_out, bias).  The diag/bias operands are
+# ALWAYS arrays (size-1 placeholders when absent) so the vjp signature is
+# uniform; the static ``flags = (has_din, has_dout, has_bias)`` tuple decides
+# which are real.  Placeholders never reach a kernel and get zero grads.
+
+def _run_offsets(runs):
+    offs, off = [], 0
+    for run_strides, _ in runs:
+        offs.append(off)
         off += len(run_strides)
-    return z
+    return offs
 
 
-def _fused_fwd(x2, coeffs, strides, block_rows, interpret):
+def _boundary_kw(r: int, n_runs: int, flags, d_in, d_out, bias) -> dict:
+    """Kernel operands folded into run r: d_in on the first, d_out/bias on
+    the last (both on a single-run plan)."""
+    has_din, has_dout, has_bias = flags
+    kw = {}
+    if r == 0 and has_din:
+        kw["d_in"] = d_in
+    if r == n_runs - 1:
+        if has_dout:
+            kw["d_out"] = d_out
+        if has_bias:
+            kw["bias"] = bias
+    return kw
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def _fused_core(x2, coeffs, d_in, d_out, bias,
+                strides, flags, block_rows, interpret):
+    """x2: (B, n) row-major; coeffs: (L, n//2, 4); d_in/d_out/bias: (n,)."""
+    return _fused_fwd(x2, coeffs, d_in, d_out, bias,
+                      strides, flags, block_rows, interpret)[0]
+
+
+def _fused_fwd(x2, coeffs, d_in, d_out, bias,
+               strides, flags, block_rows, interpret):
+    runs = plan_runs(x2.shape[-1], strides)
     zs = []
     z = x2
     off = 0
-    for run_strides, n_tile in plan_runs(x2.shape[-1], strides):
+    for r, (run_strides, n_tile) in enumerate(runs):
         zs.append(z)
         cf = coeffs[off: off + len(run_strides)]
         z = K.spm_stack_kernel_call(
             z, cf, strides=run_strides, block_rows=block_rows,
-            n_tile=n_tile, interpret=interpret)
+            n_tile=n_tile, interpret=interpret,
+            **_boundary_kw(r, len(runs), flags, d_in, d_out, bias))
         off += len(run_strides)
-    return z, (tuple(zs), coeffs)
+    return z, (tuple(zs), coeffs, d_in, d_out, bias)
 
 
-def _fused_bwd(strides, block_rows, interpret, res, gy):
-    zs, coeffs = res
-    runs = plan_runs(gy.shape[-1], strides)
-    offsets = []
-    off = 0
-    for run_strides, _ in runs:
-        offsets.append(off)
-        off += len(run_strides)
+def _fused_bwd(strides, flags, block_rows, interpret, res, gy):
+    zs, coeffs, d_in, d_out, bias = res
+    has_din, has_dout, has_bias = flags
+    n = gy.shape[-1]
+    runs = plan_runs(n, strides)
+    offsets = _run_offsets(runs)
     delta = gy
     g_cf_parts = [None] * len(runs)
+    g_din = g_dout = g_bias = None
     for r in range(len(runs) - 1, -1, -1):
         run_strides, n_tile = runs[r]
         cf = coeffs[offsets[r]: offsets[r] + len(run_strides)]
-        delta, gcf = K.spm_stack_bwd_kernel_call(
-            zs[r], cf, delta, strides=run_strides, block_rows=block_rows,
-            n_tile=n_tile, interpret=interpret)
+        last = r == len(runs) - 1
+        out = K.spm_stack_bwd_kernel_call(
+            zs[r], cf, delta,
+            d_in=d_in if (r == 0 and has_din) else None,
+            d_out=d_out if (last and has_dout) else None,
+            strides=run_strides, block_rows=block_rows, n_tile=n_tile,
+            has_bias=last and has_bias, interpret=interpret)
+        delta, gcf = out[0], out[1]
+        vec = list(out[2:])
+        if r == 0 and has_din:
+            g_din = vec.pop(0)
+        if last and has_dout:
+            g_dout = vec.pop(0)
+        if last and has_bias:
+            g_bias = vec.pop(0)
         g_cf_parts[r] = gcf
     g_coeffs = jnp.concatenate(g_cf_parts, axis=0).astype(coeffs.dtype)
-    return delta, g_coeffs
+
+    def _vg(g, like):
+        if g is None:
+            return jnp.zeros_like(like)
+        return g.astype(like.dtype)
+
+    return (delta, g_coeffs, _vg(g_din, d_in), _vg(g_dout, d_out),
+            _vg(g_bias, bias))
 
 
 _fused_core.defvjp(_fused_fwd, _fused_bwd)
@@ -158,12 +223,18 @@ _fused_core.defvjp(_fused_fwd, _fused_bwd)
 
 def spm_stack_fused(x: jax.Array, coeffs: jax.Array,
                     strides: Sequence[int], *,
+                    d_in: Optional[jax.Array] = None,
+                    d_out: Optional[jax.Array] = None,
+                    bias: Optional[jax.Array] = None,
                     block_rows: int | None = None,
                     interpret: bool | None = None) -> jax.Array:
-    """Fused L-stage SPM over the last axis of ``x``.
+    """Fused SPM operator over the last axis of ``x``.
 
     x: (..., n) with n divisible by 2*s for every stride; coeffs
-    (L, n//2, 4).  Differentiable in x and coeffs (closed-form VJP).
+    (L, n//2, 4); optional d_in/d_out/bias: (n,) folded into the boundary
+    runs.  Differentiable in x, coeffs, and the diag/bias operands
+    (closed-form VJP); with all three omitted this is exactly the bare
+    stage stack (back-compat entry).
     """
     strides = tuple(int(s) for s in strides)
     n = x.shape[-1]
@@ -171,10 +242,20 @@ def spm_stack_fused(x: jax.Array, coeffs: jax.Array,
         interpret = default_interpret()
     x2, lead = _flatten_rows(x)
     if block_rows is None:
-        min_tile = min(t for _, t in plan_runs(n, strides))
-        block_rows = K.pick_block_rows(min_tile, len(strides),
+        # size the row block against the LARGEST run tile so every run of
+        # the plan fits the VMEM budget (smaller-tile runs just run with a
+        # conservative block; one block_rows keeps the padding uniform).
+        max_tile = max(t for _, t in plan_runs(n, strides))
+        block_rows = K.pick_block_rows(max_tile, len(strides),
                                        dtype_bytes=x.dtype.itemsize)
         block_rows = min(block_rows, max(8, 1 << (x2.shape[0] - 1).bit_length()))
     x2p, rows = _pad_rows(x2, block_rows)
-    y2 = _fused_core(x2p, coeffs, strides, block_rows, interpret)
+    flags = (d_in is not None, d_out is not None, bias is not None)
+    placeholder = jnp.zeros((1,), x.dtype)
+    y2 = _fused_core(
+        x2p, coeffs,
+        d_in if d_in is not None else placeholder,
+        d_out if d_out is not None else placeholder,
+        bias if bias is not None else placeholder,
+        strides, flags, block_rows, interpret)
     return y2[:rows].reshape(lead + (n,))

@@ -14,11 +14,11 @@ This module is the correctness reference: tests assert the Pallas kernel
 
 from __future__ import annotations
 
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 
-__all__ = ["spm_stack_ref", "spm_stack_grads_ref"]
+__all__ = ["spm_stack_ref", "spm_stack_grads_ref", "spm_full_ref"]
 
 
 def _stage(z, cf, s):
@@ -39,6 +39,22 @@ def spm_stack_ref(x: jnp.ndarray, coeffs: jnp.ndarray,
     z = x
     for ell, s in enumerate(strides):
         z = _stage(z, coeffs[ell].astype(z.dtype), s)
+    return z
+
+
+def spm_full_ref(x: jnp.ndarray, coeffs: jnp.ndarray,
+                 strides: Tuple[int, ...],
+                 d_in: Optional[jnp.ndarray] = None,
+                 d_out: Optional[jnp.ndarray] = None,
+                 bias: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Oracle for the FULL operator y = D_out (B_L...B_1) D_in x + bias,
+    matching the diag/bias folding of the fused kernel path."""
+    z = x if d_in is None else x * d_in.astype(x.dtype)
+    z = spm_stack_ref(z, coeffs, strides)
+    if d_out is not None:
+        z = z * d_out.astype(z.dtype)
+    if bias is not None:
+        z = z + bias.astype(z.dtype)
     return z
 
 

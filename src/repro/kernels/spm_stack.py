@@ -1,12 +1,34 @@
-"""Fused L-stage SPM kernel (Pallas / TPU).
+"""Fused L-stage SPM kernel (Pallas / TPU) — full-operator edition.
 
 Why a kernel (DESIGN.md §3.2): SPM has arithmetic intensity ~O(L) FLOP/byte
 (vs ~n/2 for a dense matmul), far below the TPU v5e balance point
 (~240 FLOP/byte @ 197 TFLOP/s bf16 / 819 GB/s HBM), so SPM is memory-bound by
 construction.  Lowering each stage separately costs L+1 HBM round-trips of
 the full activation; this kernel keeps an activation tile resident in VMEM
-and applies ALL stages before writing back — one read + one write, an
-(L+1)/2x reduction of the memory-roofline term.
+and applies ALL stages before writing back — one read + one write.
+
+Full-operator folding (this PR): the paper's complete operator is
+
+    y = D_out * (B_L ... B_1) * D_in * x + bias
+
+and with only the stage stack fused, the two diagonal multiplies and the
+bias add each cost one more full-activation HBM round-trip around the
+kernel.  Both kernels therefore take OPTIONAL ``d_in`` / ``d_out`` / ``bias``
+tile refs ((1, n_tile) slabs riding the lane dimension): ``d_in`` is applied
+in VMEM before the first stage of the FIRST run, ``d_out``/``bias`` after
+the last stage of the LAST run (ops.py folds them into the boundary runs of
+the run plan).  The backward kernel emits their closed-form grads next to
+the eq. 12-14 coefficient grads:
+
+    g_bias  = sum_batch gy                       (accumulated across row tiles)
+    g_dout  = sum_batch gy * z_L                 (z_L recomputed in VMEM)
+    g_din   = sum_batch delta_0 * x              (delta_0 = backprop through stages)
+    g_x     = delta_0 * d_in
+
+Activation I/O may be bf16; all in-VMEM compute is f32 (inputs are upcast on
+load, outputs downcast on the final store), so the serve engine's bf16 path
+gets the fused kernel without precision loss in the accumulations
+(coefficient/diag/bias grads are always written f32).
 
 Layout notes (TPU-native adaptation of the paper's CPU loop):
   * The feature axis rides the 128-wide lane dimension; batch rides sublanes.
@@ -27,7 +49,7 @@ has no TPU); the BlockSpec tiling is sized for v5e VMEM (~16 MiB budget).
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -39,11 +61,13 @@ __all__ = ["spm_stack_kernel_call", "spm_stack_bwd_kernel_call",
 _F32 = jnp.float32
 
 
-def _kernel(x_ref, cf_ref, o_ref, *, strides: Tuple[int, ...]):
-    """Kernel body: x_ref (bb, nt), cf_ref (L, nt//2, 4), o_ref (bb, nt)."""
-    z = x_ref[...].astype(_F32)
+def _apply_stages_fwd(z, cf_ref, strides, collect: bool = False):
+    """Run all stages on a resident f32 tile; optionally collect inputs."""
     bb, nt = z.shape
+    zs = []
     for ell, s in enumerate(strides):
+        if collect:
+            zs.append(z)
         g = nt // (2 * s)
         zr = z.reshape(bb, g, 2, s)
         cf = cf_ref[ell].astype(_F32)          # (nt//2, 4)
@@ -56,15 +80,47 @@ def _kernel(x_ref, cf_ref, o_ref, *, strides: Tuple[int, ...]):
         y0 = a * x0 + b * x1
         y1 = c * x0 + d * x1
         z = jnp.concatenate([y0, y1], axis=2).reshape(bb, nt)
+    return (z, zs) if collect else z
+
+
+def _kernel(x_ref, cf_ref, *rest,
+            strides: Tuple[int, ...],
+            has_din: bool, has_dout: bool, has_bias: bool):
+    """Kernel body: x_ref (bb, nt), cf_ref (L, nt//2, 4), o_ref (bb, nt).
+
+    Optional refs (in order, present when the matching flag is set):
+    din_ref / dout_ref / bias_ref, each (1, nt).  All compute is f32 in
+    VMEM regardless of the I/O dtype.
+    """
+    refs = list(rest)
+    din_ref = refs.pop(0) if has_din else None
+    dout_ref = refs.pop(0) if has_dout else None
+    bias_ref = refs.pop(0) if has_bias else None
+    (o_ref,) = refs
+
+    z = x_ref[...].astype(_F32)
+    if has_din:
+        z = z * din_ref[...].astype(_F32)       # (1, nt) broadcast over rows
+    z = _apply_stages_fwd(z, cf_ref, strides)
+    if has_dout:
+        z = z * dout_ref[...].astype(_F32)
+    if has_bias:
+        z = z + bias_ref[...].astype(_F32)
     o_ref[...] = z.astype(o_ref.dtype)
 
 
 def vmem_bytes(block_rows: int, n_tile: int, n_stages: int,
                dtype_bytes: int = 4) -> int:
-    """Estimated VMEM working set: in + out tiles (f32 compute copy) + coeffs."""
-    act = 2 * block_rows * n_tile * 4          # f32 compute copies
-    io = 2 * block_rows * n_tile * dtype_bytes
-    cf = n_stages * (n_tile // 2) * 4 * 4
+    """Estimated VMEM working set of the BACKWARD kernel — the binding one,
+    since forward and backward share ``block_rows``: the in-VMEM remat
+    keeps all L+1 stage-input tiles PLUS the delta tile resident in f32
+    until the reverse walk consumes them, on top of the x/gy/gx I/O tiles
+    and two coefficient slabs (coeffs in, gcf out).  The forward needs
+    strictly less (2 activation copies).  Diag/bias slabs are O(n_tile),
+    negligible."""
+    act = (n_stages + 2) * block_rows * n_tile * 4   # zs (L+1) + delta, f32
+    io = 3 * block_rows * n_tile * dtype_bytes       # x, gy, gx tiles
+    cf = 2 * n_stages * (n_tile // 2) * 4 * 4        # coeffs + gcf
     return act + io + cf
 
 
@@ -78,14 +134,24 @@ def pick_block_rows(n_tile: int, n_stages: int, dtype_bytes: int = 4,
     return bb
 
 
+def _vec_spec(n_tile: int) -> pl.BlockSpec:
+    """(1, n_tile) slab of an (1, n) vector, indexed by the feature tile."""
+    return pl.BlockSpec((1, n_tile), lambda i, j: (0, j))
+
+
 @functools.partial(jax.jit, static_argnames=("strides", "block_rows",
                                              "n_tile", "interpret"))
-def spm_stack_kernel_call(x: jax.Array, coeffs: jax.Array, *,
+def spm_stack_kernel_call(x: jax.Array, coeffs: jax.Array,
+                          d_in: Optional[jax.Array] = None,
+                          d_out: Optional[jax.Array] = None,
+                          bias: Optional[jax.Array] = None, *,
                           strides: Tuple[int, ...],
                           block_rows: int,
                           n_tile: int,
                           interpret: bool = False) -> jax.Array:
-    """pallas_call wrapper.  x: (B, n); coeffs: (L, n//2, 4).
+    """pallas_call wrapper.  x: (B, n); coeffs: (L, n//2, 4); optional
+    d_in/d_out/bias: (n,) — folded into the kernel (applied before the first
+    / after the last stage, in VMEM).
 
     Requires: B % block_rows == 0, n % n_tile == 0, and every stride s
     satisfies n_tile % (2*s) == 0 (pairs tile-local).  ops.py guarantees
@@ -105,14 +171,24 @@ def spm_stack_kernel_call(x: jax.Array, coeffs: jax.Array, *,
     cf_spec = pl.BlockSpec((L, n_tile // 2, 4), lambda i, j: (0, j, 0))
     o_spec = pl.BlockSpec((block_rows, n_tile), lambda i, j: (i, j))
 
+    operands = [x, coeffs]
+    in_specs = [x_spec, cf_spec]
+    for vec in (d_in, d_out, bias):
+        if vec is not None:
+            operands.append(vec.reshape(1, n))
+            in_specs.append(_vec_spec(n_tile))
+
     return pl.pallas_call(
-        functools.partial(_kernel, strides=strides),
+        functools.partial(_kernel, strides=strides,
+                          has_din=d_in is not None,
+                          has_dout=d_out is not None,
+                          has_bias=bias is not None),
         grid=grid,
-        in_specs=[x_spec, cf_spec],
+        in_specs=in_specs,
         out_specs=o_spec,
         out_shape=jax.ShapeDtypeStruct((B, n), x.dtype),
         interpret=interpret,
-    )(x, coeffs)
+    )(*operands)
 
 
 # ---------------------------------------------------------------------------
@@ -124,34 +200,57 @@ def spm_stack_kernel_call(x: jax.Array, coeffs: jax.Array, *,
 # inputs IN VMEM from the x tile (no HBM traffic for intermediates — the
 # Pallas analogue of remat), then walks the stages in reverse applying the
 # paper's closed forms: delta <- B_l^T delta (eqs. 12-13) and the rank-1 pair
-# accumulations for (a, b, c, d) grads (eq. 14).  Coefficient-gradient
-# partials are accumulated across batch tiles in the output block itself
-# (grid iterates feature-minor, so for a fixed feature tile the batch index
-# is the slow axis: init at i == 0, accumulate after).
+# accumulations for (a, b, c, d) grads (eq. 14).  The folded diag/bias grads
+# ride the same pass: g_bias/g_dout fall out of gy (and the recomputed z_L)
+# before the stage walk, g_din out of delta_0 after it.  All parameter-
+# gradient partials are accumulated across batch tiles in their output
+# blocks; the grid is therefore (feature, batch) with batch as the MINOR
+# axis, so for a fixed feature tile every batch step maps to the SAME
+# output block on consecutive grid iterations — the documented Pallas
+# reduction pattern (the block stays resident in VMEM between consecutive
+# revisits; accumulating across a non-minor axis would read back a flushed
+# buffer on real TPU): init at batch step 0, accumulate after.
 
-def _bwd_kernel(x_ref, cf_ref, gy_ref, gx_ref, gcf_ref, *,
-                strides: Tuple[int, ...]):
+def _bwd_kernel(x_ref, cf_ref, gy_ref, *rest,
+                strides: Tuple[int, ...],
+                has_din: bool, has_dout: bool, has_bias: bool):
+    refs = list(rest)
+    din_ref = refs.pop(0) if has_din else None
+    dout_ref = refs.pop(0) if has_dout else None
+    gx_ref = refs.pop(0)
+    gcf_ref = refs.pop(0)
+    gdin_ref = refs.pop(0) if has_din else None
+    gdout_ref = refs.pop(0) if has_dout else None
+    gbias_ref = refs.pop(0) if has_bias else None
+
     bb, nt = x_ref.shape
     L = len(strides)
 
-    # recompute stage inputs in VMEM (forward remat)
-    zs = []
-    z = x_ref[...].astype(_F32)
-    for ell, s in enumerate(strides):
-        zs.append(z)
-        g = nt // (2 * s)
-        zr = z.reshape(bb, g, 2, s)
-        cf = cf_ref[ell].astype(_F32)
-        a = cf[:, 0].reshape(g, 1, s)
-        b = cf[:, 1].reshape(g, 1, s)
-        c = cf[:, 2].reshape(g, 1, s)
-        d = cf[:, 3].reshape(g, 1, s)
-        x0 = zr[:, :, 0, :].reshape(bb, g, 1, s)
-        x1 = zr[:, :, 1, :].reshape(bb, g, 1, s)
-        z = jnp.concatenate([a * x0 + b * x1, c * x0 + d * x1],
-                            axis=2).reshape(bb, nt)
+    # recompute stage inputs in VMEM (forward remat), incl. the d_in fold
+    x_raw = x_ref[...].astype(_F32)
+    z0 = x_raw * din_ref[...].astype(_F32) if has_din else x_raw
+    z_last, zs = _apply_stages_fwd(z0, cf_ref, strides, collect=True)
 
-    delta = gy_ref[...].astype(_F32)
+    gy = gy_ref[...].astype(_F32)
+    i = pl.program_id(1)  # batch step: minor grid axis (see note above)
+
+    def _acc(ref, tile):
+        @pl.when(i == 0)
+        def _init():
+            ref[...] = tile
+
+        @pl.when(i > 0)
+        def _add():
+            ref[...] += tile
+
+    if has_bias:
+        _acc(gbias_ref, jnp.sum(gy, axis=0).reshape(1, nt))
+    if has_dout:
+        _acc(gdout_ref, jnp.sum(gy * z_last, axis=0).reshape(1, nt))
+        delta = gy * dout_ref[...].astype(_F32)
+    else:
+        delta = gy
+
     gcf_parts = []
     for ell in range(L - 1, -1, -1):
         s = strides[ell]
@@ -177,44 +276,69 @@ def _bwd_kernel(x_ref, cf_ref, gy_ref, gx_ref, gcf_ref, *,
         delta = jnp.concatenate([a * d0 + c * d1, b * d0 + d * d1],
                                 axis=2).reshape(bb, nt)
 
+    if has_din:
+        _acc(gdin_ref, jnp.sum(delta * x_raw, axis=0).reshape(1, nt))
+        delta = delta * din_ref[...].astype(_F32)
     gx_ref[...] = delta.astype(gx_ref.dtype)
-    gcf_tile = jnp.stack(gcf_parts[::-1], axis=0)  # (L, nt//2, 4)
-
-    i = pl.program_id(0)
-
-    @pl.when(i == 0)
-    def _init():
-        gcf_ref[...] = gcf_tile
-
-    @pl.when(i > 0)
-    def _acc():
-        gcf_ref[...] += gcf_tile
+    _acc(gcf_ref, jnp.stack(gcf_parts[::-1], axis=0))  # (L, nt//2, 4)
 
 
 @functools.partial(jax.jit, static_argnames=("strides", "block_rows",
-                                             "n_tile", "interpret"))
+                                             "n_tile", "has_bias",
+                                             "interpret"))
 def spm_stack_bwd_kernel_call(x: jax.Array, coeffs: jax.Array,
-                              gy: jax.Array, *,
+                              gy: jax.Array,
+                              d_in: Optional[jax.Array] = None,
+                              d_out: Optional[jax.Array] = None, *,
                               strides: Tuple[int, ...],
                               block_rows: int,
                               n_tile: int,
+                              has_bias: bool = False,
                               interpret: bool = False):
-    """Fused backward.  Returns (g_x (B, n), g_coeffs (L, n//2, 4) f32)."""
+    """Fused backward for (optionally) the full operator.
+
+    Always returns ``(g_x (B, n), g_coeffs (L, n//2, 4) f32)`` followed by
+    ``g_din (n,)`` if ``d_in`` was given, ``g_dout (n,)`` if ``d_out`` was
+    given, and ``g_bias (n,)`` if ``has_bias`` (the bias value itself is not
+    needed for its grad).  All parameter grads are f32.
+    """
     B, n = x.shape
     L = coeffs.shape[0]
     assert B % block_rows == 0 and n % n_tile == 0
-    grid = (B // block_rows, n // n_tile)
-    x_spec = pl.BlockSpec((block_rows, n_tile), lambda i, j: (i, j))
-    cf_spec = pl.BlockSpec((L, n_tile // 2, 4), lambda i, j: (0, j, 0))
-    gy_spec = pl.BlockSpec((block_rows, n_tile), lambda i, j: (i, j))
-    gx_spec = pl.BlockSpec((block_rows, n_tile), lambda i, j: (i, j))
-    gcf_spec = pl.BlockSpec((L, n_tile // 2, 4), lambda i, j: (0, j, 0))
-    return pl.pallas_call(
-        functools.partial(_bwd_kernel, strides=strides),
+    # batch is the MINOR grid axis: parameter-grad blocks (indexed by the
+    # feature tile only) are revisited on consecutive iterations, which is
+    # required for the in-block accumulation to be valid on real TPU.
+    grid = (n // n_tile, B // block_rows)
+    act_spec = pl.BlockSpec((block_rows, n_tile), lambda j, i: (i, j))
+    cf_spec = pl.BlockSpec((L, n_tile // 2, 4), lambda j, i: (0, j, 0))
+    vec_spec = pl.BlockSpec((1, n_tile), lambda j, i: (0, j))
+
+    operands = [x, coeffs, gy]
+    in_specs = [act_spec, cf_spec, act_spec]
+    for vec in (d_in, d_out):
+        if vec is not None:
+            operands.append(vec.reshape(1, n))
+            in_specs.append(vec_spec)
+
+    out_specs = [act_spec, cf_spec]
+    out_shape = [jax.ShapeDtypeStruct((B, n), x.dtype),
+                 jax.ShapeDtypeStruct((L, n // 2, 4), jnp.float32)]
+    for present in (d_in is not None, d_out is not None, has_bias):
+        if present:
+            out_specs.append(vec_spec)
+            out_shape.append(jax.ShapeDtypeStruct((1, n), jnp.float32))
+
+    out = pl.pallas_call(
+        functools.partial(_bwd_kernel, strides=strides,
+                          has_din=d_in is not None,
+                          has_dout=d_out is not None,
+                          has_bias=has_bias),
         grid=grid,
-        in_specs=[x_spec, cf_spec, gy_spec],
-        out_specs=[gx_spec, gcf_spec],
-        out_shape=[jax.ShapeDtypeStruct((B, n), x.dtype),
-                   jax.ShapeDtypeStruct((L, n // 2, 4), jnp.float32)],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
-    )(x, coeffs, gy)
+    )(*operands)
+    gx, gcf = out[0], out[1]
+    vec_grads = tuple(v.reshape(n) for v in out[2:])
+    return (gx, gcf) + vec_grads

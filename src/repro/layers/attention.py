@@ -41,6 +41,7 @@ class AttentionConfig:
     linear_impl: str = "dense"
     spm_stages: Optional[int] = None
     spm_backward: str = "autodiff"
+    spm_use_kernel: Optional[bool] = None
     q_chunk: int = 1024
     k_chunk: int = 1024
     param_dtype: Any = jnp.float32
@@ -49,7 +50,7 @@ class AttentionConfig:
         return LinearConfig(
             d_in=d_in, d_out=d_out, impl=self.linear_impl, use_bias=False,
             n_stages=self.spm_stages, backward=self.spm_backward,
-            param_dtype=self.param_dtype)
+            use_kernel=self.spm_use_kernel, param_dtype=self.param_dtype)
 
     @property
     def q_proj(self) -> LinearConfig:

@@ -20,13 +20,14 @@ class FFNConfig:
     linear_impl: str = "dense"
     spm_stages: Optional[int] = None
     spm_backward: str = "autodiff"
+    spm_use_kernel: Optional[bool] = None
     param_dtype: Any = jnp.float32
 
     def _lin(self, d_in: int, d_out: int) -> LinearConfig:
         return LinearConfig(
             d_in=d_in, d_out=d_out, impl=self.linear_impl, use_bias=False,
             n_stages=self.spm_stages, backward=self.spm_backward,
-            param_dtype=self.param_dtype)
+            use_kernel=self.spm_use_kernel, param_dtype=self.param_dtype)
 
     @property
     def up(self) -> LinearConfig:

@@ -27,13 +27,14 @@ class GRUConfig:
     linear_impl: str = "dense"
     spm_stages: Optional[int] = None
     spm_backward: str = "autodiff"
+    spm_use_kernel: Optional[bool] = None
     param_dtype: Any = jnp.float32
 
     def _lin(self, d_in: int, d_out: int, bias: bool) -> LinearConfig:
         return LinearConfig(
             d_in=d_in, d_out=d_out, impl=self.linear_impl, use_bias=bias,
             n_stages=self.spm_stages, backward=self.spm_backward,
-            param_dtype=self.param_dtype)
+            use_kernel=self.spm_use_kernel, param_dtype=self.param_dtype)
 
     @property
     def w(self) -> LinearConfig:    # input maps W_. (with bias b_.)

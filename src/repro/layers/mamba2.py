@@ -37,6 +37,7 @@ class Mamba2Config:
     linear_impl: str = "dense"
     spm_stages: Optional[int] = None
     spm_backward: str = "autodiff"
+    spm_use_kernel: Optional[bool] = None
     param_dtype: Any = jnp.float32
 
     @property
@@ -56,7 +57,7 @@ class Mamba2Config:
         return LinearConfig(
             d_in=d_in, d_out=d_out, impl=self.linear_impl, use_bias=False,
             n_stages=self.spm_stages, backward=self.spm_backward,
-            param_dtype=self.param_dtype)
+            use_kernel=self.spm_use_kernel, param_dtype=self.param_dtype)
 
     @property
     def in_proj(self) -> LinearConfig:

@@ -38,6 +38,7 @@ class MoEConfig:
     linear_impl: str = "dense"
     spm_stages: Optional[int] = None
     spm_backward: str = "autodiff"
+    spm_use_kernel: Optional[bool] = None
     param_dtype: Any = jnp.float32
 
     @property
@@ -46,6 +47,7 @@ class MoEConfig:
                          linear_impl=self.linear_impl,
                          spm_stages=self.spm_stages,
                          spm_backward=self.spm_backward,
+                         spm_use_kernel=self.spm_use_kernel,
                          param_dtype=self.param_dtype)
 
     @property
@@ -54,6 +56,7 @@ class MoEConfig:
                          linear_impl=self.linear_impl,
                          spm_stages=self.spm_stages,
                          spm_backward=self.spm_backward,
+                         spm_use_kernel=self.spm_use_kernel,
                          param_dtype=self.param_dtype)
 
     def capacity(self, group_tokens: int) -> int:

@@ -37,7 +37,7 @@ def lm_loss(params: dict, batch: dict, cfg: T.ModelConfig
     ce = jnp.sum(nll * mask) / denom
     loss = ce + MOE_AUX_COEF * aux
     metrics = {"loss": loss, "ce": ce, "aux": aux,
-               "ppl_proxy": jnp.exp(jnp.clip(ce, a_max=20.0))}
+               "ppl_proxy": jnp.exp(jnp.clip(ce, max=20.0))}
     return loss, metrics
 
 

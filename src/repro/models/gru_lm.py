@@ -26,6 +26,7 @@ class GRULMConfig:
     linear_impl: str = "dense"
     spm_stages: Optional[int] = None
     spm_backward: str = "custom"
+    spm_use_kernel: Optional[bool] = None
     param_dtype: Any = jnp.float32
 
     def gru_cfg(self) -> GRUConfig:
@@ -33,6 +34,7 @@ class GRULMConfig:
                          linear_impl=self.linear_impl,
                          spm_stages=self.spm_stages,
                          spm_backward=self.spm_backward,
+                         spm_use_kernel=self.spm_use_kernel,
                          param_dtype=self.param_dtype)
 
     def embed_cfg(self) -> EmbeddingConfig:

@@ -26,6 +26,7 @@ class MLPConfig:
     linear_impl: str = "dense"         # the swept knob
     spm_stages: Optional[int] = None
     spm_backward: str = "custom"
+    spm_use_kernel: Optional[bool] = None
     param_dtype: Any = jnp.float32
 
     @property
@@ -37,7 +38,8 @@ class MLPConfig:
         return LinearConfig(
             d_in=self.n_features, d_out=self.d_hidden,
             impl=self.linear_impl, n_stages=self.spm_stages,
-            backward=self.spm_backward, param_dtype=self.param_dtype)
+            backward=self.spm_backward, use_kernel=self.spm_use_kernel,
+            param_dtype=self.param_dtype)
 
     @property
     def head(self) -> LinearConfig:

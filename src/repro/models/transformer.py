@@ -81,6 +81,8 @@ class ModelConfig:
     linear_impl: str = "dense"
     spm_stages: Optional[int] = None
     spm_backward: str = "custom"
+    spm_use_kernel: Optional[bool] = None  # fused Pallas operator (tri-state:
+                                           # None=auto/on-TPU, True, False)
     # io
     input_kind: str = "tokens"       # "tokens" | "embeddings"
     tie_embeddings: bool = True
@@ -99,14 +101,16 @@ class ModelConfig:
             n_kv_heads=self.n_kv_heads, head_dim=self.head_dim,
             use_qk_norm=self.qk_norm, window=spec.window,
             linear_impl=self.linear_impl, spm_stages=self.spm_stages,
-            spm_backward=self.spm_backward, q_chunk=self.q_chunk,
+            spm_backward=self.spm_backward,
+            spm_use_kernel=self.spm_use_kernel, q_chunk=self.q_chunk,
             k_chunk=self.k_chunk, param_dtype=self.param_dtype)
 
     def ffn_cfg(self) -> FFNConfig:
         return FFNConfig(
             d_model=self.d_model, d_ff=self.d_ff,
             linear_impl=self.linear_impl, spm_stages=self.spm_stages,
-            spm_backward=self.spm_backward, param_dtype=self.param_dtype)
+            spm_backward=self.spm_backward,
+            spm_use_kernel=self.spm_use_kernel, param_dtype=self.param_dtype)
 
     def moe_cfg(self) -> MoEConfig:
         return MoEConfig(
@@ -115,14 +119,15 @@ class ModelConfig:
             capacity_factor=self.capacity_factor,
             shared_d_ff=self.shared_d_ff, linear_impl=self.linear_impl,
             spm_stages=self.spm_stages, spm_backward=self.spm_backward,
-            param_dtype=self.param_dtype)
+            spm_use_kernel=self.spm_use_kernel, param_dtype=self.param_dtype)
 
     def mamba_cfg(self) -> Mamba2Config:
         return Mamba2Config(
             d_model=self.d_model, d_state=self.ssm_state,
             d_head=self.ssm_head, chunk=self.ssm_chunk,
             linear_impl=self.linear_impl, spm_stages=self.spm_stages,
-            spm_backward=self.spm_backward, param_dtype=self.param_dtype)
+            spm_backward=self.spm_backward,
+            spm_use_kernel=self.spm_use_kernel, param_dtype=self.param_dtype)
 
     def shared_attn_cfg(self) -> AttentionConfig:
         return self.attn_cfg(LayerSpec(mixer="attn"))
@@ -131,7 +136,8 @@ class ModelConfig:
         return FFNConfig(
             d_model=self.d_model, d_ff=self.shared_attn_d_ff,
             linear_impl=self.linear_impl, spm_stages=self.spm_stages,
-            spm_backward=self.spm_backward, param_dtype=self.param_dtype)
+            spm_backward=self.spm_backward,
+            spm_use_kernel=self.spm_use_kernel, param_dtype=self.param_dtype)
 
     def embed_cfg(self) -> EmbeddingConfig:
         return EmbeddingConfig(

@@ -1,15 +1,20 @@
 """Pallas kernel allclose sweeps vs the pure-jnp oracle (kernels/ref.py).
 
-Shape x dtype sweep per instructions; interpret mode on CPU."""
+Shape x dtype sweep per instructions; interpret mode on CPU.  Covers the
+bare stage stack AND the full folded operator (diag + bias) forward and
+backward, plus the knob plumbing through spm_apply / linear_apply."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import SPMConfig, init_spm, spm_apply
+from repro.core import (SPMConfig, init_spm, kernel_eligible, spm_apply,
+                        use_fused_kernel)
+from repro.core.linear import LinearConfig, init_linear, linear_apply
 from repro.kernels.ops import plan_runs, spm_stack_fused
-from repro.kernels.ref import spm_stack_grads_ref, spm_stack_ref
+from repro.kernels.ref import (spm_full_ref, spm_stack_grads_ref,
+                               spm_stack_ref)
 from repro.kernels.spm_stack import (pick_block_rows, spm_stack_bwd_kernel_call,
                                      spm_stack_kernel_call, vmem_bytes)
 
@@ -80,12 +85,171 @@ def test_fused_wrapper_grads():
 
 
 def test_kernel_path_in_spm_apply():
-    cfg0 = SPMConfig(n=64, n_stages=6, variant="general")
+    cfg0 = SPMConfig(n=64, n_stages=6, variant="general", use_kernel=False)
     cfg1 = SPMConfig(n=64, n_stages=6, variant="general", use_kernel=True)
     p = init_spm(KEY, cfg0)
     x = jax.random.normal(KEY, (5, 64))
     np.testing.assert_allclose(spm_apply(p, x, cfg0),
                                spm_apply(p, x, cfg1), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# full folded operator: y = D_out (B_L...B_1) D_in x + bias
+# ---------------------------------------------------------------------------
+
+def _full_operands(n, L, dkey=7):
+    cf = 0.4 * jax.random.normal(jax.random.PRNGKey(1), (L, n // 2, 4))
+    d_in = 1.0 + 0.2 * jax.random.normal(jax.random.PRNGKey(dkey), (n,))
+    d_out = 1.0 + 0.2 * jax.random.normal(jax.random.PRNGKey(dkey + 1), (n,))
+    bias = 0.3 * jax.random.normal(jax.random.PRNGKey(dkey + 2), (n,))
+    return cf, d_in, d_out, bias
+
+
+FULL_SWEEP = [
+    # (B, n, strides, dtype).  The n=4096 case plans to TWO runs (stride
+    # 2048 has pair span 4096 > MAX_TILE): d_in folds into run 0 and
+    # d_out/bias into run 1, exercising the boundary split.
+    (8, 128, (1, 2, 4, 8, 16, 64), jnp.float32),
+    (5, 256, (1, 2, 4, 8, 16, 32, 64, 128), jnp.float32),
+    (8, 128, (1, 2, 4, 8, 16, 64), jnp.bfloat16),
+    (4, 4096, (1, 2, 4, 8, 1024, 2048), jnp.float32),
+]
+
+
+def test_full_sweep_has_multi_run_case():
+    """Guard: the sweep's big case really is a multi-run plan (so the
+    boundary folding and the per-run backward routing stay covered)."""
+    assert len(plan_runs(4096, (1, 2, 4, 8, 1024, 2048))) == 2
+
+
+@pytest.mark.parametrize("B,n,strides,dtype", FULL_SWEEP)
+def test_fused_full_operator_matches_ref(B, n, strides, dtype):
+    cf, d_in, d_out, bias = _full_operands(n, len(strides))
+    x = jax.random.normal(KEY, (B, n)).astype(dtype)
+    y = spm_stack_fused(x, cf, strides, d_in=d_in, d_out=d_out, bias=bias)
+    assert y.dtype == dtype
+    ref = spm_full_ref(x.astype(jnp.float32), cf, tuple(strides),
+                       d_in=d_in, d_out=d_out, bias=bias)
+    tol = 1e-4 if dtype == jnp.float32 else 4e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("B,n,strides,dtype", FULL_SWEEP)
+def test_fused_full_operator_grads_match_autodiff(B, n, strides, dtype):
+    """custom_vjp of the FULL fused operator == autodiff on the unfused
+    reference, in every operand: x, coeffs, d_in, d_out, bias — incl. the
+    bf16-activation backward (grads vs a bf16-quantized-forward oracle;
+    param grads stay f32 in-kernel)."""
+    cf, d_in, d_out, bias = _full_operands(n, len(strides))
+    x = jax.random.normal(KEY, (B, n)).astype(dtype)
+
+    def f(x, cf, d_in, d_out, bias):
+        y = spm_stack_fused(x, cf, strides, d_in=d_in, d_out=d_out,
+                            bias=bias)
+        return jnp.sum(y.astype(jnp.float32) ** 2)
+
+    def r(x, cf, d_in, d_out, bias):
+        y = spm_full_ref(x.astype(jnp.float32), cf, tuple(strides),
+                         d_in=d_in, d_out=d_out, bias=bias)
+        return jnp.sum(y ** 2)
+
+    g = jax.grad(f, argnums=(0, 1, 2, 3, 4))(x, cf, d_in, d_out, bias)
+    gr = jax.grad(r, argnums=(0, 1, 2, 3, 4))(x, cf, d_in, d_out, bias)
+    # bf16: the fused path quantizes the activation I/O the f32 oracle
+    # doesn't; grads agree to bf16 resolution
+    tol = 1e-4 if dtype == jnp.float32 else 6e-2
+    for a, b in zip(g, gr):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("variant", ["general", "rotation"])
+def test_spm_apply_full_fused_parity(variant):
+    """spm_apply(use_kernel=True) == unfused path: outputs AND grads (the
+    rotation variant exercises the theta -> coeffs chain outside the
+    kernel)."""
+    cfg0 = SPMConfig(n=64, n_stages=6, variant=variant, backward="custom",
+                     use_kernel=False)
+    cfg1 = SPMConfig(n=64, n_stages=6, variant=variant, backward="custom",
+                     use_kernel=True)
+    p = init_spm(KEY, cfg0)
+    p["d_in"] = 1 + 0.2 * jax.random.normal(jax.random.PRNGKey(11), (64,))
+    p["d_out"] = 1 + 0.2 * jax.random.normal(jax.random.PRNGKey(12), (64,))
+    p["bias"] = 0.3 * jax.random.normal(jax.random.PRNGKey(13), (64,))
+    x = jax.random.normal(KEY, (5, 64))
+    np.testing.assert_allclose(spm_apply(p, x, cfg0), spm_apply(p, x, cfg1),
+                               atol=1e-5)
+    loss = lambda cfg: (lambda p, x: jnp.sum(spm_apply(p, x, cfg) ** 2))
+    g0 = jax.grad(loss(cfg0), argnums=(0, 1))(p, x)
+    g1 = jax.grad(loss(cfg1), argnums=(0, 1))(p, x)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-4)
+
+
+def test_spm_apply_fused_bf16_activations():
+    """bf16 activation I/O with f32 in-VMEM compute (serve engine path)."""
+    cfg0 = SPMConfig(n=128, n_stages=7, variant="general", use_kernel=False)
+    cfg1 = SPMConfig(n=128, n_stages=7, variant="general", use_kernel=True)
+    p = init_spm(KEY, cfg0)
+    p["bias"] = 0.3 * jax.random.normal(jax.random.PRNGKey(14), (128,))
+    x = jax.random.normal(KEY, (9, 128)).astype(jnp.bfloat16)
+    y0 = spm_apply(p, x, cfg0)
+    y1 = spm_apply(p, x, cfg1)
+    assert y1.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(y0, np.float32),
+                               np.asarray(y1, np.float32),
+                               atol=4e-2, rtol=4e-2)
+
+
+def test_linear_apply_fused_parity_rectangular():
+    """Fused knob through LinearConfig, incl. the pad/slice rectangular
+    path: outputs and parameter grads match the unfused composition."""
+    mk = lambda uk: LinearConfig(d_in=48, d_out=32, impl="spm_general",
+                                 backward="custom", use_kernel=uk)
+    lc0, lc1 = mk(False), mk(True)
+    p = init_linear(KEY, lc0)
+    p["bias"] = 0.1 * jax.random.normal(jax.random.PRNGKey(15), (lc0.n,))
+    x = jax.random.normal(KEY, (6, 48))
+    np.testing.assert_allclose(linear_apply(p, x, lc0),
+                               linear_apply(p, x, lc1), atol=1e-5)
+    g0 = jax.grad(lambda p: jnp.sum(linear_apply(p, x, lc0) ** 2))(p)
+    g1 = jax.grad(lambda p: jnp.sum(linear_apply(p, x, lc1) ** 2))(p)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-4)
+
+
+def test_use_kernel_fallback_rules():
+    """Tri-state resolution: forced-on still falls back for odd n,
+    permutation pairings, and custom_inverse; auto is off on CPU."""
+    assert not use_fused_kernel(
+        SPMConfig(n=9, n_stages=3, schedule="random", use_kernel=True))
+    assert not use_fused_kernel(
+        SPMConfig(n=16, n_stages=4, schedule="random", use_kernel=True))
+    assert not use_fused_kernel(
+        SPMConfig(n=16, n_stages=4, variant="rotation",
+                  backward="custom_inverse", use_kernel=True))
+    # sharded two_level: stays on the partitionable XLA path until the
+    # kernel supports cross-shard collective stages
+    assert not use_fused_kernel(
+        SPMConfig(n=64, n_stages=6, schedule="two_level", n_shards=4,
+                  use_kernel=True))
+    assert use_fused_kernel(
+        SPMConfig(n=64, n_stages=6, schedule="two_level", n_shards=1,
+                  use_kernel=True))
+    assert kernel_eligible(SPMConfig(n=16, n_stages=4))
+    auto = SPMConfig(n=16, n_stages=4)
+    if jax.default_backend() != "tpu":
+        assert not use_fused_kernel(auto)
+    assert not use_fused_kernel(
+        SPMConfig(n=16, n_stages=4, use_kernel=False))
+    # odd-n fallback still computes correctly end to end
+    cfg = SPMConfig(n=9, n_stages=3, schedule="random", use_kernel=True)
+    p = init_spm(KEY, cfg)
+    y = spm_apply(p, jax.random.normal(KEY, (4, 9)), cfg)
+    assert y.shape == (4, 9) and bool(jnp.all(jnp.isfinite(y)))
 
 
 def test_plan_runs_covers_schedule():
