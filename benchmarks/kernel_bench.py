@@ -1,5 +1,7 @@
 """SPM operator scaling benchmark (paper §5 complexity claim) + kernel
-traffic model + fused-vs-unfused end-to-end ``linear_apply``.
+traffic model + fused-vs-unfused end-to-end ``linear_apply``, including the
+RECTANGULAR hot shapes (fused q/k/v, d->4d FFN up/down, LM head) that the
+rectangular-native kernel serves without XLA pad/slice.
 
 Wall-clock on this CPU container: dense O(n^2) matmul vs SPM O(nL)
 composition at growing width (the paper's crossover, Tables 1-2 compute
@@ -30,8 +32,8 @@ from benchmarks.common import emit, time_step
 from repro.core import SPMConfig, init_spm, spm_apply
 from repro.core.linear import LinearConfig, init_linear, linear_apply
 from repro.core.pairings import default_n_stages
-from repro.kernels.ops import plan_runs
-from repro.kernels.spm_stack import pick_block_rows, vmem_bytes
+from repro.kernels.ops import pick_block_rows_for_plan, plan_runs
+from repro.kernels.spm_stack import vmem_bytes
 
 KEY = jax.random.PRNGKey(0)
 
@@ -64,15 +66,24 @@ def bench_linear_apply(n: int, batch: int = 64):
 
     Off-TPU the fused variant runs the kernels in interpret mode —
     validation wall-clock only."""
+    return bench_linear_rect(n, n, batch)
+
+
+def bench_linear_rect(d_in: int, d_out: int, batch: int = 64):
+    """linear_apply for an arbitrary (d_in, d_out), fused vs unfused.  The
+    fused path is rectangular-NATIVE (in-kernel zero-fill / partial final
+    store); the unfused path pays the XLA pad + slice around the square
+    n-wide composition."""
+    n = LinearConfig(d_in=d_in, d_out=d_out, impl="spm_general").n
     L = default_n_stages(n)
-    mk = lambda uk: LinearConfig(d_in=n, d_out=n, impl="spm_general",
+    mk = lambda uk: LinearConfig(d_in=d_in, d_out=d_out, impl="spm_general",
                                  n_stages=L, backward="custom",
                                  use_kernel=uk)
     cfg0, cfg1 = mk(False), mk(True)
     p = init_linear(KEY, cfg0)
-    x = jax.random.normal(KEY, (batch, n))
+    x = jax.random.normal(KEY, (batch, d_in))
 
-    res = {}
+    res = {"n": n, "L": L}
     for tag, cfg in (("unfused", cfg0), ("fused", cfg1)):
         f = jax.jit(lambda x, cfg=cfg: linear_apply(p, x, cfg))
         g = jax.jit(jax.grad(
@@ -82,44 +93,85 @@ def bench_linear_apply(n: int, batch: int = 64):
     return res
 
 
-def traffic_model(n: int, batch: int, L: int) -> dict:
-    """HBM bytes per FULL-operator call (f32 activations).
+# Rectangular hot shapes of the reproduced architectures (smoke-scaled
+# proportions): every one of these was pad-to-n + slice before the
+# rectangular-native kernel landed.
+RECT_SHAPES = [
+    ("qkv_fused", 256, 768),    # d -> 3d fused q/k/v projection
+    ("ffn_up", 256, 1024),      # d -> 4d FFN up-projection
+    ("ffn_down", 1024, 256),    # 4d -> d FFN down-projection
+    ("lm_head", 384, 2048),     # d -> vocab head (d_in << d_out)
+]
 
-    unfused — per-stage XLA composition with separate diag/bias: L+1
-    round-trips for the stage chain plus one each for d_in, d_out, bias
-    (L+4 total, each a read+write of the activation).
-    fused — 1 read + 1 write per boundary run of the kernel plan, diag and
-    bias folded into the boundary runs (plus the O(nL) coefficient reads,
-    which are batch-independent)."""
+
+def rect_traffic(d_in: int, d_out: int, n: int, batch: int, L: int) -> dict:
+    """HBM bytes for a rectangular FULL-operator call (f32 activations).
+
+    unfused — XLA pad (read d_in, write n — only issued when d_in < n) +
+    the L+4 square round-trips + output slice (read n, write d_out — only
+    when d_out < n; n = even_ceil(max) makes one side exactly n).
+    fused — reads batch*d_in once, writes batch*d_out once, plus one
+    n-wide round-trip per INTERIOR run boundary of the kernel plan (and
+    the O(nL) coefficient reads)."""
+    strides = tuple(
+        SPMConfig(n=n, n_stages=L, variant="general").pairing.strides())
+    n_runs = len(plan_runs(n, strides))
+    act_n = batch * n * 4
+    act_in = batch * d_in * 4
+    act_out = batch * d_out * 4
+    coeff_bytes = L * (n // 2) * 16 + 3 * n * 4
+    unfused = (L + 4) * 2 * act_n
+    if d_in < n:
+        unfused += act_in + act_n     # pad pass
+    if d_out < n:
+        unfused += act_n + act_out    # slice pass
+    fused = act_in + act_out + (n_runs - 1) * 2 * act_n + coeff_bytes
+    return {"n_runs": n_runs, "coeff_bytes": coeff_bytes,
+            "unfused_bytes": unfused, "fused_bytes": fused,
+            "reduction": unfused / fused}
+
+
+def traffic_model(n: int, batch: int, L: int,
+                  kernel_rows: int | None = None) -> dict:
+    """HBM bytes per SQUARE full-operator call (f32 activations).
+
+    Byte counts come from ``rect_traffic(n, n, ...)`` — the square
+    operator is the d_in == d_out == n special case (no pad/slice passes,
+    fused = n_runs round-trips + coefficients), so the two BENCH sections
+    share one accounting.  Adds the round-trip counts, the pre-fold
+    ``kernel_only`` baseline (stage stack fused, diag/bias still separate
+    XLA passes), and the block_rows/VMEM configuration spm_stack_fused
+    actually runs (per-run budgeting — ops.pick_block_rows_for_plan) at
+    ``kernel_rows`` rows: the batch the fused linear rows of the SAME
+    record are timed with, which caps the row block."""
     act = batch * n * 4
     strides = tuple(
         SPMConfig(n=n, n_stages=L, variant="general").pairing.strides())
     runs = plan_runs(n, strides)
-    n_runs = len(runs)
-    coeff_bytes = L * (n // 2) * 16 + 3 * n * 4    # (a,b,c,d) + diag/bias
-    unfused = (L + 4) * 2 * act
-    kernel_only = (n_runs + 3) * 2 * act + coeff_bytes  # pre-PR: diag/bias out
-    fused = n_runs * 2 * act + coeff_bytes
-    # block_rows/vmem describe the configuration spm_stack_fused actually
-    # runs: sized against the plan's LARGEST tile (matches ops.py)
-    max_tile = max(t for _, t in runs)
-    br = pick_block_rows(max_tile, L)
+    t = rect_traffic(n, n, n, batch, L)
+    n_runs = t["n_runs"]
+    kernel_only = (n_runs + 3) * 2 * act + t["coeff_bytes"]
+    max_tile = max(tile for _, tile in runs)
+    br = pick_block_rows_for_plan(runs, kernel_rows or batch, 4)
     return {"unfused_roundtrips": L + 4,
             "fused_roundtrips": n_runs,
             "n_runs": n_runs,
-            "unfused_bytes": unfused,
+            "unfused_bytes": t["unfused_bytes"],
             "kernel_only_bytes": kernel_only,
-            "fused_bytes": fused,
-            "reduction": unfused / fused,
-            "reduction_vs_kernel_only": kernel_only / fused,
+            "fused_bytes": t["fused_bytes"],
+            "reduction": t["reduction"],
+            "reduction_vs_kernel_only": kernel_only / t["fused_bytes"],
             "max_tile": max_tile,
             "block_rows": br,
-            "vmem_bytes": vmem_bytes(br, max_tile, L)}
+            "vmem_bytes": max(vmem_bytes(br, tile, len(rs))
+                              for rs, tile in runs)}
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: one width, small batches")
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--linear-batch", type=int, default=64,
                     help="batch for the end-to-end linear_apply rows "
@@ -130,6 +182,12 @@ def main(argv=None) -> None:
                     help="traffic model only (no interpret-mode wall-clock)")
     args = ap.parse_args(argv)
     widths = (512, 1024, 2048, 4096) if args.full else (256, 512, 1024)
+    rect_shapes = RECT_SHAPES
+    if args.smoke:
+        widths = (256,)
+        rect_shapes = [(t, i // 2, o // 2) for t, i, o in RECT_SHAPES]
+        args.batch = min(args.batch, 64)
+        args.linear_batch = min(args.linear_batch, 16)
     backend = jax.default_backend()
 
     print(f"# SPM vs dense scaling + fused-operator bench (backend={backend})")
@@ -139,7 +197,8 @@ def main(argv=None) -> None:
     records = []
     for n in widths:
         r = bench_width(n, args.batch)
-        t = traffic_model(n, args.batch, r["L"])
+        t = traffic_model(n, args.batch, r["L"],
+                          kernel_rows=args.linear_batch)
         rec = {"n": n, **r, "traffic": t}
         if not args.skip_fused_timing:
             rec.update(bench_linear_apply(n, args.linear_batch))
@@ -157,6 +216,35 @@ def main(argv=None) -> None:
                  f"unfused={rec['linear_fwd_unfused_us']:.0f}us "
                  f"(interpret={backend != 'tpu'})")
 
+    # rectangular hot shapes: fused (rectangular-native kernel) vs unfused
+    # (XLA pad + square composition + slice), fwd and fwd+bwd
+    print("# rectangular hot shapes (d_in,d_out,n,L,"
+          "fwd_unfused_us,fwd_fused_us,fwdbwd_unfused_us,fwdbwd_fused_us,"
+          "hbm_reduction)")
+    rect_records = []
+    for tag, d_in, d_out in rect_shapes:
+        rr = {"shape": tag, "d_in": d_in, "d_out": d_out}
+        if not args.skip_fused_timing:
+            rr.update(bench_linear_rect(d_in, d_out, args.linear_batch))
+        else:
+            rr["n"] = LinearConfig(d_in=d_in, d_out=d_out,
+                                   impl="spm_general").n
+            rr["L"] = default_n_stages(rr["n"])
+        rr["traffic"] = rect_traffic(d_in, d_out, rr["n"],
+                                     args.linear_batch, rr["L"])
+        rect_records.append(rr)
+        if not args.skip_fused_timing:
+            print(f"{tag},{d_in},{d_out},{rr['n']},{rr['L']},"
+                  f"{rr['linear_fwd_unfused_us']:.0f},"
+                  f"{rr['linear_fwd_fused_us']:.0f},"
+                  f"{rr['linear_fwdbwd_unfused_us']:.0f},"
+                  f"{rr['linear_fwdbwd_fused_us']:.0f},"
+                  f"{rr['traffic']['reduction']:.1f}x")
+            emit(f"kernel/rect_{tag}/linear_fused_fwd",
+                 rr["linear_fwd_fused_us"],
+                 f"unfused={rr['linear_fwd_unfused_us']:.0f}us "
+                 f"(interpret={backend != 'tpu'})")
+
     if args.out:
         payload = {
             "generated_by": "benchmarks/kernel_bench.py",
@@ -166,6 +254,7 @@ def main(argv=None) -> None:
             "note": ("fused wall-clock is interpret-mode (validation only) "
                      "off-TPU; the traffic model carries the HBM claim"),
             "results": records,
+            "rect_results": rect_records,
         }
         with open(args.out, "w") as f:
             json.dump(payload, f, indent=2)

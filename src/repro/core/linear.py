@@ -8,9 +8,17 @@ it) selecting how projection linears are parameterized:
   * "spm_rotation" — SPM with orthogonal rotation blocks (paper §3.1).
 
 Rectangular handling (DESIGN.md §5 — beyond the paper, which defines SPM for
-square maps only): the SPM operates over ``n = even_ceil(max(d_in, d_out))``;
-inputs are zero-padded up to n, outputs sliced down to d_out.  For
-``d_in == d_out`` (even) this reduces exactly to the paper's operator.
+square maps only): the SPM operates over ``n = even_ceil(max(d_in, d_out))``
+and ``spm_apply`` is told the true I/O widths (``in_width=d_in``,
+``out_width=d_out``).  On the fused Pallas path the zero-fill to n happens
+IN VMEM inside the first kernel run (iota mask, no XLA ``jnp.pad``) and the
+last run computes/stores only the d_out output columns (no dead columns, no
+output slice) — the rectangular hot shapes (q/k/v, the d -> 4d FFN
+up-projection, the LM head) keep the kernel's one-HBM-round-trip-per-run
+property, and the input cotangent comes back ``(..., d_in)``.  The XLA
+composition fallback realizes the same semantics with an explicit pad +
+slice around the square operator.  For ``d_in == d_out`` (even) both paths
+reduce exactly to the paper's operator.
 
 ``use_kernel`` selects the fused Pallas full-operator path (tri-state:
 None = auto/on-TPU, True = force, False = off; see core/spm.py for the
@@ -98,17 +106,10 @@ def linear_apply(params: dict, x: jax.Array, cfg: LinearConfig) -> jax.Array:
         if cfg.use_bias:
             y = y + params["b"].astype(x.dtype)
         return y
-    scfg = cfg.spm_config()
-    n = scfg.n
     if x.shape[-1] != cfg.d_in:
         raise ValueError(f"expected (..., {cfg.d_in}), got {x.shape}")
-    if cfg.d_in < n:
-        pad = [(0, 0)] * (x.ndim - 1) + [(0, n - cfg.d_in)]
-        x = jnp.pad(x, pad)
-    y = spm_mod.spm_apply(params, x, scfg)
-    if cfg.d_out < n:
-        y = y[..., : cfg.d_out]
-    return y
+    return spm_mod.spm_apply(params, x, cfg.spm_config(),
+                             in_width=cfg.d_in, out_width=cfg.d_out)
 
 
 def linear_param_count(cfg: LinearConfig) -> int:

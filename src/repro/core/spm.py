@@ -410,8 +410,27 @@ def use_fused_kernel(cfg: SPMConfig, sched: Optional[Schedule] = None) -> bool:
     return jax.default_backend() == "tpu"
 
 
-def spm_apply(params: dict, x: jax.Array, cfg: SPMConfig) -> jax.Array:
-    """Full SPM forward: y = D_out * (B_L ... B_1) * D_in * x + bias."""
+def spm_apply(params: dict, x: jax.Array, cfg: SPMConfig, *,
+              in_width: Optional[int] = None,
+              out_width: Optional[int] = None) -> jax.Array:
+    """Full SPM forward: y = D_out * (B_L ... B_1) * D_in * x + bias.
+
+    ``in_width`` / ``out_width`` embed a rectangular map (d_in -> d_out,
+    each <= n) in the square operator: x is (..., in_width), treated as
+    zero-padded to n, and only the first ``out_width`` output columns are
+    returned.  On the fused kernel path the padding/slicing happens inside
+    the kernel boundary runs (no XLA pad/slice, no dead output columns);
+    the XLA composition fallback realizes the same semantics with an
+    explicit pad + slice around the square operator.
+    """
+    n = cfg.n
+    if in_width == n:
+        in_width = None
+    if out_width == n:
+        out_width = None
+    expect = in_width if in_width is not None else n
+    if x.shape[-1] != expect:
+        raise ValueError(f"expected (..., {expect}), got {x.shape}")
     sched = cfg.pairing
     if use_fused_kernel(cfg, sched):
         # Fused full-operator path: the diag multiplies and bias add are
@@ -426,7 +445,11 @@ def spm_apply(params: dict, x: jax.Array, cfg: SPMConfig) -> jax.Array:
             x, stage_coeffs(params, cfg), sched.strides(),
             d_in=params["d_in"] if cfg.use_diag else None,
             d_out=params["d_out"] if cfg.use_diag else None,
-            bias=params["bias"] if cfg.use_bias else None)
+            bias=params["bias"] if cfg.use_bias else None,
+            in_width=in_width, out_width=out_width)
+    if in_width is not None:
+        pad = [(0, 0)] * (x.ndim - 1) + [(0, n - in_width)]
+        x = jnp.pad(x, pad)
     coeffs = stage_coeffs(params, cfg).astype(x.dtype)
     res_scales = params.get("res_scale")
     if res_scales is None:
@@ -442,6 +465,8 @@ def spm_apply(params: dict, x: jax.Array, cfg: SPMConfig) -> jax.Array:
         z = z * params["d_out"].astype(x.dtype)
     if cfg.use_bias:
         z = z + params["bias"].astype(x.dtype)
+    if out_width is not None:
+        z = z[..., :out_width]
     return z
 
 

@@ -29,6 +29,15 @@ to the last axis of ``x`` with:
   * **batch/tile padding** — leading dims are flattened; rows are padded to
     the row-block so arbitrary batch sizes work (padded rows carry zero
     cotangents, so the batch-summed parameter grads are unaffected).
+  * **rectangular-native boundaries** — ``in_width`` / ``out_width`` declare
+    the true I/O widths of a rectangular linear (d_in -> d_out around the
+    square n-wide operator).  The FIRST run of the plan reads only the
+    (…, in_width) input and zero-fills to n in VMEM (iota mask, no XLA
+    ``jnp.pad``); the LAST run computes and stores only the ``out_width``
+    output columns (shrunk forward grid + masked partial-tile store).  The
+    custom_vjp hands the input cotangent back as (…, in_width), and the
+    masked loads make padded lanes contribute exact zeros to the
+    coefficient/diag/bias grads.  Interior intermediates stay n-wide.
   * **bf16 I/O** — activations may be bf16; in-VMEM compute is f32 and all
     parameter grads are returned f32 (cast back to the param dtype here).
 
@@ -47,7 +56,8 @@ import jax.numpy as jnp
 
 from repro.kernels import spm_stack as K
 
-__all__ = ["spm_stack_fused", "plan_runs", "default_interpret"]
+__all__ = ["spm_stack_fused", "plan_runs", "pick_block_rows_for_plan",
+           "default_interpret"]
 
 MAX_TILE = 2048  # lane-dim tile cap: 16 VREG lanes x 128; VMEM-comfortable
 
@@ -122,6 +132,18 @@ def _pad_rows(x2: jax.Array, block_rows: int) -> Tuple[jax.Array, int]:
     return x2, rows
 
 
+def pick_block_rows_for_plan(runs, n_rows: int, dtype_bytes: int) -> int:
+    """One uniform row-block for every run of a plan (uniform row padding),
+    budgeted per run: run r only keeps its OWN L_r + 2 tiles of its OWN
+    width resident, so the binding constraint is the min over runs — not
+    the old uniform (max_tile, total L) worst case, which under-sized the
+    row block for every multi-run plan."""
+    br = min(K.pick_block_rows(n_tile, len(run_strides),
+                               dtype_bytes=dtype_bytes)
+             for run_strides, n_tile in runs)
+    return min(br, max(8, 1 << (n_rows - 1).bit_length()))
+
+
 # ---------------------------------------------------------------------------
 # full-operator custom_vjp core
 # ---------------------------------------------------------------------------
@@ -154,17 +176,20 @@ def _boundary_kw(r: int, n_runs: int, flags, d_in, d_out, bias) -> dict:
     return kw
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9, 10))
 def _fused_core(x2, coeffs, d_in, d_out, bias,
-                strides, flags, block_rows, interpret):
-    """x2: (B, n) row-major; coeffs: (L, n//2, 4); d_in/d_out/bias: (n,)."""
+                strides, flags, block_rows, interpret, in_width, out_width):
+    """x2: (B, in_width or n) row-major; coeffs: (L, n//2, 4);
+    d_in/d_out/bias: (n,).  Returns (B, out_width or n)."""
     return _fused_fwd(x2, coeffs, d_in, d_out, bias,
-                      strides, flags, block_rows, interpret)[0]
+                      strides, flags, block_rows, interpret,
+                      in_width, out_width)[0]
 
 
 def _fused_fwd(x2, coeffs, d_in, d_out, bias,
-               strides, flags, block_rows, interpret):
-    runs = plan_runs(x2.shape[-1], strides)
+               strides, flags, block_rows, interpret, in_width, out_width):
+    n = 2 * coeffs.shape[1]
+    runs = plan_runs(n, strides)
     zs = []
     z = x2
     off = 0
@@ -174,15 +199,18 @@ def _fused_fwd(x2, coeffs, d_in, d_out, bias,
         z = K.spm_stack_kernel_call(
             z, cf, strides=run_strides, block_rows=block_rows,
             n_tile=n_tile, interpret=interpret,
+            in_width=in_width if r == 0 else None,
+            out_width=out_width if r == len(runs) - 1 else None,
             **_boundary_kw(r, len(runs), flags, d_in, d_out, bias))
         off += len(run_strides)
     return z, (tuple(zs), coeffs, d_in, d_out, bias)
 
 
-def _fused_bwd(strides, flags, block_rows, interpret, res, gy):
+def _fused_bwd(strides, flags, block_rows, interpret, in_width, out_width,
+               res, gy):
     zs, coeffs, d_in, d_out, bias = res
     has_din, has_dout, has_bias = flags
-    n = gy.shape[-1]
+    n = 2 * coeffs.shape[1]
     runs = plan_runs(n, strides)
     offsets = _run_offsets(runs)
     delta = gy
@@ -197,7 +225,10 @@ def _fused_bwd(strides, flags, block_rows, interpret, res, gy):
             d_in=d_in if (r == 0 and has_din) else None,
             d_out=d_out if (last and has_dout) else None,
             strides=run_strides, block_rows=block_rows, n_tile=n_tile,
-            has_bias=last and has_bias, interpret=interpret)
+            has_bias=last and has_bias,
+            in_width=in_width if r == 0 else None,
+            out_width=out_width if last else None,
+            interpret=interpret)
         delta, gcf = out[0], out[1]
         vec = list(out[2:])
         if r == 0 and has_din:
@@ -208,6 +239,11 @@ def _fused_bwd(strides, flags, block_rows, interpret, res, gy):
             g_bias = vec.pop(0)
         g_cf_parts[r] = gcf
     g_coeffs = jnp.concatenate(g_cf_parts, axis=0).astype(coeffs.dtype)
+    if in_width is not None and delta.shape[-1] != in_width:
+        # the kernel widened g_x to n (narrow output blocks would alias
+        # clamped out-of-bounds stores — see spm_stack_bwd_kernel_call);
+        # hand the custom_vjp its contract shape back
+        delta = delta[:, :in_width]
 
     def _vg(g, like):
         if g is None:
@@ -226,29 +262,41 @@ def spm_stack_fused(x: jax.Array, coeffs: jax.Array,
                     d_in: Optional[jax.Array] = None,
                     d_out: Optional[jax.Array] = None,
                     bias: Optional[jax.Array] = None,
+                    in_width: Optional[int] = None,
+                    out_width: Optional[int] = None,
                     block_rows: int | None = None,
                     interpret: bool | None = None) -> jax.Array:
     """Fused SPM operator over the last axis of ``x``.
 
-    x: (..., n) with n divisible by 2*s for every stride; coeffs
-    (L, n//2, 4); optional d_in/d_out/bias: (n,) folded into the boundary
-    runs.  Differentiable in x, coeffs, and the diag/bias operands
-    (closed-form VJP); with all three omitted this is exactly the bare
-    stage stack (back-compat entry).
+    x: (..., in_width or n) with n = 2 * coeffs.shape[1] divisible by 2*s
+    for every stride; coeffs (L, n//2, 4); optional d_in/d_out/bias: (n,)
+    folded into the boundary runs.  ``in_width`` / ``out_width`` (each
+    <= n) make the operator rectangular-native: the input is zero-filled
+    to n inside the first run and only ``out_width`` output columns are
+    computed/stored by the last, with the input cotangent returned as
+    (..., in_width).  Differentiable in x, coeffs, and the diag/bias
+    operands (closed-form VJP); with everything optional omitted this is
+    exactly the bare square stage stack (back-compat entry).
     """
     strides = tuple(int(s) for s in strides)
-    n = x.shape[-1]
+    n = 2 * coeffs.shape[1]
+    if in_width == n:
+        in_width = None
+    if out_width == n:
+        out_width = None
+    for w, name in ((in_width, "in_width"), (out_width, "out_width")):
+        if w is not None and not 0 < w <= n:
+            raise ValueError(f"{name}={w} outside (0, {n}]")
+    expect = in_width if in_width is not None else n
+    if x.shape[-1] != expect:
+        raise ValueError(f"expected (..., {expect}), got {x.shape}")
     if interpret is None:
         interpret = default_interpret()
     x2, lead = _flatten_rows(x)
     if block_rows is None:
-        # size the row block against the LARGEST run tile so every run of
-        # the plan fits the VMEM budget (smaller-tile runs just run with a
-        # conservative block; one block_rows keeps the padding uniform).
-        max_tile = max(t for _, t in plan_runs(n, strides))
-        block_rows = K.pick_block_rows(max_tile, len(strides),
-                                       dtype_bytes=x.dtype.itemsize)
-        block_rows = min(block_rows, max(8, 1 << (x2.shape[0] - 1).bit_length()))
+        block_rows = pick_block_rows_for_plan(
+            plan_runs(n, strides), x2.shape[0],
+            dtype_bytes=x.dtype.itemsize)
     x2p, rows = _pad_rows(x2, block_rows)
     flags = (d_in is not None, d_out is not None, bias is not None)
     placeholder = jnp.zeros((1,), x.dtype)
@@ -257,5 +305,8 @@ def spm_stack_fused(x: jax.Array, coeffs: jax.Array,
         d_in if d_in is not None else placeholder,
         d_out if d_out is not None else placeholder,
         bias if bias is not None else placeholder,
-        strides, flags, block_rows, interpret)
-    return y2[:rows].reshape(lead + (n,))
+        strides, flags, block_rows, interpret, in_width, out_width)
+    if y2.shape[0] != rows:       # row padding only; never a feature slice
+        y2 = y2[:rows]
+    out_w = out_width if out_width is not None else n
+    return y2.reshape(lead + (out_w,))

@@ -30,6 +30,31 @@ load, outputs downcast on the final store), so the serve engine's bf16 path
 gets the fused kernel without precision loss in the accumulations
 (coefficient/diag/bias grads are always written f32).
 
+Rectangular-native boundaries (this PR): SPM is defined on a square n-wide
+operator, but the projection linears it replaces are rectangular
+(d_in -> d_out with n = even_ceil(max)).  Instead of the caller zero-padding
+the input and slicing the output in XLA (two extra full-activation HBM
+round-trips + up to n - d_out dead columns of compute), both kernels take
+static ``in_width`` / ``out_width``:
+
+  * ``in_width``  — the input operand is (B, in_width); the kernel reads
+    whatever the (block_rows, n_tile) BlockSpec delivers (blocks past the
+    array edge are padding) and zero-fills lanes with virtual column index
+    >= in_width via an iota mask IN VMEM, before the d_in fold.
+  * ``out_width`` — the output operand is (B, out_width); the final store
+    relies on Pallas' masked out-of-bounds store semantics for the partial
+    edge tile, and the FORWARD grid visits only ceil(out_width / n_tile)
+    feature tiles (columns past out_width are dead by construction: stages
+    in one run pair lanes tile-locally, so discarded output tiles depend
+    only on discarded input tiles).
+  * The backward keeps the FULL feature grid: every gcf / diag / bias
+    output block must be written (unvisited blocks would be garbage), and
+    masked x / gy loads make padded lanes contribute exact zeros to the
+    coefficient, diag, and bias grads while g_x comes back (B, in_width).
+
+ops.py sets the widths only on the boundary runs of a multi-run plan; the
+interior intermediates stay n-wide.
+
 Layout notes (TPU-native adaptation of the paper's CPU loop):
   * The feature axis rides the 128-wide lane dimension; batch rides sublanes.
   * A stride-s stage is the relayout (bb, n) -> (bb, g, 2, s) + vectorized
@@ -61,6 +86,16 @@ __all__ = ["spm_stack_kernel_call", "spm_stack_bwd_kernel_call",
 _F32 = jnp.float32
 
 
+def _mask_cols(z, tile_idx, width: int):
+    """Zero lanes whose VIRTUAL column index (feature-tile offset + lane)
+    is >= width — the in-VMEM realization of zero-padding a (B, width)
+    operand up to the square operator width n."""
+    nt = z.shape[-1]
+    col = tile_idx * nt + jax.lax.broadcasted_iota(jnp.int32, z.shape,
+                                                   z.ndim - 1)
+    return jnp.where(col < width, z, 0.0)
+
+
 def _apply_stages_fwd(z, cf_ref, strides, collect: bool = False):
     """Run all stages on a resident f32 tile; optionally collect inputs."""
     bb, nt = z.shape
@@ -85,12 +120,16 @@ def _apply_stages_fwd(z, cf_ref, strides, collect: bool = False):
 
 def _kernel(x_ref, cf_ref, *rest,
             strides: Tuple[int, ...],
-            has_din: bool, has_dout: bool, has_bias: bool):
+            has_din: bool, has_dout: bool, has_bias: bool,
+            in_width: Optional[int]):
     """Kernel body: x_ref (bb, nt), cf_ref (L, nt//2, 4), o_ref (bb, nt).
 
     Optional refs (in order, present when the matching flag is set):
     din_ref / dout_ref / bias_ref, each (1, nt).  All compute is f32 in
-    VMEM regardless of the I/O dtype.
+    VMEM regardless of the I/O dtype.  ``in_width`` (rectangular first
+    run) zero-fills the lanes past the true input width before anything
+    else touches them; a narrow OUTPUT needs no in-kernel handling — the
+    partial edge tile is masked by the out-of-bounds store.
     """
     refs = list(rest)
     din_ref = refs.pop(0) if has_din else None
@@ -99,6 +138,8 @@ def _kernel(x_ref, cf_ref, *rest,
     (o_ref,) = refs
 
     z = x_ref[...].astype(_F32)
+    if in_width is not None:
+        z = _mask_cols(z, pl.program_id(1), in_width)
     if has_din:
         z = z * din_ref[...].astype(_F32)       # (1, nt) broadcast over rows
     z = _apply_stages_fwd(z, cf_ref, strides)
@@ -117,7 +158,14 @@ def vmem_bytes(block_rows: int, n_tile: int, n_stages: int,
     until the reverse walk consumes them, on top of the x/gy/gx I/O tiles
     and two coefficient slabs (coeffs in, gcf out).  The forward needs
     strictly less (2 activation copies).  Diag/bias slabs are O(n_tile),
-    negligible."""
+    negligible.
+
+    The model keys on ONE run's (n_tile, n_stages): ops.py budgets each run
+    of a plan against its own tile width and stage count (not a uniform
+    n-wide worst case — see ``ops.pick_block_rows_for_plan``).  Rectangular
+    boundary runs change nothing here: a masked-fill input tile occupies
+    the full (block_rows, n_tile) buffer in VMEM even when the HBM operand
+    is narrower."""
     act = (n_stages + 2) * block_rows * n_tile * 4   # zs (L+1) + delta, f32
     io = 3 * block_rows * n_tile * dtype_bytes       # x, gy, gx tiles
     cf = 2 * n_stages * (n_tile // 2) * 4 * 4        # coeffs + gcf
@@ -140,7 +188,8 @@ def _vec_spec(n_tile: int) -> pl.BlockSpec:
 
 
 @functools.partial(jax.jit, static_argnames=("strides", "block_rows",
-                                             "n_tile", "interpret"))
+                                             "n_tile", "in_width",
+                                             "out_width", "interpret"))
 def spm_stack_kernel_call(x: jax.Array, coeffs: jax.Array,
                           d_in: Optional[jax.Array] = None,
                           d_out: Optional[jax.Array] = None,
@@ -148,21 +197,30 @@ def spm_stack_kernel_call(x: jax.Array, coeffs: jax.Array,
                           strides: Tuple[int, ...],
                           block_rows: int,
                           n_tile: int,
+                          in_width: Optional[int] = None,
+                          out_width: Optional[int] = None,
                           interpret: bool = False) -> jax.Array:
-    """pallas_call wrapper.  x: (B, n); coeffs: (L, n//2, 4); optional
-    d_in/d_out/bias: (n,) — folded into the kernel (applied before the first
-    / after the last stage, in VMEM).
+    """pallas_call wrapper.  x: (B, in_width or n); coeffs: (L, n//2, 4);
+    optional d_in/d_out/bias: (n,) — folded into the kernel (applied before
+    the first / after the last stage, in VMEM).  ``in_width`` /
+    ``out_width`` make the boundary runs rectangular-native: the input is
+    zero-filled to n in VMEM (iota mask) and only the first ``out_width``
+    output columns are computed (grid shrinks to ceil(out_width / n_tile)
+    tiles — tile-local pairing makes the rest dead) and stored (masked
+    partial edge tile).  Returns (B, out_width or n).
 
     Requires: B % block_rows == 0, n % n_tile == 0, and every stride s
     satisfies n_tile % (2*s) == 0 (pairs tile-local).  ops.py guarantees
     these by padding/splitting; this function is the raw kernel entry.
     """
-    B, n = x.shape
-    L = coeffs.shape[0]
+    B = x.shape[0]
+    L, n = coeffs.shape[0], 2 * coeffs.shape[1]
+    assert x.shape[-1] == (in_width if in_width is not None else n)
     assert B % block_rows == 0 and n % n_tile == 0
     for s in strides:
         assert n_tile % (2 * s) == 0, (s, n_tile)
-    grid = (B // block_rows, n // n_tile)
+    out_w = out_width if out_width is not None else n
+    grid = (B // block_rows, -(-out_w // n_tile))
 
     # Pair indices for feature tile j are the contiguous slab
     # [j * n_tile/2, (j+1) * n_tile/2): groups are sequential in the flat
@@ -182,11 +240,12 @@ def spm_stack_kernel_call(x: jax.Array, coeffs: jax.Array,
         functools.partial(_kernel, strides=strides,
                           has_din=d_in is not None,
                           has_dout=d_out is not None,
-                          has_bias=bias is not None),
+                          has_bias=bias is not None,
+                          in_width=in_width),
         grid=grid,
         in_specs=in_specs,
         out_specs=o_spec,
-        out_shape=jax.ShapeDtypeStruct((B, n), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, out_w), x.dtype),
         interpret=interpret,
     )(*operands)
 
@@ -213,7 +272,8 @@ def spm_stack_kernel_call(x: jax.Array, coeffs: jax.Array,
 
 def _bwd_kernel(x_ref, cf_ref, gy_ref, *rest,
                 strides: Tuple[int, ...],
-                has_din: bool, has_dout: bool, has_bias: bool):
+                has_din: bool, has_dout: bool, has_bias: bool,
+                in_width: Optional[int], out_width: Optional[int]):
     refs = list(rest)
     din_ref = refs.pop(0) if has_din else None
     dout_ref = refs.pop(0) if has_dout else None
@@ -225,13 +285,24 @@ def _bwd_kernel(x_ref, cf_ref, gy_ref, *rest,
 
     bb, nt = x_ref.shape
     L = len(strides)
+    j = pl.program_id(0)  # feature tile: major grid axis
 
-    # recompute stage inputs in VMEM (forward remat), incl. the d_in fold
+    # recompute stage inputs in VMEM (forward remat), incl. the d_in fold.
+    # Rectangular first run: lanes past in_width are zero-filled exactly as
+    # the forward saw them, so the remat AND every grad that multiplies by
+    # x (g_din, the eq. 14 coefficient grads) see zeros on padded lanes.
     x_raw = x_ref[...].astype(_F32)
+    if in_width is not None:
+        x_raw = _mask_cols(x_raw, j, in_width)
     z0 = x_raw * din_ref[...].astype(_F32) if has_din else x_raw
     z_last, zs = _apply_stages_fwd(z0, cf_ref, strides, collect=True)
 
+    # Rectangular last run: the sliced-away output columns carry no
+    # cotangent, so masking gy to out_width zeroes their contribution to
+    # g_bias / g_dout and to the stage walk below.
     gy = gy_ref[...].astype(_F32)
+    if out_width is not None:
+        gy = _mask_cols(gy, j, out_width)
     i = pl.program_id(1)  # batch step: minor grid axis (see note above)
 
     def _acc(ref, tile):
@@ -285,6 +356,7 @@ def _bwd_kernel(x_ref, cf_ref, gy_ref, *rest,
 
 @functools.partial(jax.jit, static_argnames=("strides", "block_rows",
                                              "n_tile", "has_bias",
+                                             "in_width", "out_width",
                                              "interpret"))
 def spm_stack_bwd_kernel_call(x: jax.Array, coeffs: jax.Array,
                               gy: jax.Array,
@@ -294,17 +366,37 @@ def spm_stack_bwd_kernel_call(x: jax.Array, coeffs: jax.Array,
                               block_rows: int,
                               n_tile: int,
                               has_bias: bool = False,
+                              in_width: Optional[int] = None,
+                              out_width: Optional[int] = None,
                               interpret: bool = False):
     """Fused backward for (optionally) the full operator.
 
-    Always returns ``(g_x (B, n), g_coeffs (L, n//2, 4) f32)`` followed by
-    ``g_din (n,)`` if ``d_in`` was given, ``g_dout (n,)`` if ``d_out`` was
-    given, and ``g_bias (n,)`` if ``has_bias`` (the bias value itself is not
-    needed for its grad).  All parameter grads are f32.
+    Always returns ``(g_x (B, in_width or n), g_coeffs (L, n//2, 4) f32)``
+    followed by ``g_din (n,)`` if ``d_in`` was given, ``g_dout (n,)`` if
+    ``d_out`` was given, and ``g_bias (n,)`` if ``has_bias`` (the bias value
+    itself is not needed for its grad).  All parameter grads are f32.
+
+    Rectangular boundaries: ``x`` is (B, in_width) and ``gy`` is
+    (B, out_width) when set; both are masked to exact zeros past their
+    width in VMEM.  Unlike the forward, the grid covers ALL n // n_tile
+    feature tiles — every parameter-grad output block must be written
+    (their value on fully-padded tiles is an exact zero, which the masked
+    loads produce for free).  ``g_x`` comes back (B, in_width) only when
+    ceil(in_width / n_tile) equals the grid's feature-tile count; when
+    ``in_width`` leaves whole feature tiles past the array edge
+    (n > n_tile with a small input), it comes back (B, n) and the CALLER
+    slices — a fully out-of-bounds output block is not masked but CLAMPED
+    onto the last valid block (both interpret mode and Mosaic clamp block
+    indices), which would corrupt valid g_x columns.
     """
-    B, n = x.shape
-    L = coeffs.shape[0]
+    B = x.shape[0]
+    L, n = coeffs.shape[0], 2 * coeffs.shape[1]
+    in_w = in_width if in_width is not None else n
+    assert x.shape[-1] == in_w
+    assert gy.shape[-1] == (out_width if out_width is not None else n)
     assert B % block_rows == 0 and n % n_tile == 0
+    if -(-in_w // n_tile) != n // n_tile:
+        in_w = n  # see docstring: narrow g_x would alias clamped stores
     # batch is the MINOR grid axis: parameter-grad blocks (indexed by the
     # feature tile only) are revisited on consecutive iterations, which is
     # required for the in-block accumulation to be valid on real TPU.
@@ -321,7 +413,7 @@ def spm_stack_bwd_kernel_call(x: jax.Array, coeffs: jax.Array,
             in_specs.append(vec_spec)
 
     out_specs = [act_spec, cf_spec]
-    out_shape = [jax.ShapeDtypeStruct((B, n), x.dtype),
+    out_shape = [jax.ShapeDtypeStruct((B, in_w), x.dtype),
                  jax.ShapeDtypeStruct((L, n // 2, 4), jnp.float32)]
     for present in (d_in is not None, d_out is not None, has_bias):
         if present:
@@ -332,7 +424,8 @@ def spm_stack_bwd_kernel_call(x: jax.Array, coeffs: jax.Array,
         functools.partial(_bwd_kernel, strides=strides,
                           has_din=d_in is not None,
                           has_dout=d_out is not None,
-                          has_bias=has_bias),
+                          has_bias=has_bias,
+                          in_width=in_width, out_width=out_width),
         grid=grid,
         in_specs=in_specs,
         out_specs=out_specs,

@@ -27,6 +27,10 @@ def main() -> None:
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--cache-dtype", choices=("bfloat16", "float32"),
+                    default="bfloat16",
+                    help="KV-cache dtype (default matches the engine's "
+                         "bf16 default; float32 for parity debugging)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -36,16 +40,20 @@ def main() -> None:
         print(f"note: {cfg.name} is embeddings-input; serving decodes its "
               f"token codebook after a token prompt")
 
-    key = jax.random.PRNGKey(args.seed)
-    params = T.init_model(key, cfg)
+    # independent streams for init / prompts / sampling: reusing one key
+    # correlates the model weights with the benchmark prompts and the
+    # sampling noise
+    k_init, k_prompts, k_sample = jax.random.split(
+        jax.random.PRNGKey(args.seed), 3)
+    params = T.init_model(k_init, cfg)
     engine = ServeEngine(cfg=cfg, params=params,
                          max_len=args.prompt_len + args.new_tokens,
-                         cache_dtype=jnp.float32)
-    prompts = jax.random.randint(key, (args.batch, args.prompt_len),
+                         cache_dtype=jnp.dtype(args.cache_dtype))
+    prompts = jax.random.randint(k_prompts, (args.batch, args.prompt_len),
                                  0, cfg.vocab_size)
     t0 = time.time()
     out = engine.generate(prompts, max_new_tokens=args.new_tokens,
-                          temperature=args.temperature, key=key)
+                          temperature=args.temperature, key=k_sample)
     dt = time.time() - t0
     toks = args.batch * args.new_tokens
     print(f"generated {out.shape} in {dt:.2f}s "

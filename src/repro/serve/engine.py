@@ -4,6 +4,14 @@
 ``generate`` runs greedy or temperature sampling for a batch of prompts.
 ``serve_step`` (module-level) is the function the decode-shape dry-run
 cells lower: one new token against a seq_len KV cache.
+
+Decode hot loop: sampling is FUSED into the jitted decode step (one
+compiled call per generated token — no host-side argmax/categorical
+between steps), the per-step PRNG key is derived inside jit via
+``fold_in``, and the loop issues exactly ``max_new_tokens - 1`` decode
+calls after prefill (the old loop ran one extra decode whose logits were
+discarded).  ``temperature > 0`` without a key is an error, not a silent
+greedy fallback.
 """
 
 from __future__ import annotations
@@ -27,6 +35,16 @@ def serve_step(params: dict, cfg: T.ModelConfig, tokens: jax.Array,
     return LM.decode_step(params, cfg, tokens, cache, cache_index)
 
 
+def _sample(logits: jax.Array, key: jax.Array, temperature: jax.Array,
+            greedy: bool) -> jax.Array:
+    """Traced sampling head.  ``greedy`` is static (two compiled variants);
+    ``temperature`` is traced so sweeping it never recompiles."""
+    if greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits / temperature, axis=-1).astype(jnp.int32)
+
+
 @dataclasses.dataclass
 class ServeEngine:
     cfg: T.ModelConfig
@@ -35,31 +53,44 @@ class ServeEngine:
     cache_dtype: object = jnp.bfloat16
 
     def __post_init__(self):
-        self._decode = jax.jit(
-            lambda p, t, c, i: serve_step(p, self.cfg, t, c, i))
+        def step(params, tok, cache, prompt_len, key, step_idx,
+                 temperature, greedy):
+            logits, cache = serve_step(params, self.cfg, tok, cache,
+                                       prompt_len + step_idx)
+            k = jax.random.fold_in(key, step_idx + 1)
+            return _sample(logits, k, temperature, greedy), cache
+
+        # decode + sample in ONE compiled call per token
+        self._step = jax.jit(step, static_argnames=("greedy",))
+        self._sample_first = jax.jit(
+            lambda logits, key, temperature, greedy:
+                _sample(logits, jax.random.fold_in(key, 0), temperature,
+                        greedy),
+            static_argnames=("greedy",))
 
     def generate(self, prompts: jax.Array, *, max_new_tokens: int = 32,
                  temperature: float = 0.0,
                  key: Optional[jax.Array] = None) -> jax.Array:
         """prompts: (B, T_prompt) int32 -> (B, max_new_tokens)."""
-        B = prompts.shape[0]
+        greedy = temperature <= 0.0
+        if not greedy and key is None:
+            raise ValueError("temperature > 0 requires a PRNG key")
+        if max_new_tokens <= 0:
+            return jnp.zeros((prompts.shape[0], 0), jnp.int32)
+        if key is None:
+            key = jax.random.PRNGKey(0)  # unused: greedy takes no samples
         logits, cache = LM.prefill(self.params, self.cfg,
                                    max_len=self.max_len, tokens=prompts,
                                    cache_dtype=self.cache_dtype)
         idx = jnp.asarray(prompts.shape[1], jnp.int32)
-        out = []
-        tok = self._sample(logits, temperature, key, 0)
-        for t in range(max_new_tokens):
+        temp = jnp.asarray(temperature, jnp.float32)
+        tok = self._sample_first(logits, key, temp, greedy=greedy)
+        out = [tok]
+        # the token sampled from step t's logits is decoded at step t+1;
+        # the LAST sampled token is returned without a trailing decode
+        for t in range(max_new_tokens - 1):
+            tok, cache = self._step(self.params, tok, cache, idx, key,
+                                    jnp.asarray(t, jnp.int32), temp,
+                                    greedy=greedy)
             out.append(tok)
-            logits, cache = self._decode(self.params, tok, cache, idx + t)
-            tok = self._sample(logits, temperature, key, t + 1)
         return jnp.stack(out, axis=1)
-
-    @staticmethod
-    def _sample(logits: jax.Array, temperature: float,
-                key: Optional[jax.Array], step: int) -> jax.Array:
-        if temperature <= 0.0 or key is None:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        k = jax.random.fold_in(key, step)
-        return jax.random.categorical(
-            k, logits / temperature, axis=-1).astype(jnp.int32)

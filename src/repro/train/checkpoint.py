@@ -1,7 +1,14 @@
 """Topology-independent checkpointing: atomic npz + treedef JSON.
 
-* **Atomic**: write to ``<dir>/tmp.<step>`` then ``os.replace`` — a
-  crash mid-write never corrupts the latest checkpoint.
+* **Atomic**: write to a uniquely-named ``<dir>/tmp.<step>.<nonce>`` then
+  ``os.replace`` into ``step_<step>`` — nothing already published is
+  deleted before the new data is in place, so a crash at ANY point leaves
+  every previously visible checkpoint intact (the only non-atomic case is
+  re-saving an already-published step, where the old copy is moved aside —
+  not deleted — for the instant of the publish).  The next save first
+  REPUBLISHES any complete payload a crash left unpublished in staging,
+  then garbage-collects the remaining stale ``tmp.*`` dirs.  One writer
+  per ``ckpt_dir`` is assumed (as everywhere in this trainer).
 * **Keep-N**: old checkpoints garbage-collected.
 * **Topology-independent**: arrays are saved as host numpy (fully
   addressable gather); on restore the caller re-applies whatever
@@ -18,6 +25,7 @@ import json
 import os
 import re
 import shutil
+import uuid
 from typing import Any, Optional, Tuple
 
 import jax
@@ -27,6 +35,42 @@ __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
            "list_checkpoints"]
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
+_TMP_RE = re.compile(r"^tmp\.(\d+)\.[0-9a-f]+(\.displaced)?$")
+
+
+def _recover_staging(ckpt_dir: str) -> None:
+    """Republish complete staging dirs orphaned by a crash mid-publish.
+
+    A crash between the two renames of a same-step re-save leaves
+    ``step_<s>`` missing while ``tmp.<s>.<nonce>`` (new payload) and/or
+    ``tmp.<s>.<nonce>.displaced`` (the previously published copy) hold a
+    complete checkpoint.  Promote one of them — preferring the fresh
+    payload over the displaced one — so the keep-N sweep that follows
+    never deletes the only copy of a step."""
+    by_step: dict = {}
+    for name in os.listdir(ckpt_dir):
+        m = _TMP_RE.match(name)
+        if not m:
+            continue
+        path = os.path.join(ckpt_dir, name)
+        complete = (os.path.exists(os.path.join(path, "meta.json"))
+                    and os.path.exists(os.path.join(path, "arrays.npz")))
+        if complete:
+            # displaced (old) copies sort after fresh ones
+            by_step.setdefault(int(m.group(1)), []).append(
+                (bool(m.group(2)), path))
+    for step, candidates in by_step.items():
+        final = os.path.join(ckpt_dir, f"step_{step}")
+        if os.path.exists(final):
+            continue
+        try:
+            os.replace(sorted(candidates)[0][1], final)
+        except OSError:
+            # read paths also recover (a resuming process reads before it
+            # saves) and must stay usable on read-only mounts or when the
+            # single writer republishes concurrently — fall back to
+            # whatever is published rather than raise
+            pass
 
 
 def _flatten_with_names(tree: Any):
@@ -38,10 +82,13 @@ def save_checkpoint(ckpt_dir: str, step: int, state: Any,
                     extra: Optional[dict] = None, keep: int = 3) -> str:
     """Save pytree ``state`` (+ JSON-serializable ``extra``) at ``step``."""
     os.makedirs(ckpt_dir, exist_ok=True)
-    tmp = os.path.join(ckpt_dir, f"tmp.{step}")
+    # First, promote any complete-but-unpublished payload a crashed save
+    # left behind — the sweep at the end deletes whatever staging remains.
+    _recover_staging(ckpt_dir)
+    # Unique staging name: a crashed save's leftover can never collide with
+    # (and must never be deleted by) the current one before it publishes.
+    tmp = os.path.join(ckpt_dir, f"tmp.{step}.{uuid.uuid4().hex[:8]}")
     final = os.path.join(ckpt_dir, f"step_{step}")
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
     os.makedirs(tmp)
 
     flat, treedef = _flatten_with_names(state)
@@ -54,14 +101,29 @@ def save_checkpoint(ckpt_dir: str, step: int, state: Any,
             "extra": extra or {}}
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump(meta, f)
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.replace(tmp, final)                      # atomic publish
 
-    # keep-N garbage collection
+    # Publish WITHOUT deleting anything first.  ``os.replace`` cannot land
+    # a directory on a non-empty target, so re-saving an existing step
+    # moves the old copy aside (rename, still recoverable) for the instant
+    # of the swap instead of rmtree-ing it beforehand — a crash between the
+    # two renames leaves both the old and new payloads on disk as tmp-like
+    # dirs and every OTHER published step untouched.
+    if os.path.exists(final):
+        displaced = tmp + ".displaced"
+        os.replace(final, displaced)
+        os.replace(tmp, final)
+        shutil.rmtree(displaced, ignore_errors=True)
+    else:
+        os.replace(tmp, final)                  # atomic publish
+
+    # keep-N garbage collection + stale staging dirs from crashed saves
+    # (ours was renamed away above, so every remaining tmp.* is stale).
     steps = sorted(list_checkpoints(ckpt_dir))
     for s in steps[:-keep]:
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("tmp."):
+            shutil.rmtree(os.path.join(ckpt_dir, name), ignore_errors=True)
     return final
 
 
@@ -77,6 +139,10 @@ def list_checkpoints(ckpt_dir: str):
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
+    # a resuming process must see a step whose publish was interrupted,
+    # not silently fall back to an older one
+    if os.path.isdir(ckpt_dir):
+        _recover_staging(ckpt_dir)
     steps = list_checkpoints(ckpt_dir)
     return steps[-1] if steps else None
 
@@ -87,6 +153,8 @@ def restore_checkpoint(ckpt_dir: str, like: Any,
     """Restore into the structure of ``like``.  If ``shardings`` (a pytree
     of NamedSharding matching ``like``) is given, arrays are placed
     sharded — this is the elastic re-shard path."""
+    if os.path.isdir(ckpt_dir):
+        _recover_staging(ckpt_dir)
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:

@@ -104,3 +104,20 @@ def test_serve_engine_greedy_is_deterministic():
     out2 = eng.generate(prompts, max_new_tokens=8)
     np.testing.assert_array_equal(out1, out2)
     assert out1.shape == (2, 8)
+
+
+def test_serve_engine_sampling_requires_key():
+    """temperature > 0 without a key raises instead of silently decoding
+    greedily (the old behaviour hid misconfigured samplers)."""
+    cfg = get_smoke("qwen3-1.7b")
+    params = T.init_model(KEY, cfg)
+    eng = ServeEngine(cfg=cfg, params=params, max_len=16,
+                      cache_dtype=jnp.float32)
+    prompts = jax.random.randint(KEY, (1, 4), 0, cfg.vocab_size)
+    with pytest.raises(ValueError, match="requires a PRNG key"):
+        eng.generate(prompts, max_new_tokens=4, temperature=0.8)
+    # sampled decode is reproducible under a fixed key
+    out1 = eng.generate(prompts, max_new_tokens=4, temperature=0.8, key=KEY)
+    out2 = eng.generate(prompts, max_new_tokens=4, temperature=0.8, key=KEY)
+    np.testing.assert_array_equal(out1, out2)
+    assert out1.shape == (1, 4)

@@ -150,6 +150,55 @@ def test_checkpoint_atomic_keepN_resume():
         assert not [f for f in os.listdir(d) if f.startswith("tmp.")]
 
 
+def test_checkpoint_crash_leftovers_are_gcd_and_publish_is_nondestructive():
+    """A crashed save leaves a tmp.* staging dir; the next save must GC it.
+    Re-saving an existing step must republish without ever having deleted
+    the published payload before the new one landed."""
+    cfg, loader = _mlp_setup(width=32)
+    state = make_train_state(init_mlp(KEY, cfg))
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 10, state, extra={"v": 1})
+        # simulate a crash mid-save: stale staging dir with partial payload
+        stale = os.path.join(d, "tmp.20.deadbeef")
+        os.makedirs(stale)
+        with open(os.path.join(stale, "arrays.npz"), "w") as f:
+            f.write("partial")
+        # overwrite step 10 with new extra; stale dir must be collected
+        save_checkpoint(d, 10, state, extra={"v": 2})
+        assert not [f for f in os.listdir(d) if f.startswith("tmp.")]
+        assert list_checkpoints(d) == [10]
+        _, extra = restore_checkpoint(d, state)
+        assert extra["v"] == 2
+
+
+def test_checkpoint_crash_mid_republish_is_recovered():
+    """A crash between the two renames of a same-step re-save leaves the
+    step unpublished, with complete payloads stranded in staging (the new
+    one at tmp.<s>.<nonce>, the old at tmp.<s>.<nonce>.displaced).  The
+    next save must REPUBLISH (preferring the fresh payload) instead of
+    sweeping the only copies of the step."""
+    cfg, loader = _mlp_setup(width=32)
+    state = make_train_state(init_mlp(KEY, cfg))
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 10, state, extra={"v": "old"})
+        save_checkpoint(d, 11, state, extra={"v": "new"})
+        # simulate the crash window: step 10's published copy was moved
+        # aside and the re-save's fresh payload never landed on step_10
+        os.rename(os.path.join(d, "step_10"),
+                  os.path.join(d, "tmp.10.aaaa1111.displaced"))
+        os.rename(os.path.join(d, "step_11"),
+                  os.path.join(d, "tmp.10.aaaa1111"))
+        assert list_checkpoints(d) == []
+        # the RESUME path (latest_step / restore_checkpoint) must recover
+        # on its own — a restarting trainer reads before it ever saves
+        assert latest_step(d) == 10
+        save_checkpoint(d, 20, state, extra={"v": 3})
+        assert list_checkpoints(d) == [10, 20]
+        assert not [f for f in os.listdir(d) if f.startswith("tmp.")]
+        _, extra = restore_checkpoint(d, state, step=10)
+        assert extra["v"] == "new"   # fresh payload won over the displaced
+
+
 def test_resume_is_bitwise_reproducible():
     """Train 10 steps straight == train 5, checkpoint, restore, train 5."""
     cfg, loader = _mlp_setup(width=32)
