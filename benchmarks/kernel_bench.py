@@ -24,6 +24,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -31,11 +34,15 @@ import jax.numpy as jnp
 from benchmarks.common import emit, time_step
 from repro.core import SPMConfig, init_spm, spm_apply
 from repro.core.linear import LinearConfig, init_linear, linear_apply
-from repro.core.pairings import default_n_stages
+from repro.core.pairings import default_n_stages, two_level_schedule
 from repro.kernels.ops import pick_block_rows_for_plan, plan_runs
 from repro.kernels.spm_stack import vmem_bytes
+from repro.launch.hlo_analysis import HW, sharded_stage_traffic
+from repro.parallel.spm_shard import plan_steps
 
 KEY = jax.random.PRNGKey(0)
+
+SHARD_DEVICES = 8   # virtual host devices for the sharded timing subprocess
 
 
 def bench_width(n: int, batch: int = 256):
@@ -167,6 +174,89 @@ def traffic_model(n: int, batch: int, L: int,
                               for rs, tile in runs)}
 
 
+def sharded_model(n: int, batch: int, L: int,
+                  n_shards: int = SHARD_DEVICES) -> dict:
+    """Modeled sharded-vs-replicated traffic for one two_level operator.
+
+    replicated — one chip runs the full n-wide fused plan (PR 1/2 model).
+    sharded    — each of n_shards chips runs the n_local-wide slab; cross
+    stages each move the slab once over ICI (collective_permute partner
+    exchange).  Bytes are per chip, f32 activations.
+    """
+    strides = tuple(two_level_schedule(n, L, n_shards).strides())
+    steps = plan_steps(n, strides, n_shards)
+    n_local = n // n_shards
+    sh = sharded_stage_traffic(n_local, batch, steps)
+    act = batch * n * 4
+    n_runs = len(plan_runs(n, strides))
+    coeff_bytes = L * (n // 2) * 16 + 3 * n * 4
+    rep_bytes = 2 * n_runs * act + coeff_bytes
+    rep_s = rep_bytes / HW["hbm_bw"]
+    shard_s = sh["memory_s"] + sh["collective_s"]
+    return {"n": n, "L": L, "n_shards": n_shards, "n_local": n_local,
+            "n_cross_stages": sum(1 for s in steps if s[0] == "cross"),
+            "n_local_runs": sum(1 for s in steps if s[0] == "local"),
+            "modeled": sh,
+            "replicated_hbm_bytes": rep_bytes,
+            "replicated_s": rep_s,
+            "sharded_s": shard_s,
+            "speedup_model": rep_s / shard_s if shard_s else None}
+
+
+def time_sharded_subprocess(n: int, batch: int, L: int,
+                            n_shards: int = SHARD_DEVICES,
+                            timeout: int = 600) -> dict:
+    """Wall-clock the distributed executor on virtual host devices.
+
+    The forced device count must be set before jax initializes, and this
+    process already owns a 1-device backend (conftest's rule), so the
+    measurement re-execs THIS file with ``--sharded-worker`` in a child
+    whose XLA_FLAGS request ``n_shards`` host devices.  Interpret-safe:
+    the worker keeps the XLA composition (use_kernel=False) on CPU."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={n_shards}")
+    cmd = [sys.executable, os.path.abspath(__file__),
+           "--sharded-worker", f"{n},{batch},{L},{n_shards}"]
+    try:
+        r = subprocess.run(cmd, capture_output=True, text=True,
+                           timeout=timeout, env=env)
+        if r.returncode != 0:
+            return {"error": (r.stderr or r.stdout)[-500:]}
+        return json.loads(r.stdout.strip().splitlines()[-1])
+    except Exception as e:   # noqa: BLE001 — bench rows degrade, never fail
+        return {"error": f"{type(e).__name__}: {e}"}
+
+
+def run_sharded_worker(spec: str) -> None:
+    """Child entry (forced multi-device backend): time sharded vs
+    replicated spm_apply on the same params and print one JSON line."""
+    import numpy as np
+    from jax.sharding import Mesh
+    from repro.parallel.ctx import activation_sharding
+
+    n, batch, L, n_shards = map(int, spec.split(","))
+    cfg = SPMConfig(n=n, n_stages=L, schedule="two_level",
+                    n_shards=n_shards, backward="custom", use_kernel=False)
+    p = init_spm(KEY, cfg)
+    x = jax.random.normal(KEY, (batch, n))
+    mesh = Mesh(np.asarray(jax.devices()[:n_shards]).reshape(n_shards,),
+                ("model",))
+    rep_f = jax.jit(lambda x: spm_apply(p, x, cfg))
+    rep_g = jax.jit(jax.grad(lambda x: jnp.sum(spm_apply(p, x, cfg) ** 2)))
+    out = {"n": n, "batch": batch, "L": L, "n_shards": n_shards,
+           "devices": jax.device_count(),
+           "replicated_fwd_us": time_step(rep_f, x) * 1e6,
+           "replicated_fwdbwd_us": time_step(rep_g, x) * 1e6}
+    with activation_sharding(mesh, shard_feature=True):
+        sh_f = jax.jit(lambda x: spm_apply(p, x, cfg))
+        sh_g = jax.jit(jax.grad(
+            lambda x: jnp.sum(spm_apply(p, x, cfg) ** 2)))
+        out["sharded_fwd_us"] = time_step(sh_f, x) * 1e6
+        out["sharded_fwdbwd_us"] = time_step(sh_g, x) * 1e6
+    print(json.dumps(out))
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -180,7 +270,13 @@ def main(argv=None) -> None:
                     help="JSON trajectory output ('' to skip)")
     ap.add_argument("--skip-fused-timing", action="store_true",
                     help="traffic model only (no interpret-mode wall-clock)")
+    ap.add_argument("--skip-sharded-timing", action="store_true",
+                    help="modeled sharded rows only (no timing subprocess)")
+    ap.add_argument("--sharded-worker", default=None, help=argparse.SUPPRESS)
     args = ap.parse_args(argv)
+    if args.sharded_worker:
+        run_sharded_worker(args.sharded_worker)
+        return
     widths = (512, 1024, 2048, 4096) if args.full else (256, 512, 1024)
     rect_shapes = RECT_SHAPES
     if args.smoke:
@@ -245,6 +341,32 @@ def main(argv=None) -> None:
                  f"unfused={rr['linear_fwd_unfused_us']:.0f}us "
                  f"(interpret={backend != 'tpu'})")
 
+    # sharded (two_level over 8 virtual devices) vs replicated: modeled
+    # per-stage collective_permute bytes next to the HBM traffic model,
+    # plus an interpret-safe wall-clock from a forced-device-count child
+    # for the smallest width.
+    print("# sharded vs replicated (n,L,n_shards,cross_stages,"
+          "permute_bytes/chip,hbm_bytes/chip,replicated_bytes,model_speedup)")
+    sharded_records = []
+    for i, n in enumerate(widths):
+        L = default_n_stages(n)
+        sr = sharded_model(n, args.batch, L)
+        if i == 0 and not (args.skip_fused_timing
+                           or args.skip_sharded_timing):
+            # same batch as the modeled row: the JSON record's modeled
+            # seconds and measured microseconds describe ONE workload
+            sr["timing"] = time_sharded_subprocess(n, args.batch, L)
+        sharded_records.append(sr)
+        m = sr["modeled"]
+        print(f"{n},{sr['L']},{sr['n_shards']},{sr['n_cross_stages']},"
+              f"{m['permute_bytes_per_chip']},{m['hbm_bytes_per_chip']},"
+              f"{sr['replicated_hbm_bytes']},{sr['speedup_model']:.2f}x")
+        if sr.get("timing") and "error" not in sr["timing"]:
+            t = sr["timing"]
+            emit(f"kernel/n{n}/sharded_fwd", t["sharded_fwd_us"],
+                 f"replicated={t['replicated_fwd_us']:.0f}us "
+                 f"devices={t['devices']}")
+
     if args.out:
         payload = {
             "generated_by": "benchmarks/kernel_bench.py",
@@ -255,6 +377,7 @@ def main(argv=None) -> None:
                      "off-TPU; the traffic model carries the HBM claim"),
             "results": records,
             "rect_results": rect_records,
+            "sharded_results": sharded_records,
         }
         with open(args.out, "w") as f:
             json.dump(payload, f, indent=2)

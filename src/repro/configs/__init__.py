@@ -4,4 +4,6 @@ from repro.configs.shapes import SHAPES, ShapeSpec, LM_SHAPES  # noqa: F401
 from repro.configs.registry import (  # noqa: F401
     ARCH_IDS, get_config, get_smoke, arch_shapes, is_subquadratic, all_cells,
 )
-from repro.configs.base import with_overrides  # noqa: F401
+from repro.configs.base import (  # noqa: F401
+    with_overrides, with_fused_linears, with_feature_sharding,
+)

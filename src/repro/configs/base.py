@@ -9,7 +9,7 @@ from repro.models.transformer import LayerSpec, ModelConfig
 
 __all__ = ["dense_layers", "local_global_layers", "moe_layers",
            "mamba_layers", "hybrid_layers", "with_overrides",
-           "with_fused_linears"]
+           "with_fused_linears", "with_feature_sharding"]
 
 
 def dense_layers(n: int) -> Tuple[LayerSpec, ...]:
@@ -54,3 +54,15 @@ def with_fused_linears(cfg: ModelConfig,
     Ineligible operators (odd n, permutation pairings, custom_inverse)
     fall back to the XLA composition regardless — see core/spm.py."""
     return dataclasses.replace(cfg, spm_use_kernel=on)
+
+
+def with_feature_sharding(cfg: ModelConfig, n_shards: int) -> ModelConfig:
+    """Switch every SPM linear to the two_level schedule with its feature
+    axis distributable over ``n_shards`` "model"-axis devices.  The
+    distributed executor (``parallel/spm_shard.py``: shard-local fused
+    kernel runs + collective_permute cross stages) engages when an
+    ``activation_sharding(mesh, shard_feature=True)`` context is active and
+    the mesh's model axis matches; otherwise the schedule still runs
+    unsharded (it is just a reordered butterfly)."""
+    return dataclasses.replace(cfg, spm_schedule="two_level",
+                               spm_n_shards=n_shards)

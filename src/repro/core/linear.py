@@ -23,6 +23,16 @@ reduce exactly to the paper's operator.
 ``use_kernel`` selects the fused Pallas full-operator path (tri-state:
 None = auto/on-TPU, True = force, False = off; see core/spm.py for the
 eligibility + fallback rules).
+
+Distributed feature axis: ``schedule="two_level"`` with ``n_shards > 1``
+makes the operator distributable — inside an
+``activation_sharding(mesh, shard_feature=True)`` block whose "model" axis
+matches ``n_shards``, ``spm_apply`` routes through
+``parallel/spm_shard.py`` (shard-local fused-kernel runs + one
+collective_permute partner exchange per cross-shard stage); outside any
+mesh context the same config runs unsharded (two_level is just a reordered
+butterfly).  Model configs plumb these as ``spm_schedule`` /
+``spm_n_shards`` (``configs.base.with_feature_sharding``).
 """
 
 from __future__ import annotations

@@ -92,6 +92,24 @@ def _pow2_strides(n: int) -> list:
     return out
 
 
+def _butterfly_strides(n: int) -> list:
+    """The butterfly stride recipe for width n: power-of-two strides
+    ascending, then (for n = 2^k * m with odd m > 1) the odd-factor
+    super-strides m * 2^j largest first.  Shared by butterfly_schedule and
+    every level of two_level_schedule (the recipe applies alike to the
+    full width, the shard-local block, and the shard index)."""
+    base = _pow2_strides(n)
+    k = len(base)
+    m = n >> k
+    cross = []
+    if m > 1 and k:
+        for j in range(k - 1, -1, -1):
+            s = m << j
+            if n % (2 * s) == 0:
+                cross.append(s)
+    return base + cross
+
+
 def butterfly_schedule(n: int, n_stages: int) -> Schedule:
     """Default TPU-native schedule: power-of-two strides, ascending, plus
     "super-strides" that cross the odd-factor blocks of non-power-of-two n.
@@ -104,19 +122,7 @@ def butterfly_schedule(n: int, n_stages: int) -> Schedule:
     """
     if n < 2 or n % 2:
         raise ValueError(f"butterfly_schedule requires even n >= 2, got {n}")
-    base = _pow2_strides(n)
-    k = len(base)  # n = 2^k * m
-    m = n >> k
-    cross = []
-    if m > 1:
-        # strides m*2^j, j descending from the largest valid, connect blocks.
-        j = k - 1
-        while j >= 0:
-            s = m << j
-            if n % (2 * s) == 0:
-                cross.append(s)
-            j -= 1
-    cycle = base + cross
+    cycle = _butterfly_strides(n)
     strides = [cycle[i % len(cycle)] for i in range(n_stages)]
     return Schedule(n=n, stages=tuple(Stage(stride=s) for s in strides))
 
@@ -155,24 +161,48 @@ def two_level_schedule(n: int, n_stages: int, n_shards: int) -> Schedule:
     """Sharding-aware butterfly: all shard-local strides first (stride <
     n_local), then cross-shard strides (multiples of n_local, ascending).
 
-    With the feature axis sharded ``n = n_shards * n_local``, a cross-shard
-    stage with stride ``s = k * n_local`` pairs shard ``j`` with shard
-    ``j XOR k`` — a partner exchange implementable as ``collective_permute``.
+    With the feature axis sharded ``n = n_shards * n_local``, every stage is
+    one of exactly two shapes the distributed executor
+    (``parallel/spm_shard.py``) can realize:
+
+    * **local** — ``n_local % (2*s) == 0``: pairs stay inside one shard
+      block, so the stage runs on the shard-resident slab (fused Pallas
+      kernel on TPU) with no communication.  Local strides follow the
+      butterfly recipe applied WITHIN the block (power-of-two strides of
+      ``n_local`` plus its odd-factor super-strides).
+    * **cross** — ``s = k * n_local`` with ``k`` a power of two and
+      ``n_shards % (2*k) == 0``: the stage pairs shard ``j`` with shard
+      ``j XOR k`` — a partner exchange implementable as
+      ``collective_permute`` plus a local 2x2 mix.
+
+    The previous builder reused the GLOBAL power-of-two strides for the
+    cross list, which for odd-factor ``n_local`` (e.g. n=48, 8 shards ->
+    n_local=6) could emit strides straddling shard blocks without being a
+    multiple of ``n_local``; crosses are now derived from the shard index
+    butterfly directly, so the XOR-partner invariant holds by construction.
+    When no valid local stride exists (e.g. ``n_local == 1`` or odd
+    ``n_local``) the schedule falls back to ``local = [1]`` — still a valid
+    stage for the unsharded executor (``n`` even), though such a stage pairs
+    across shard boundaries and keeps the operator off the distributed path.
     """
     if n % n_shards:
         raise ValueError(f"n={n} not divisible by n_shards={n_shards}")
     n_local = n // n_shards
-    local = [s for s in _pow2_strides(n) if s < n_local and n_local % (2 * s) == 0]
-    cross = [s for s in _pow2_strides(n) if s >= n_local]
-    # non-power-of-two odd factor: reuse butterfly cross strides (local only
-    # if they stay within a shard).
-    k = len(_pow2_strides(n))
-    m = n >> k
-    if m > 1:
-        for j in range(k - 1, -1, -1):
-            s = m << j
-            if n % (2 * s) == 0:
-                (local if s < n_local else cross).append(s)
+    local = _butterfly_strides(n_local)
+    # Cross multipliers k follow the butterfly recipe ON THE SHARD INDEX:
+    # power-of-two k give XOR partner exchanges; for even non-power-of-two
+    # n_shards the odd-factor super-strides connect the remaining shard
+    # blocks — valid global strides, but NOT partner exchanges, so such
+    # schedules stay off the distributed executor (it is restricted to
+    # power-of-two shard counts) while keeping the operator fully
+    # connected.
+    ks = _butterfly_strides(n_shards)
+    cross = [k * n_local for k in ks]
+    if not ks and n_shards > 1:
+        # odd n_shards: no block-aligned cross stride exists at all (any
+        # k*n_local needs n_shards % 2k == 0).  Fall back to the global
+        # butterfly strides >= n_local so connectivity is preserved.
+        cross = [s for s in _butterfly_strides(n) if s >= n_local]
     if not local:
         local = [1]
     cycle = sorted(set(local)) + sorted(set(cross))

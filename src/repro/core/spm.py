@@ -387,15 +387,20 @@ def _cached_core(sched: Schedule, mode: str):
 
 def kernel_eligible(cfg: SPMConfig, sched: Optional[Schedule] = None) -> bool:
     """Whether the fused Pallas kernel can express this operator exactly:
-    all-structured (stride) stages, even n, unsharded, and a backward mode
-    whose residual contract the kernel honors (custom_inverse stores
-    outputs instead of inputs, so it falls back to the XLA composition).
-    Sharded two_level operators (n_shards > 1) stay on the partitionable
-    XLA composition until the kernel grows collective_permute support for
-    the cross-shard stages (ROADMAP open item)."""
+    all-structured (stride) stages, even n, and a backward mode whose
+    residual contract the kernel honors (custom_inverse stores outputs
+    instead of inputs, so it falls back to the XLA composition).
+
+    ``n_shards > 1`` is no longer an exclusion: when a feature-sharding
+    mesh context is active, ``spm_apply`` routes the operator through the
+    distributed executor (``parallel/spm_shard.py`` — shard-local runs
+    through this same kernel, cross-shard stages as collective_permute
+    partner exchanges) BEFORE this check; without a mesh context a
+    two_level schedule is just a stride schedule and runs through the
+    single-device fused kernel directly.  Remaining exclusions: permutation
+    pairings, odd n, and ``custom_inverse``."""
     sched = cfg.pairing if sched is None else sched
     return (sched.all_structured and not cfg.odd
-            and cfg.n_shards == 1
             and cfg.backward != "custom_inverse")
 
 
@@ -432,6 +437,18 @@ def spm_apply(params: dict, x: jax.Array, cfg: SPMConfig, *,
     if x.shape[-1] != expect:
         raise ValueError(f"expected (..., {expect}), got {x.shape}")
     sched = cfg.pairing
+    if cfg.n_shards > 1:
+        # Distributed two_level path: with a feature-sharding mesh context
+        # active (parallel/ctx.activation_sharding(shard_feature=True))
+        # whose "model" axis matches n_shards, shard-local runs execute on
+        # the shard-resident slab and cross-shard stages lower to
+        # collective_permute partner exchanges (parallel/spm_shard.py).
+        from repro.parallel import ctx as par_ctx        # lazy: keeps core
+        from repro.parallel import spm_shard             # import-light
+        mesh = par_ctx.feature_mesh(cfg.n_shards)
+        if mesh is not None and spm_shard.sharded_eligible(cfg, sched):
+            return spm_shard.spm_apply_sharded(
+                params, x, cfg, mesh, in_width=in_width, out_width=out_width)
     if use_fused_kernel(cfg, sched):
         # Fused full-operator path: the diag multiplies and bias add are
         # folded into the boundary runs of the kernel plan (zero extra HBM

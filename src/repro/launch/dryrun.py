@@ -89,6 +89,11 @@ def lower_cell(cfg: T.ModelConfig, shape: ShapeSpec, mesh,
     act_ctx = (activation_sharding(mesh, shard_heads=False, full_batch=True)
                if profile == "spm_dp_g2" and shape.kind != "decode"
                else contextlib.nullcontext())
+    if profile == "spm_feat":
+        # feature axis over "model": two_level SPM linears route through the
+        # distributed executor (collective_permute cross stages)
+        act_ctx = activation_sharding(mesh, shard_heads=False,
+                                      shard_feature=True)
     batch = input_specs(cfg, shape)
     batch_sh = _batch_shardings(mesh, batch, shape, profile)
 
@@ -189,6 +194,11 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     if bf16_logits:
         cfg = with_overrides(cfg, logits_dtype="bfloat16")
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    if profile == "spm_feat":
+        from repro.configs import with_feature_sharding
+        if cfg.linear_impl == "dense":
+            cfg = with_overrides(cfg, linear_impl="spm_general")
+        cfg = with_feature_sharding(cfg, int(mesh.shape["model"]))
     n_chips = mesh.devices.size
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
            "linear_impl": cfg.linear_impl, "n_chips": int(n_chips),
@@ -249,7 +259,8 @@ def main() -> None:
     ap.add_argument("--linear-impl", default=None,
                     choices=(None, "dense", "spm_general", "spm_rotation"))
     ap.add_argument("--profile", default="tp",
-                    choices=("tp", "spm_dp", "spm_dp_g", "spm_dp_g2"))
+                    choices=("tp", "spm_dp", "spm_dp_g", "spm_dp_g2",
+                             "spm_feat"))
     ap.add_argument("--no-remat", action="store_true")
     ap.add_argument("--bf16-logits", action="store_true")
     ap.add_argument("--skip-existing", action="store_true")

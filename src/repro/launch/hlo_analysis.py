@@ -18,7 +18,8 @@ from __future__ import annotations
 import re
 from typing import Dict, Optional
 
-__all__ = ["collective_bytes", "roofline_terms", "HW", "parse_shape_bytes"]
+__all__ = ["collective_bytes", "roofline_terms", "HW", "parse_shape_bytes",
+           "sharded_stage_traffic"]
 
 HW = {
     "peak_flops": 197e12,     # bf16 per chip
@@ -69,6 +70,43 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
         out[kind] += parse_shape_bytes(m.group(1))
     out["total"] = sum(out[k] for k in _COLL_OPS)
     return out
+
+
+def sharded_stage_traffic(n_local: int, batch_rows: int, steps,
+                          dtype_bytes: int = 4,
+                          hw: Optional[dict] = None) -> Dict:
+    """Modeled per-chip traffic of a feature-sharded SPM schedule.
+
+    ``steps`` is ``parallel.spm_shard.plan_steps(...)`` output: per
+    ``("cross", ell, k)`` stage one collective-permute moves the chip's
+    whole ``(batch_rows, n_local)`` slab to its XOR partner; per
+    ``("local", off, strides)`` run the fused kernel costs one HBM read +
+    one write of the slab (interior run boundaries of a multi-run plan are
+    not modeled here — n_local is tile-sized in practice).  Returns
+    per-stage rows plus totals and roofline seconds on the §Roofline HW
+    constants (per-chip HBM vs ICI), so kernel_bench / dryrun can place
+    the collective term next to the HBM term.
+    """
+    hw = hw or HW
+    slab = batch_rows * n_local * dtype_bytes
+    stages = []
+    coll_total = hbm_total = 0
+    for step in steps:
+        if step[0] == "cross":
+            stages.append({"kind": "cross", "stage": step[1], "k": step[2],
+                           "permute_bytes": slab, "hbm_bytes": 2 * slab})
+            coll_total += slab
+            hbm_total += 2 * slab
+        else:
+            stages.append({"kind": "local", "stage": step[1],
+                           "n_stages": len(step[2]), "permute_bytes": 0,
+                           "hbm_bytes": 2 * slab})
+            hbm_total += 2 * slab
+    return {"stages": stages,
+            "permute_bytes_per_chip": coll_total,
+            "hbm_bytes_per_chip": hbm_total,
+            "collective_s": coll_total / hw["ici_bw"],
+            "memory_s": hbm_total / hw["hbm_bw"]}
 
 
 def roofline_terms(flops_per_chip: float, bytes_per_chip: float,

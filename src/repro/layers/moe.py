@@ -39,6 +39,8 @@ class MoEConfig:
     spm_stages: Optional[int] = None
     spm_backward: str = "autodiff"
     spm_use_kernel: Optional[bool] = None
+    spm_schedule: str = "butterfly"
+    spm_n_shards: int = 1
     param_dtype: Any = jnp.float32
 
     @property
@@ -48,6 +50,8 @@ class MoEConfig:
                          spm_stages=self.spm_stages,
                          spm_backward=self.spm_backward,
                          spm_use_kernel=self.spm_use_kernel,
+                         spm_schedule=self.spm_schedule,
+                         spm_n_shards=self.spm_n_shards,
                          param_dtype=self.param_dtype)
 
     @property
@@ -57,6 +61,8 @@ class MoEConfig:
                          spm_stages=self.spm_stages,
                          spm_backward=self.spm_backward,
                          spm_use_kernel=self.spm_use_kernel,
+                         spm_schedule=self.spm_schedule,
+                         spm_n_shards=self.spm_n_shards,
                          param_dtype=self.param_dtype)
 
     def capacity(self, group_tokens: int) -> int:

@@ -83,6 +83,10 @@ class ModelConfig:
     spm_backward: str = "custom"
     spm_use_kernel: Optional[bool] = None  # fused Pallas operator (tri-state:
                                            # None=auto/on-TPU, True, False)
+    spm_schedule: str = "butterfly"        # "two_level" + spm_n_shards > 1:
+    spm_n_shards: int = 1                  # feature axis distributable over
+                                           # the "model" mesh axis via
+                                           # parallel/spm_shard.py
     # io
     input_kind: str = "tokens"       # "tokens" | "embeddings"
     tie_embeddings: bool = True
@@ -102,7 +106,9 @@ class ModelConfig:
             use_qk_norm=self.qk_norm, window=spec.window,
             linear_impl=self.linear_impl, spm_stages=self.spm_stages,
             spm_backward=self.spm_backward,
-            spm_use_kernel=self.spm_use_kernel, q_chunk=self.q_chunk,
+            spm_use_kernel=self.spm_use_kernel,
+            spm_schedule=self.spm_schedule, spm_n_shards=self.spm_n_shards,
+            q_chunk=self.q_chunk,
             k_chunk=self.k_chunk, param_dtype=self.param_dtype)
 
     def ffn_cfg(self) -> FFNConfig:
@@ -110,7 +116,9 @@ class ModelConfig:
             d_model=self.d_model, d_ff=self.d_ff,
             linear_impl=self.linear_impl, spm_stages=self.spm_stages,
             spm_backward=self.spm_backward,
-            spm_use_kernel=self.spm_use_kernel, param_dtype=self.param_dtype)
+            spm_use_kernel=self.spm_use_kernel,
+            spm_schedule=self.spm_schedule, spm_n_shards=self.spm_n_shards,
+            param_dtype=self.param_dtype)
 
     def moe_cfg(self) -> MoEConfig:
         return MoEConfig(
@@ -119,7 +127,9 @@ class ModelConfig:
             capacity_factor=self.capacity_factor,
             shared_d_ff=self.shared_d_ff, linear_impl=self.linear_impl,
             spm_stages=self.spm_stages, spm_backward=self.spm_backward,
-            spm_use_kernel=self.spm_use_kernel, param_dtype=self.param_dtype)
+            spm_use_kernel=self.spm_use_kernel,
+            spm_schedule=self.spm_schedule, spm_n_shards=self.spm_n_shards,
+            param_dtype=self.param_dtype)
 
     def mamba_cfg(self) -> Mamba2Config:
         return Mamba2Config(
@@ -127,7 +137,9 @@ class ModelConfig:
             d_head=self.ssm_head, chunk=self.ssm_chunk,
             linear_impl=self.linear_impl, spm_stages=self.spm_stages,
             spm_backward=self.spm_backward,
-            spm_use_kernel=self.spm_use_kernel, param_dtype=self.param_dtype)
+            spm_use_kernel=self.spm_use_kernel,
+            spm_schedule=self.spm_schedule, spm_n_shards=self.spm_n_shards,
+            param_dtype=self.param_dtype)
 
     def shared_attn_cfg(self) -> AttentionConfig:
         return self.attn_cfg(LayerSpec(mixer="attn"))
@@ -137,7 +149,9 @@ class ModelConfig:
             d_model=self.d_model, d_ff=self.shared_attn_d_ff,
             linear_impl=self.linear_impl, spm_stages=self.spm_stages,
             spm_backward=self.spm_backward,
-            spm_use_kernel=self.spm_use_kernel, param_dtype=self.param_dtype)
+            spm_use_kernel=self.spm_use_kernel,
+            spm_schedule=self.spm_schedule, spm_n_shards=self.spm_n_shards,
+            param_dtype=self.param_dtype)
 
     def embed_cfg(self) -> EmbeddingConfig:
         return EmbeddingConfig(

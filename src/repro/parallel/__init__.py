@@ -1,6 +1,10 @@
-"""Mesh + PartitionSpec machinery (DP / FSDP / TP / EP / SP + pod axis)."""
+"""Mesh + PartitionSpec machinery (DP / FSDP / TP / EP / SP + pod axis),
+plus the distributed two_level SPM executor (feature axis over "model")."""
 
 from repro.parallel.sharding import (  # noqa: F401
     param_spec, param_shardings, batch_spec, cache_specs, data_axes,
     tree_path_str,
+)
+from repro.parallel.spm_shard import (  # noqa: F401
+    spm_apply_sharded, sharded_eligible, plan_steps,
 )

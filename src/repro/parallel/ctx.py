@@ -24,7 +24,7 @@ from typing import Optional
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-__all__ = ["activation_sharding", "constrain"]
+__all__ = ["activation_sharding", "constrain", "feature_mesh"]
 
 _STATE = threading.local()
 
@@ -46,6 +46,27 @@ def activation_sharding(mesh: Mesh, *, shard_heads: bool = True,
         yield
     finally:
         _STATE.ctx = prev
+
+
+def feature_mesh(n_shards: Optional[int] = None) -> Optional[Mesh]:
+    """The active mesh when feature sharding is enabled, else None.
+
+    ``core/spm.spm_apply`` calls this to decide whether to route a
+    two_level operator through the distributed executor
+    (``parallel/spm_shard.py``): it needs an ``activation_sharding`` block
+    with ``shard_feature=True``, a ``"model"`` mesh axis, and (when
+    ``n_shards`` is given) an axis size matching the operator's shard
+    count — otherwise the unsharded composition runs and XLA partitions it.
+    """
+    ctx = _current()
+    if ctx is None or not ctx.get("shard_feature"):
+        return None
+    mesh = ctx["mesh"]
+    if "model" not in mesh.axis_names:
+        return None
+    if n_shards is not None and mesh.shape["model"] != n_shards:
+        return None
+    return mesh
 
 
 def constrain(x: jax.Array, kind: str) -> jax.Array:

@@ -42,6 +42,21 @@ def tree_path_str(path) -> str:
     return "/".join(parts)
 
 
+# SPM parameters: pair / feature axes split over "model" in the SAME
+# contiguous blocks the distributed two_level executor
+# (parallel/spm_shard.py) reads — stage coeffs by trailing pair axis,
+# diagonals/bias by the feature axis.  Shared by the "tp" rule table below
+# and the "spm_feat" profile.
+_SPM_PARAM_RULES = (
+    # stage coeffs: (L, n_pairs, 4) / (L, n_pairs) — pairs over model
+    (lambda p: p.endswith("/mix"), (None, "model", None)),
+    (lambda p: p.endswith("/theta"), (None, "model")),
+    # diagonals / bias: (n,) over model, matching the pair sharding
+    (lambda p: any(p.endswith(s) for s in
+                   ("/d_in", "/d_out", "/bias", "/res_scale")),
+     ("model",)),
+)
+
 # trailing-dim rule table: (predicate on path, trailing spec)
 # order matters — first match wins.
 _RULES = (
@@ -60,19 +75,13 @@ _RULES = (
     (lambda p: any(p.endswith(s) for s in
                    ("/o/w", "/down/w", "out_proj/w", "/head/w")),
      ("model", "data")),
-    # SPM stage coeffs: (L, n_pairs, 4) — pairs over model (TP)
-    (lambda p: p.endswith("/mix"), (None, "model", None)),
-    (lambda p: p.endswith("/theta"), (None, "model")),
-    # SPM diagonals / bias: (n,) over model, matching the pair sharding
-    (lambda p: any(p.endswith(s) for s in
-                   ("/d_in", "/d_out", "/bias", "/res_scale")),
-     ("model",)),
+    *_SPM_PARAM_RULES,
     # mamba conv: (K, conv_dim) — conv_dim over model
     (lambda p: p.endswith("conv_w"), (None, "model")),
 )
 
 
-PROFILES = ("tp", "spm_dp", "spm_dp_g", "spm_dp_g2")
+PROFILES = ("tp", "spm_dp", "spm_dp_g", "spm_dp_g2", "spm_feat")
 
 
 def param_spec(path_str: str, ndim: int, mesh: Mesh,
@@ -88,11 +97,16 @@ def param_spec(path_str: str, ndim: int, mesh: Mesh,
                        expert parallelism.  Activations stay batch-sharded
                        over the data axes; heads are sharded via explicit
                        activation constraints (parallel/ctx.py).
+    profile="spm_feat": spm_dp + SPM stage coeffs/diagonals SHARD-SPLIT
+                       over "model" in the blocks the two_level distributed
+                       executor reads (pair axis for mix/theta, feature
+                       axis for d_in/d_out/bias) — feature parallelism via
+                       collective_permute instead of replication.
     """
     have_model = "model" in mesh.axis_names
     have_data = "data" in mesh.axis_names
 
-    if profile.startswith("spm_dp"):
+    if profile.startswith("spm_dp") or profile == "spm_feat":
         is_expert = "/experts/" in path_str
         if path_str.endswith("embed/table") or path_str.endswith("embed/out"):
             return P(*([None] * (ndim - 2)), "model", None)
@@ -103,6 +117,13 @@ def param_spec(path_str: str, ndim: int, mesh: Mesh,
             spec = [None] * ndim
             spec[expert_axis] = "model"
             return P(*spec)
+        if profile == "spm_feat" and have_model:
+            for pred, trailing in _SPM_PARAM_RULES:
+                if pred(path_str):
+                    k = len(trailing)
+                    if ndim < k:
+                        return P(*([None] * ndim))
+                    return P(*([None] * (ndim - k)), *trailing)
         return P(*([None] * ndim))
 
     def mesh_ok(ax):

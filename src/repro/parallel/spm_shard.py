@@ -1,0 +1,527 @@
+"""Distributed two_level SPM: the feature axis sharded over ``"model"``.
+
+The paper's two_level schedule was designed for exactly this executor
+(core/pairings.py): with ``n = n_shards * n_local`` features block-sharded
+over the mesh's ``"model"`` axis, every stage is one of two shapes:
+
+* **shard-local run** (``n_local % (2*s) == 0``) — pairs stay inside one
+  shard block.  Maximal consecutive runs of local stages execute on the
+  shard-resident ``(rows, n_local)`` slab through the existing fused Pallas
+  kernel (``kernels/spm_stack.py``; interpret mode off-TPU) or the XLA 2x2
+  composition — zero communication.
+* **cross-shard stage** (``s = k * n_local``, ``k`` a power of two) — pairs
+  lane ``r`` of shard ``j`` with lane ``r`` of shard ``j XOR k``.  Realized
+  as one ``jax.lax.ppermute`` partner exchange (an involution: the XOR
+  permutation is its own inverse) plus a local 2x2 mix: the "low" partner
+  (``j & k == 0``) holds the x0 role and computes ``y0 = a*x0 + b*x1``, the
+  "high" partner computes ``y1 = c*x0 + d*x1``.
+
+The whole sharded operator — D_in fold, stages, D_out/bias fold — runs
+inside one ``shard_map`` with a closed-form ``custom_vjp``:
+
+* the transpose of a partner exchange is the same exchange, so the backward
+  walks the schedule in reverse issuing the SAME ppermutes (plus one for
+  the saved stage input, needed by the coefficient grads);
+* each shard computes only the coefficient-grad components its role owns
+  (low: g_a, g_b; high: g_c, g_d) — the gather that built its coefficient
+  table transposes to a scatter-add that merges the two partners' partials
+  into the full (a, b, c, d) rows, so no all-reduce of parameter grads over
+  the feature axis is ever issued;
+* diag/bias grads are per-shard slices of (n,) vectors (out-sharded over
+  ``"model"``), again collective-free.
+
+Per-stage coefficient slabs are gathered OUTSIDE the shard_map
+(``_step_tables`` — pure O(nL) indexing, differentiable) and passed in
+pre-sharded with ``P("model")`` leading specs, so each device reads exactly
+the rows its lanes need: for a local stage the contiguous pair block
+``[j*n_local/2, (j+1)*n_local/2)``, for a cross stage the shared partner
+rows ``[Q(j)*n_local, (Q(j)+1)*n_local)`` with
+``Q(j) = ((j & ~k) // 2k)*k + ((j & ~k) % 2k)``.
+
+Rectangular widths (``in_width``/``out_width``) are realized as an XLA
+pad/slice AROUND the square sharded core (the rectangular-native in-kernel
+masking of the unsharded path needs per-shard widths — a later PR).
+
+The lowered HLO of this path contains ``collective-permute`` only — no
+all-gather or all-reduce of the feature axis (asserted by
+tests/test_distributed.py via ``hlo_analysis.collective_bytes``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import spm as spm_mod
+from repro.core.pairings import Schedule, Stage
+from repro.kernels import spm_stack as K
+from repro.kernels.ops import (default_interpret, pick_block_rows_for_plan,
+                               plan_runs)
+
+__all__ = ["spm_apply_sharded", "sharded_eligible", "plan_steps",
+           "cross_partner_perm"]
+
+AXIS = "model"
+_F32 = jnp.float32
+
+
+def _is_pow2(k: int) -> bool:
+    return k > 0 and (k & (k - 1)) == 0
+
+
+# ---------------------------------------------------------------------------
+# schedule planning
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def plan_steps(n: int, strides: Tuple[int, ...],
+               n_shards: int) -> Tuple[tuple, ...]:
+    """Split a stride schedule into shard-executable steps.
+
+    Returns a tuple of ``("local", stage_offset, run_strides)`` /
+    ``("cross", stage_index, k)`` entries covering the schedule in order;
+    consecutive local stages are grouped into one run (one fused kernel
+    call).  Raises ValueError when any stage is neither shard-local nor an
+    XOR partner exchange — callers treat that as "not sharded-eligible".
+    """
+    if n % n_shards:
+        raise ValueError(f"n={n} not divisible by n_shards={n_shards}")
+    n_local = n // n_shards
+    steps = []
+    run: list = []
+    run_start = 0
+    for ell, s in enumerate(strides):
+        if n % (2 * s):
+            raise ValueError(f"stride {s} invalid for n={n}")
+        if s < n_local and n_local % (2 * s) == 0:
+            if not run:
+                run_start = ell
+            run.append(s)
+            continue
+        if run:
+            steps.append(("local", run_start, tuple(run)))
+            run = []
+        k, rem = divmod(s, n_local)
+        if rem or not _is_pow2(k) or n_shards % (2 * k):
+            raise ValueError(
+                f"stride {s} is neither local to n_local={n_local} nor a "
+                f"power-of-two multiple partner exchange over "
+                f"{n_shards} shards")
+        steps.append(("cross", ell, k))
+    if run:
+        steps.append(("local", run_start, tuple(run)))
+    return tuple(steps)
+
+
+def sharded_eligible(cfg, sched: Optional[Schedule] = None) -> bool:
+    """Whether the distributed executor can express this operator exactly:
+    even n divisible by n_shards, all-structured stages each either
+    shard-local or an XOR partner exchange, and a backward mode whose
+    residual contract the custom_vjp honors (custom_inverse stores outputs;
+    this path stores step inputs)."""
+    if cfg.n_shards <= 1 or cfg.odd or cfg.n % cfg.n_shards:
+        return False
+    if cfg.backward == "custom_inverse":
+        return False
+    sched = cfg.pairing if sched is None else sched
+    if not sched.all_structured:
+        return False
+    try:
+        plan_steps(cfg.n, sched.strides(), cfg.n_shards)
+    except ValueError:
+        return False
+    return True
+
+
+def cross_partner_perm(n_shards: int, k: int) -> Tuple[Tuple[int, int], ...]:
+    """The ppermute permutation of a cross stage: shard j <-> j XOR k.
+    An involution — forward and backward issue the identical exchange."""
+    return tuple((j, j ^ k) for j in range(n_shards))
+
+
+@functools.lru_cache(maxsize=None)
+def _cross_coeff_rows(n_shards: int, n_local: int, k: int) -> np.ndarray:
+    """(n_shards, n_local) pair-row indices for a cross stage: lane r of
+    shard j (and of its partner j XOR k — the rows are shared) uses pair
+    Q(j)*n_local + r with Q(j) = ((j & ~k) // 2k)*k + ((j & ~k) % 2k)."""
+    j = np.arange(n_shards)
+    jl = j & ~k                       # the pair's low-partner shard id
+    q = (jl // (2 * k)) * k + (jl % (2 * k))
+    return q[:, None] * n_local + np.arange(n_local)[None, :]
+
+
+# ---------------------------------------------------------------------------
+# static plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    """Hashable static description closed over by the custom_vjp."""
+
+    mesh: Mesh
+    n: int
+    n_local: int
+    n_shards: int
+    steps: Tuple[tuple, ...]
+    has_din: bool
+    has_dout: bool
+    has_bias: bool
+    use_kernel: bool
+    block_rows: int
+    interpret: bool
+    dp: Tuple[str, ...] = ()     # pure-DP mesh axes: rows shard over these
+
+    def table_specs(self) -> Tuple[P, ...]:
+        return tuple(P(AXIS) for _ in self.steps)
+
+    def vec_spec(self, present: bool) -> P:
+        return P(AXIS) if present else P()   # (1,) placeholders replicated
+
+    def act_spec(self) -> P:
+        # (rows, n): rows over the DP axes (kept replicated when there are
+        # none), features over "model" — entering with batch-sharded
+        # activations must NOT all-gather them.
+        return P(self.dp if self.dp else None, AXIS)
+
+
+def _step_tables(coeffs: jax.Array, steps, n_shards: int,
+                 n_local: int) -> Tuple[jax.Array, ...]:
+    """Per-step coefficient tables with a leading shard axis (sharded into
+    the shard_map with P("model")).  Differentiable: the local case is a
+    reshape/transpose, the cross case a gather whose transpose scatter-adds
+    the two partners' grad partials into the shared rows."""
+    nl2 = n_local // 2
+    tabs = []
+    for step in steps:
+        if step[0] == "local":
+            _, start, run = step
+            blk = coeffs[start: start + len(run)]          # (Lr, n/2, 4)
+            tabs.append(blk.reshape(len(run), n_shards, nl2, 4)
+                        .transpose(1, 0, 2, 3))            # (S, Lr, nl2, 4)
+        else:
+            _, ell, k = step
+            rows = _cross_coeff_rows(n_shards, n_local, k)
+            tabs.append(coeffs[ell][rows])                 # (S, n_local, 4)
+    return tuple(tabs)
+
+
+# ---------------------------------------------------------------------------
+# shard-local stage math
+# ---------------------------------------------------------------------------
+
+def _cross_fwd(z, cf, k: int, plan: ShardPlan):
+    """One partner exchange + local 2x2 mix.  z: (rows, n_local);
+    cf: (n_local, 4) rows shared with the partner shard."""
+    zp = jax.lax.ppermute(z, AXIS, cross_partner_perm(plan.n_shards, k))
+    low = (jax.lax.axis_index(AXIS) & k) == 0
+    a, b, c, d = (cf[:, i].astype(z.dtype) for i in range(4))
+    return jnp.where(low, a * z + b * zp, c * zp + d * z)
+
+
+def _cross_bwd(z_in, delta, cf, k: int, plan: ShardPlan):
+    """Transpose of the partner exchange is the same exchange.  Each shard
+    emits only the coefficient-grad components its role owns (low: a, b;
+    high: c, d); the table gather's scatter-add merges the partners."""
+    perm = cross_partner_perm(plan.n_shards, k)
+    zp = jax.lax.ppermute(z_in, AXIS, perm)
+    dp = jax.lax.ppermute(delta, AXIS, perm)
+    low = (jax.lax.axis_index(AXIS) & k) == 0
+    a, b, c, d = (cf[:, i].astype(delta.dtype) for i in range(4))
+    # g_x0 = a d0 + c d1 on the low shard; g_x1 = b d0 + d d1 on the high.
+    g_in = jnp.where(low, a * delta + c * dp, b * dp + d * delta)
+    # low holds (d0, x0) and receives x1=zp: g_a = sum d0 x0, g_b = sum d0 x1
+    # high holds (d1, x1) and receives x0=zp: g_c = sum d1 x0, g_d = sum d1 x1
+    s_own = jnp.sum(delta.astype(_F32) * z_in.astype(_F32), axis=0)
+    s_swp = jnp.sum(delta.astype(_F32) * zp.astype(_F32), axis=0)
+    zero = jnp.zeros_like(s_own)
+    g_cf = jnp.where(low,
+                     jnp.stack([s_own, s_swp, zero, zero], axis=-1),
+                     jnp.stack([zero, zero, s_swp, s_own], axis=-1))
+    return g_in, g_cf.astype(cf.dtype)
+
+
+def _segment_fwd(z, cf, run: Tuple[int, ...], plan: ShardPlan):
+    """A maximal run of shard-local stages on the resident slab: the fused
+    Pallas kernel when enabled (interpret off-TPU), else the XLA 2x2
+    composition."""
+    if plan.use_kernel:
+        off = 0
+        for run_strides, n_tile in plan_runs(plan.n_local, run):
+            z = K.spm_stack_kernel_call(
+                z, cf[off: off + len(run_strides)], strides=run_strides,
+                block_rows=plan.block_rows, n_tile=n_tile,
+                interpret=plan.interpret)
+            off += len(run_strides)
+        return z
+    for i, s in enumerate(run):
+        z = spm_mod.apply_stage(z, cf[i].astype(z.dtype), Stage(stride=s))
+    return z
+
+
+def _segment_bwd(z_in, delta, cf, run: Tuple[int, ...], plan: ShardPlan):
+    """Closed-form backward of a local run from its saved input: the fused
+    backward kernel per planned sub-run (stage inputs remat in VMEM), else
+    forward-recompute + per-stage eq. 12-14 grads."""
+    if plan.use_kernel:
+        runs = plan_runs(plan.n_local, run)
+        zs, z, off = [], z_in, 0
+        for run_strides, n_tile in runs:
+            zs.append(z)
+            z = K.spm_stack_kernel_call(
+                z, cf[off: off + len(run_strides)], strides=run_strides,
+                block_rows=plan.block_rows, n_tile=n_tile,
+                interpret=plan.interpret)
+            off += len(run_strides)
+        offs = np.cumsum([0] + [len(rs) for rs, _ in runs])
+        g_parts = [None] * len(runs)
+        for r in range(len(runs) - 1, -1, -1):
+            run_strides, n_tile = runs[r]
+            delta, gcf = K.spm_stack_bwd_kernel_call(
+                zs[r], cf[offs[r]: offs[r + 1]], delta,
+                strides=run_strides, block_rows=plan.block_rows,
+                n_tile=n_tile, interpret=plan.interpret)
+            g_parts[r] = gcf
+        return delta, jnp.concatenate(g_parts, axis=0).astype(cf.dtype)
+    zs, z = [], z_in
+    for i, s in enumerate(run):
+        zs.append(z)
+        z = spm_mod.apply_stage(z, cf[i].astype(z.dtype), Stage(stride=s))
+    g_cf = []
+    for i in range(len(run) - 1, -1, -1):
+        delta, gc, _ = spm_mod._stage_grads(
+            zs[i], delta, cf[i].astype(delta.dtype), Stage(stride=run[i]),
+            None)
+        g_cf.append(gc)
+    return delta, jnp.stack(g_cf[::-1], axis=0).astype(cf.dtype)
+
+
+# ---------------------------------------------------------------------------
+# per-shard operator body
+# ---------------------------------------------------------------------------
+
+def _shard_fwd(plan: ShardPlan, tabs, d_in, d_out, bias, x2, collect: bool):
+    fdt = x2.dtype
+    z = x2
+    if plan.has_din:
+        z = z * d_in.astype(fdt)
+    step_ins = []
+    for step, tab in zip(plan.steps, tabs):
+        if collect:
+            step_ins.append(z)
+        cf = tab[0]                      # drop the (1,) local shard axis
+        if step[0] == "cross":
+            z = _cross_fwd(z, cf, step[2], plan)
+        else:
+            z = _segment_fwd(z, cf, step[2], plan)
+    z_last = z
+    if plan.has_dout:
+        z = z * d_out.astype(fdt)
+    if plan.has_bias:
+        z = z + bias.astype(fdt)
+    if collect:
+        return z, (x2, tuple(step_ins), z_last)
+    return z
+
+
+def _shard_bwd(plan: ShardPlan, tabs, d_in, d_out, bias, res, gy):
+    x2, step_ins, z_last = res
+    fdt = gy.dtype
+    ph = jnp.zeros((1,), _F32)
+    g_bias = (jnp.sum(gy.astype(_F32), axis=0) if plan.has_bias else ph)
+    delta = gy
+    if plan.has_dout:
+        g_dout = jnp.sum(gy.astype(_F32) * z_last.astype(_F32), axis=0)
+        delta = gy * d_out.astype(fdt)
+    else:
+        g_dout = ph
+    g_tabs = []
+    for i in range(len(plan.steps) - 1, -1, -1):
+        step = plan.steps[i]
+        cf = tabs[i][0]
+        if step[0] == "cross":
+            delta, g = _cross_bwd(step_ins[i], delta, cf, step[2], plan)
+        else:
+            delta, g = _segment_bwd(step_ins[i], delta, cf, step[2], plan)
+        g_tabs.append(g[None])           # restore the (1,) local shard axis
+    if plan.has_din:
+        g_din = jnp.sum(delta.astype(_F32) * x2.astype(_F32), axis=0)
+        delta = delta * d_in.astype(fdt)
+    else:
+        g_din = ph
+    if plan.dp:
+        # rows shard over the DP axes, so every batch-summed parameter grad
+        # above is a per-DP-shard partial: reduce over dp (standard data-
+        # parallel grad sync, parameter-sized — the feature axis itself is
+        # never reduced).
+        g_tabs = [jax.lax.psum(g, plan.dp) for g in g_tabs]
+        if plan.has_din:
+            g_din = jax.lax.psum(g_din, plan.dp)
+        if plan.has_dout:
+            g_dout = jax.lax.psum(g_dout, plan.dp)
+        if plan.has_bias:
+            g_bias = jax.lax.psum(g_bias, plan.dp)
+    return delta, tuple(g_tabs[::-1]), g_din, g_dout, g_bias
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp over the whole sharded operator
+# ---------------------------------------------------------------------------
+
+def _fwd_specs(plan: ShardPlan):
+    act = plan.act_spec()
+    in_specs = (plan.table_specs(), plan.vec_spec(plan.has_din),
+                plan.vec_spec(plan.has_dout), plan.vec_spec(plan.has_bias),
+                act)
+    res_specs = (act, tuple(act for _ in plan.steps), act)
+    return in_specs, act, res_specs
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _sharded_core(plan: ShardPlan, tables, d_in, d_out, bias, x2):
+    """x2: (rows, n) row-major, rows pre-padded to block_rows when the
+    kernel path is on.  Returns (rows, n)."""
+    in_specs, y_spec, _ = _fwd_specs(plan)
+    f = shard_map(
+        functools.partial(_shard_fwd, plan, collect=False),
+        mesh=plan.mesh, in_specs=in_specs, out_specs=y_spec,
+        check_rep=False)
+    return f(tables, d_in, d_out, bias, x2)
+
+
+def _sharded_core_fwd(plan, tables, d_in, d_out, bias, x2):
+    in_specs, y_spec, res_specs = _fwd_specs(plan)
+    f = shard_map(
+        functools.partial(_shard_fwd, plan, collect=True),
+        mesh=plan.mesh, in_specs=in_specs, out_specs=(y_spec, res_specs),
+        check_rep=False)
+    y2, res = f(tables, d_in, d_out, bias, x2)
+    return y2, (tables, d_in, d_out, bias, res)
+
+
+def _sharded_core_bwd(plan, saved, gy2):
+    tables, d_in, d_out, bias, res = saved
+    in_specs, y_spec, res_specs = _fwd_specs(plan)
+    out_specs = (y_spec, plan.table_specs(), plan.vec_spec(plan.has_din),
+                 plan.vec_spec(plan.has_dout), plan.vec_spec(plan.has_bias))
+    f = shard_map(
+        functools.partial(_shard_bwd, plan),
+        mesh=plan.mesh,
+        in_specs=in_specs[:4] + (res_specs, y_spec),
+        out_specs=out_specs, check_rep=False)
+    g_x2, g_tabs, g_din, g_dout, g_bias = f(tables, d_in, d_out, bias,
+                                            res, gy2)
+
+    def _vg(g, like, present):
+        return g.astype(like.dtype) if present else jnp.zeros_like(like)
+
+    g_tabs = tuple(g.astype(t.dtype) for g, t in zip(g_tabs, tables))
+    return (g_tabs, _vg(g_din, d_in, plan.has_din),
+            _vg(g_dout, d_out, plan.has_dout),
+            _vg(g_bias, bias, plan.has_bias), g_x2)
+
+
+_sharded_core.defvjp(_sharded_core_fwd, _sharded_core_bwd)
+
+
+# ---------------------------------------------------------------------------
+# public entry
+# ---------------------------------------------------------------------------
+
+def _resolve_kernel(cfg, steps, backend_tpu: bool) -> bool:
+    if cfg.use_kernel is False:
+        return False
+    if not any(step[0] == "local" for step in steps):
+        return False
+    return True if cfg.use_kernel else backend_tpu
+
+
+def spm_apply_sharded(params: dict, x: jax.Array, cfg, mesh: Mesh, *,
+                      in_width: Optional[int] = None,
+                      out_width: Optional[int] = None) -> jax.Array:
+    """Feature-sharded SPM forward (+ closed-form grads via custom_vjp).
+
+    Semantically identical to the unsharded ``spm_apply`` on the same
+    params/config; the mesh's ``"model"`` axis size must equal
+    ``cfg.n_shards``.  Rows co-shard over any pure-DP mesh axes
+    ("pod"/"data") so batch-sharded activations enter without an
+    all-gather.  Collectives issued: one collective-permute per cross-shard
+    stage (two in the backward) — plus, only when DP axes exist, the
+    standard parameter-sized grad psum over those axes in the backward.
+    """
+    n = cfg.n
+    if mesh.shape[AXIS] != cfg.n_shards:
+        raise ValueError(
+            f"mesh axis {AXIS!r} has size {mesh.shape[AXIS]}, operator has "
+            f"n_shards={cfg.n_shards}")
+    sched = cfg.pairing
+    steps = plan_steps(n, sched.strides(), cfg.n_shards)
+    n_local = n // cfg.n_shards
+
+    if in_width is not None and in_width != n:
+        pad = [(0, 0)] * (x.ndim - 1) + [(0, n - in_width)]
+        x = jnp.pad(x, pad)
+    lead = x.shape[:-1]
+    rows = int(np.prod(lead, dtype=np.int64)) if lead else 1
+    x2 = x.reshape(rows, n)
+
+    from repro.parallel.sharding import data_axes
+    dp = data_axes(mesh)
+    dp_total = 1
+    for a in dp:
+        dp_total *= int(mesh.shape[a])
+
+    use_kernel = _resolve_kernel(cfg, steps,
+                                 jax.default_backend() == "tpu")
+    block_rows = 1
+    if use_kernel:
+        rows_per_dp = -(-rows // dp_total)
+        block_rows = min(
+            pick_block_rows_for_plan(plan_runs(n_local, step[2]),
+                                     rows_per_dp,
+                                     dtype_bytes=x.dtype.itemsize)
+            for step in steps if step[0] == "local")
+    # rows must split evenly over the DP axes AND (kernel path) each
+    # DP-local slab must be a block_rows multiple; padded rows are zeros,
+    # contributing exact zeros to every batch-summed parameter grad.
+    quantum = dp_total * block_rows
+    padded = -(-rows // quantum) * quantum
+    if padded != rows:
+        x2 = jnp.pad(x2, ((0, padded - rows), (0, 0)))
+
+    plan = ShardPlan(
+        mesh=mesh, n=n, n_local=n_local, n_shards=cfg.n_shards,
+        steps=steps, has_din=cfg.use_diag, has_dout=cfg.use_diag,
+        has_bias=cfg.use_bias, use_kernel=use_kernel,
+        block_rows=block_rows, interpret=default_interpret(), dp=dp)
+
+    coeffs = spm_mod.stage_coeffs(params, cfg)
+    tables = _step_tables(coeffs, steps, cfg.n_shards, n_local)
+    # Pin the O(nL) tables replicated: without this, XLA back-propagates the
+    # shard_map's P("model") spec into the gather above and then re-gathers
+    # the result — a (tiny but) spurious all-gather in the forward HLO.  The
+    # reshard at the shard_map boundary is then a local slice.  (The
+    # BACKWARD still pays one parameter-sized all-gather assembling the
+    # replicated coefficient grad from per-shard partials — inherent to
+    # replicated params, and O(nL), never activation-sized.)
+    rep = jax.sharding.NamedSharding(mesh, P())
+    tables = tuple(jax.lax.with_sharding_constraint(t, rep) for t in tables)
+    ph = jnp.zeros((1,), _F32)
+    y2 = _sharded_core(
+        plan, tables,
+        params["d_in"] if cfg.use_diag else ph,
+        params["d_out"] if cfg.use_diag else ph,
+        params["bias"] if cfg.use_bias else ph,
+        x2)
+    if y2.shape[0] != rows:
+        y2 = y2[:rows]
+    y = y2.reshape(lead + (n,))
+    if out_width is not None and out_width != n:
+        y = y[..., :out_width]
+    return y

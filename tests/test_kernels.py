@@ -341,9 +341,11 @@ def test_use_kernel_fallback_rules():
     assert not use_fused_kernel(
         SPMConfig(n=16, n_stages=4, variant="rotation",
                   backward="custom_inverse", use_kernel=True))
-    # sharded two_level: stays on the partitionable XLA path until the
-    # kernel supports cross-shard collective stages
-    assert not use_fused_kernel(
+    # sharded two_level WITHOUT a mesh context: just a stride schedule —
+    # the fused kernel runs it unpartitioned.  (With a feature-sharding
+    # mesh active, spm_apply routes to the distributed executor BEFORE
+    # this check — parallel/spm_shard.py, tests/test_distributed.py.)
+    assert use_fused_kernel(
         SPMConfig(n=64, n_stages=6, schedule="two_level", n_shards=4,
                   use_kernel=True))
     assert use_fused_kernel(

@@ -64,6 +64,94 @@ def test_two_level_cross_strides_are_shard_aligned():
             assert s % n_local == 0    # partner = shard j XOR k
 
 
+# ---------------------------------------------------------------------------
+# two_level invariants the distributed executor (parallel/spm_shard.py)
+# relies on — property-tested under real hypothesis AND the conftest shim.
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.sampled_from([16, 64, 96, 256, 768]),
+       shards=st.sampled_from([2, 4, 8]),
+       L=st.integers(1, 12))
+def test_two_level_locals_precede_crosses_each_cycle(n, shards, L):
+    """Every stage is valid for n, and within each repetition of the stride
+    cycle all shard-local strides come before all cross-shard strides."""
+    sched = P.two_level_schedule(n, L, shards)
+    strides = sched.strides()
+    n_local = n // shards
+    for s in strides:
+        assert n % (2 * s) == 0
+    local = sorted({s for s in strides if s < n_local})
+    cross = sorted({s for s in strides if s >= n_local})
+    cycle = local + cross
+    assert list(strides) == [cycle[i % len(cycle)] for i in range(L)]
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.sampled_from([16, 48, 64, 96, 256]),
+       shards=st.sampled_from([2, 4, 8]))
+def test_two_level_cross_partner_is_j_xor_k(n, shards):
+    """Every cross stride is k * n_local with power-of-two k, and its pairs
+    connect shard j to shard j XOR k at the same local lane offset — the
+    collective_permute partner-exchange contract.  (The old builder emitted
+    e.g. stride 8 for n=48, 8 shards — straddling n_local=6 blocks.)"""
+    n_local = n // shards
+    sched = P.two_level_schedule(n, 16, shards)
+    crosses = [s for s in sched.strides() if s >= n_local]
+    for stage in sched.stages:
+        s = stage.stride
+        if s < n_local:
+            assert n_local % (2 * s) == 0      # shard-local stage
+            continue
+        k, rem = divmod(s, n_local)
+        assert rem == 0 and (k & (k - 1)) == 0 and shards % (2 * k) == 0
+        pairs = P._stage_pairs(stage, n)
+        shard_of, lane_of = pairs // n_local, pairs % n_local
+        assert np.all((shard_of[:, 0] ^ shard_of[:, 1]) == k)
+        assert np.all(lane_of[:, 0] == lane_of[:, 1])
+    if shards in (2, 4, 8):
+        assert crosses, "two_level must mix across shards"
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.sampled_from([16, 48, 64, 96, 240]),
+       shards=st.sampled_from([2, 3, 4, 6, 8, 12]))
+def test_two_level_connects_all_coordinates(n, shards):
+    """A full cycle of the schedule couples every coordinate with every
+    other — including NON-power-of-two shard counts, where the cross list
+    needs the odd-factor shard-graph strides (a pure-XOR cross set would
+    leave disconnected shard groups, e.g. 48/6)."""
+    if n % shards:
+        return
+    sched = P.two_level_schedule(n, 16, shards)
+    assert P.connectivity_components(sched) == 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.sampled_from([16, 24, 48]), L=st.integers(1, 8))
+def test_two_level_no_local_stride_fallback(n, L):
+    """n_local == 1 (or odd n_local) leaves no valid shard-local stride:
+    the builder falls back to local = [1], which is still a valid stage for
+    the unsharded executor (such schedules simply stay off the distributed
+    path)."""
+    shards = n        # n_local == 1: stride 1 cannot be shard-local
+    sched = P.two_level_schedule(n, L, shards)
+    strides = sched.strides()
+    assert 1 in set(strides) or L < 1
+    for s in strides:
+        assert n % (2 * s) == 0
+    assert sched.n_stages == L
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.sampled_from([10, 50, 100]), shards=st.sampled_from([3, 7, 8]))
+def test_two_level_indivisible_raises(n, shards):
+    if n % shards == 0:
+        return   # divisible combos are the other tests' domain
+    with pytest.raises(ValueError):
+        P.two_level_schedule(n, 4, shards)
+
+
 def test_default_n_stages_matches_paper():
     # paper: L = log2 n, capped (paper uses fixed L=12 at n=2048/4096)
     assert P.default_n_stages(2048) == 11

@@ -61,6 +61,29 @@ def test_expert_axis_gets_model():
     assert spec == P(None, "model", None, None, None)
 
 
+def test_spm_feat_profile_shard_splits_spm_params():
+    """spm_feat: SPM stage coeffs split on the pair axis, diagonals/bias on
+    the feature axis — the exact blocks parallel/spm_shard.py reads —
+    while everything else keeps the spm_dp layout."""
+    pf = "spm_feat"
+    assert SH.param_spec("layers/l0/mlp/up/mix", 3, MESH, pf) == \
+        P(None, "model", None)
+    assert SH.param_spec("layers/l0/mixer/q/theta", 2, MESH, pf) == \
+        P(None, "model")
+    assert SH.param_spec("layers/l0/mlp/up/d_in", 1, MESH, pf) == P("model")
+    assert SH.param_spec("layers/l0/mlp/up/bias", 1, MESH, pf) == P("model")
+    # scanned stacking axes stay replicated (trailing-dim rules)
+    assert SH.param_spec("layers/l0/mlp/up/mix", 4, MESH, pf) == \
+        P(None, None, "model", None)
+    # expert parallelism still wins for expert-stacked SPM params
+    assert SH.param_spec("layers/l0/mlp/experts/up/mix", 5, MESH, pf) == \
+        P(None, "model", None, None, None)
+    # non-SPM params keep the spm_dp layout
+    assert SH.param_spec("embed/table", 2, MESH, pf) == P("model", None)
+    assert SH.param_spec("layers/l0/norm1/scale", 1, MESH, pf) == P(None)
+    assert SH.param_spec("layers/l0/mixer/q/w", 2, MESH, pf) == P(None, None)
+
+
 def test_router_replicated_norm_replicated():
     assert SH.param_spec("layers/l0/mlp/router", 2, MESH) == P(None, None)
     assert SH.param_spec("layers/l0/norm1/scale", 1, MESH) == P(None)
