@@ -175,18 +175,39 @@ def traffic_model(n: int, batch: int, L: int,
 
 
 def sharded_model(n: int, batch: int, L: int,
-                  n_shards: int = SHARD_DEVICES) -> dict:
+                  n_shards: int = SHARD_DEVICES,
+                  in_width: int | None = None,
+                  out_width: int | None = None) -> dict:
     """Modeled sharded-vs-replicated traffic for one two_level operator.
 
     replicated — one chip runs the full n-wide fused plan (PR 1/2 model).
     sharded    — each of n_shards chips runs the n_local-wide slab; cross
     stages each move the slab once over ICI (collective_permute partner
     exchange).  Bytes are per chip, f32 activations.
+
+    The sharded traffic is modeled TWICE for the full operator (diag +
+    bias, plus any rectangular widths): ``modeled`` is the kernel-native
+    executor (diag/bias folded into the boundary kernel runs, the
+    rectangular input window-read in VMEM — this PR), ``modeled_pr3`` is
+    the PR 3 baseline (explicit elementwise diag/bias ops in the shard
+    body and an XLA pad/slice around the square core);
+    ``boundary_reduction`` is their per-stage-total HBM ratio.
     """
     strides = tuple(two_level_schedule(n, L, n_shards).strides())
     steps = plan_steps(n, strides, n_shards)
     n_local = n // n_shards
-    sh = sharded_stage_traffic(n_local, batch, steps)
+    # mirror the executor's width normalization (spm_apply_sharded): a
+    # full-width side is square — no boundary op exists to charge for
+    if in_width == n:
+        in_width = None
+    if out_width == n:
+        out_width = None
+    kw = dict(use_diag=True, use_bias=True,
+              in_width=in_width, out_width=out_width)
+    sh = sharded_stage_traffic(n_local, batch, steps,
+                               fold_boundaries=True, **kw)
+    sh_pr3 = sharded_stage_traffic(n_local, batch, steps,
+                                   fold_boundaries=False, **kw)
     act = batch * n * 4
     n_runs = len(plan_runs(n, strides))
     coeff_bytes = L * (n // 2) * 16 + 3 * n * 4
@@ -194,9 +215,13 @@ def sharded_model(n: int, batch: int, L: int,
     rep_s = rep_bytes / HW["hbm_bw"]
     shard_s = sh["memory_s"] + sh["collective_s"]
     return {"n": n, "L": L, "n_shards": n_shards, "n_local": n_local,
+            "in_width": in_width, "out_width": out_width,
             "n_cross_stages": sum(1 for s in steps if s[0] == "cross"),
             "n_local_runs": sum(1 for s in steps if s[0] == "local"),
             "modeled": sh,
+            "modeled_pr3": sh_pr3,
+            "boundary_reduction": (sh_pr3["hbm_bytes_per_chip"]
+                                   / sh["hbm_bytes_per_chip"]),
             "replicated_hbm_bytes": rep_bytes,
             "replicated_s": rep_s,
             "sharded_s": shard_s,
@@ -346,11 +371,27 @@ def main(argv=None) -> None:
     # plus an interpret-safe wall-clock from a forced-device-count child
     # for the smallest width.
     print("# sharded vs replicated (n,L,n_shards,cross_stages,"
-          "permute_bytes/chip,hbm_bytes/chip,replicated_bytes,model_speedup)")
+          "permute_bytes/chip,hbm_bytes/chip,pr3_hbm_bytes/chip,"
+          "boundary_reduction,replicated_bytes,model_speedup)")
     sharded_records = []
-    for i, n in enumerate(widths):
-        L = default_n_stages(n)
-        sr = sharded_model(n, args.batch, L)
+    shapes = [(n, None, None, None) for n in widths]
+    # one rectangular sharded row (FFN-up-like proportions): the windowed
+    # kernel boundaries drop the PR 3 pad/slice terms entirely
+    shapes.append((widths[0], widths[0] - widths[0] // 4, widths[0], None))
+    # and one fold-both row: L padded to end the two_level cycle on a
+    # LOCAL step, so d_out/bias fold too (the default-L schedules end on
+    # a cross stage and keep the explicit elementwise ops on that side —
+    # the model charges them; this row shows the full fold win)
+    n0 = widths[0]
+    for L_fold in range(default_n_stages(n0), default_n_stages(n0) + 16):
+        st = plan_steps(n0, tuple(two_level_schedule(
+            n0, L_fold, SHARD_DEVICES).strides()), SHARD_DEVICES)
+        if st[0][0] == "local" and st[-1][0] == "local":
+            shapes.append((n0, None, None, L_fold))
+            break
+    for i, (n, iw, ow, L_override) in enumerate(shapes):
+        L = L_override if L_override is not None else default_n_stages(n)
+        sr = sharded_model(n, args.batch, L, in_width=iw, out_width=ow)
         if i == 0 and not (args.skip_fused_timing
                            or args.skip_sharded_timing):
             # same batch as the modeled row: the JSON record's modeled
@@ -360,6 +401,8 @@ def main(argv=None) -> None:
         m = sr["modeled"]
         print(f"{n},{sr['L']},{sr['n_shards']},{sr['n_cross_stages']},"
               f"{m['permute_bytes_per_chip']},{m['hbm_bytes_per_chip']},"
+              f"{sr['modeled_pr3']['hbm_bytes_per_chip']},"
+              f"{sr['boundary_reduction']:.2f}x,"
               f"{sr['replicated_hbm_bytes']},{sr['speedup_model']:.2f}x")
         if sr.get("timing") and "error" not in sr["timing"]:
             t = sr["timing"]

@@ -13,6 +13,8 @@ __all__ = ["dense_layers", "local_global_layers", "moe_layers",
 
 
 def dense_layers(n: int) -> Tuple[LayerSpec, ...]:
+    """``n`` identical full-attention + dense-FFN layers (the default
+    transformer stack)."""
     return tuple([LayerSpec()] * n)
 
 
@@ -28,10 +30,13 @@ def local_global_layers(n: int, local_per_global: int,
 
 
 def moe_layers(n: int) -> Tuple[LayerSpec, ...]:
+    """``n`` layers with mixture-of-experts FFNs (Qwen3-MoE / Llama4
+    pattern)."""
     return tuple([LayerSpec(mlp="moe")] * n)
 
 
 def mamba_layers(n: int) -> Tuple[LayerSpec, ...]:
+    """``n`` pure Mamba2 mixer layers, no FFN (Mamba2 backbone pattern)."""
     return tuple([LayerSpec(mixer="mamba", mlp="none")] * n)
 
 
@@ -44,6 +49,8 @@ def hybrid_layers(n: int, attn_every: int) -> Tuple[LayerSpec, ...]:
 
 
 def with_overrides(cfg: ModelConfig, **kw) -> ModelConfig:
+    """Frozen-dataclass field override (``dataclasses.replace`` spelled as
+    a config verb: registry entries compose these)."""
     return dataclasses.replace(cfg, **kw)
 
 

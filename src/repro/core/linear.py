@@ -74,6 +74,8 @@ class LinearConfig:
 
     @property
     def is_spm(self) -> bool:
+        """Whether this linear is SPM-parameterized (vs the dense
+        baseline)."""
         return self.impl in SPM_IMPLS
 
     @property
@@ -83,6 +85,10 @@ class LinearConfig:
         return m + (m % 2)
 
     def spm_config(self) -> SPMConfig:
+        """The SPMConfig realizing this linear: square width ``self.n``,
+        diag always on (the rectangular embedding needs the output scale),
+        and ``custom_inverse`` silently downgraded to ``custom`` for the
+        general variant (its blocks need not be orthogonal)."""
         variant = "rotation" if self.impl == "spm_rotation" else "general"
         n_stages = (self.n_stages if self.n_stages is not None
                     else default_n_stages(self.n))
@@ -98,6 +104,8 @@ class LinearConfig:
 
 
 def init_linear(key: jax.Array, cfg: LinearConfig) -> dict:
+    """Initialize one linear's params: 1/sqrt(d_in) normal W (+ zero bias)
+    for dense, else ``init_spm`` of the embedded square operator."""
     if cfg.impl == "dense":
         kw, _ = jax.random.split(key)
         std = cfg.d_in ** -0.5
@@ -123,6 +131,8 @@ def linear_apply(params: dict, x: jax.Array, cfg: LinearConfig) -> jax.Array:
 
 
 def linear_param_count(cfg: LinearConfig) -> int:
+    """Learnable-parameter count of this linear (the paper's O(nL) vs
+    O(d_in * d_out) comparison, Tables 1-4)."""
     if cfg.impl == "dense":
         return cfg.d_in * cfg.d_out + (cfg.d_out if cfg.use_bias else 0)
     return cfg.spm_config().param_count()

@@ -73,6 +73,8 @@ class Schedule:
         return all(s.structured for s in self.stages)
 
     def strides(self) -> tuple:
+        """The per-stage stride tuple of an all-structured schedule (the
+        form the fused kernels and the distributed executor consume)."""
         if not self.all_structured:
             raise ValueError("schedule contains general (perm) stages")
         return tuple(s.stride for s in self.stages)
@@ -212,6 +214,9 @@ def two_level_schedule(n: int, n_stages: int, n_shards: int) -> Schedule:
 
 def make_schedule(kind: str, n: int, n_stages: int, *, n_shards: int = 1,
                   seed: int = 0) -> Schedule:
+    """Build a pairing schedule by kind: "butterfly" (default TPU-native),
+    "brick" (ablation), "random" (fully general pairings), or "two_level"
+    (sharding-aware; ``n_shards`` selects the block split)."""
     if kind == "butterfly":
         return butterfly_schedule(n, n_stages)
     if kind == "brick":

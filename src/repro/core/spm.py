@@ -94,13 +94,21 @@ class SPMConfig:
 
     @property
     def n_pairs(self) -> int:
+        """Pairs per stage (n // 2; the odd coordinate, if any, rides a
+        residual 1x1 scale instead)."""
         return self.n // 2
 
     @property
     def odd(self) -> bool:
+        """Odd operator width: each stage leaves one coordinate unpaired
+        (scaled by ``res_scale``) and the fused kernel path is ineligible."""
         return self.n % 2 == 1
 
     def param_count(self) -> int:
+        """Total learnable parameters of the operator: O(nL) stage
+        coefficients (1 angle or 4 scalars per pair) plus the odd-n
+        residual scales and the optional diagonals/bias — the paper's
+        headline count vs the dense layer's n^2."""
         per_stage = self.n_pairs * (1 if self.variant == "rotation" else 4)
         total = self.n_stages * per_stage
         if self.odd:
@@ -425,8 +433,9 @@ def spm_apply(params: dict, x: jax.Array, cfg: SPMConfig, *,
     zero-padded to n, and only the first ``out_width`` output columns are
     returned.  On the fused kernel path the padding/slicing happens inside
     the kernel boundary runs (no XLA pad/slice, no dead output columns);
-    the XLA composition fallback realizes the same semantics with an
-    explicit pad + slice around the square operator.
+    the distributed executor window-reads the boundary operands per shard
+    (docs/sharding.md); the XLA composition fallback realizes the same
+    semantics with an explicit pad + slice around the square operator.
     """
     n = cfg.n
     if in_width == n:

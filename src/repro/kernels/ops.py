@@ -38,6 +38,13 @@ to the last axis of ``x`` with:
     custom_vjp hands the input cotangent back as (…, in_width), and the
     masked loads make padded lanes contribute exact zeros to the
     coefficient/diag/bias grads.  Interior intermediates stay n-wide.
+  * **dead-tile-free backward** — the backward grid of the last run visits
+    only ``ceil(out_width / n_tile)`` feature tiles (tiles fully past
+    ``out_width`` have an all-zero masked cotangent, so every grad they
+    produce is an exact zero); skipped parameter-grad / g_x blocks are
+    zero-initialized via ``input_output_aliases``, and the resulting
+    exactly-zero g_x tail lets every upstream run of a multi-run plan
+    prune the same dead tiles (``dead_from``).
   * **bf16 I/O** — activations may be bf16; in-VMEM compute is f32 and all
     parameter grads are returned f32 (cast back to the param dtype here).
 
@@ -63,6 +70,8 @@ MAX_TILE = 2048  # lane-dim tile cap: 16 VREG lanes x 128; VMEM-comfortable
 
 
 def default_interpret() -> bool:
+    """Whether pallas_call should run in interpret mode: True off-TPU
+    (CPU/GPU validation), False on TPU (Mosaic compile)."""
     return jax.default_backend() != "tpu"
 
 
@@ -216,6 +225,16 @@ def _fused_bwd(strides, flags, block_rows, interpret, in_width, out_width,
     delta = gy
     g_cf_parts = [None] * len(runs)
     g_din = g_dout = g_bias = None
+    # Dead-tile chain: each run's backward visits only the feature tiles
+    # holding live cotangent columns and returns a g_x that is EXACTLY
+    # zero from its first skipped column on (zero-initialized unvisited
+    # blocks), so the upstream run can prune its own grid to match (its
+    # dead tiles' grads are all exact zeros for the same
+    # tile-local-pairing reason).  The boundary must be re-derived from
+    # EACH run's tile width: a run re-tiles the dead region to its own
+    # n_tile, and a larger-tile run spreads live cotangent across its
+    # whole edge tile (run tiles are not monotone across a plan).
+    dead = None     # first all-zero column of the downstream run's g_x
     for r in range(len(runs) - 1, -1, -1):
         run_strides, n_tile = runs[r]
         cf = coeffs[offsets[r]: offsets[r] + len(run_strides)]
@@ -228,7 +247,13 @@ def _fused_bwd(strides, flags, block_rows, interpret, in_width, out_width,
             has_bias=last and has_bias,
             in_width=in_width if r == 0 else None,
             out_width=out_width if last else None,
+            dead_from=None if last else dead,
             interpret=interpret)
+        live = out_width if last else dead
+        if live is not None and -(-live // n_tile) * n_tile < n:
+            dead = -(-live // n_tile) * n_tile
+        else:
+            dead = None
         delta, gcf = out[0], out[1]
         vec = list(out[2:])
         if r == 0 and has_din:

@@ -55,6 +55,33 @@ static ``in_width`` / ``out_width``:
 ops.py sets the widths only on the boundary runs of a multi-run plan; the
 interior intermediates stay n-wide.
 
+Dead-tile-free backward (this PR): a feature tile whose columns all sit at
+or past ``out_width`` receives an all-zero gy after the in-VMEM mask, and
+because stages inside one run pair lanes tile-locally, EVERY gradient the
+tile produces (gcf, g_din, g_dout, g_bias, g_x) is exactly zero.  The
+backward grid therefore visits only ``ceil(out_width / n_tile)`` feature
+tiles; the parameter-grad (and, when wider than the visited region, g_x)
+blocks of the skipped tiles are zero-initialized by aliasing pre-zeroed
+operands onto the outputs (``input_output_aliases`` — unvisited blocks
+keep their input value).  ``dead_from`` extends the same skip to the
+earlier runs of a multi-run plan: the last run's cotangent is exactly zero
+from its first skipped column on, so upstream runs prune the same tail.
+
+Sharded windowed boundaries (this PR): inside the distributed executor
+(``parallel/spm_shard.py``) shard ``j`` owns global columns
+``[j*n_local, (j+1)*n_local)`` of a rectangular operator whose input is a
+feature-complete ``(rows, in_width)`` array.  Both kernels take an optional
+``col_base`` — a TRACED (1,) int32 scalar holding the shard's base feature
+tile — delivered via Pallas scalar prefetch: the x (forward / backward) and
+gy (backward) BlockSpec index maps offset their feature-block index by it,
+so each shard reads its own window straight out of the replicated operand
+(the padded square array is never materialized in HBM), and the iota masks
+compare against the GLOBAL column ``(col_base + j) * n_tile + lane``.  With
+``col_base`` the widths are global widths, the output stays the shard-local
+``(rows, n_local)`` slab, and the backward keeps the full local grid (the
+grid is SPMD-uniform across shards; a shard's dead edge tiles are hidden by
+the fully-live interior shards that bound the step wall-clock anyway).
+
 Layout notes (TPU-native adaptation of the paper's CPU loop):
   * The feature axis rides the 128-wide lane dimension; batch rides sublanes.
   * A stride-s stage is the relayout (bb, n) -> (bb, g, 2, s) + vectorized
@@ -79,6 +106,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["spm_stack_kernel_call", "spm_stack_bwd_kernel_call",
            "pick_block_rows", "vmem_bytes"]
@@ -118,10 +146,10 @@ def _apply_stages_fwd(z, cf_ref, strides, collect: bool = False):
     return (z, zs) if collect else z
 
 
-def _kernel(x_ref, cf_ref, *rest,
+def _kernel(*refs,
             strides: Tuple[int, ...],
             has_din: bool, has_dout: bool, has_bias: bool,
-            in_width: Optional[int]):
+            in_width: Optional[int], has_base: bool = False):
     """Kernel body: x_ref (bb, nt), cf_ref (L, nt//2, 4), o_ref (bb, nt).
 
     Optional refs (in order, present when the matching flag is set):
@@ -129,9 +157,14 @@ def _kernel(x_ref, cf_ref, *rest,
     VMEM regardless of the I/O dtype.  ``in_width`` (rectangular first
     run) zero-fills the lanes past the true input width before anything
     else touches them; a narrow OUTPUT needs no in-kernel handling — the
-    partial edge tile is masked by the out-of-bounds store.
+    partial edge tile is masked by the out-of-bounds store.  With
+    ``has_base`` the first ref is the scalar-prefetch ``(1,)`` base
+    feature tile (sharded windowed read) and the mask compares against
+    the GLOBAL column index.
     """
-    refs = list(rest)
+    refs = list(refs)
+    base = refs.pop(0)[0] if has_base else 0
+    x_ref, cf_ref = refs.pop(0), refs.pop(0)
     din_ref = refs.pop(0) if has_din else None
     dout_ref = refs.pop(0) if has_dout else None
     bias_ref = refs.pop(0) if has_bias else None
@@ -139,7 +172,7 @@ def _kernel(x_ref, cf_ref, *rest,
 
     z = x_ref[...].astype(_F32)
     if in_width is not None:
-        z = _mask_cols(z, pl.program_id(1), in_width)
+        z = _mask_cols(z, base + pl.program_id(1), in_width)
     if has_din:
         z = z * din_ref[...].astype(_F32)       # (1, nt) broadcast over rows
     z = _apply_stages_fwd(z, cf_ref, strides)
@@ -187,13 +220,22 @@ def _vec_spec(n_tile: int) -> pl.BlockSpec:
     return pl.BlockSpec((1, n_tile), lambda i, j: (0, j))
 
 
+def _lift_spec(spec: pl.BlockSpec) -> pl.BlockSpec:
+    """Adapt a plain BlockSpec to a scalar-prefetch grid: index maps gain
+    a trailing scalar ref, which non-windowed operands ignore.  Works for
+    either grid-axis order (it just drops the last argument)."""
+    return pl.BlockSpec(spec.block_shape,
+                        lambda *a, f=spec.index_map: f(*a[:-1]))
+
+
 @functools.partial(jax.jit, static_argnames=("strides", "block_rows",
                                              "n_tile", "in_width",
                                              "out_width", "interpret"))
 def spm_stack_kernel_call(x: jax.Array, coeffs: jax.Array,
                           d_in: Optional[jax.Array] = None,
                           d_out: Optional[jax.Array] = None,
-                          bias: Optional[jax.Array] = None, *,
+                          bias: Optional[jax.Array] = None,
+                          col_base: Optional[jax.Array] = None, *,
                           strides: Tuple[int, ...],
                           block_rows: int,
                           n_tile: int,
@@ -209,6 +251,13 @@ def spm_stack_kernel_call(x: jax.Array, coeffs: jax.Array,
     tiles — tile-local pairing makes the rest dead) and stored (masked
     partial edge tile).  Returns (B, out_width or n).
 
+    ``col_base`` (sharded windowed read — requires ``in_width``, excludes
+    ``out_width``): a TRACED (1,) int32 base feature tile.  x is the
+    feature-COMPLETE (B, in_width) operand shared by all shards; the x
+    index map offsets its feature block by the base (scalar prefetch) so
+    this shard reads/zero-fills exactly its n-wide window of the global
+    operator, and the output is the full (B, n) shard-local slab.
+
     Requires: B % block_rows == 0, n % n_tile == 0, and every stride s
     satisfies n_tile % (2*s) == 0 (pairs tile-local).  ops.py guarantees
     these by padding/splitting; this function is the raw kernel entry.
@@ -219,8 +268,11 @@ def spm_stack_kernel_call(x: jax.Array, coeffs: jax.Array,
     assert B % block_rows == 0 and n % n_tile == 0
     for s in strides:
         assert n_tile % (2 * s) == 0, (s, n_tile)
+    has_base = col_base is not None
+    assert not has_base or (in_width is not None and out_width is None)
     out_w = out_width if out_width is not None else n
-    grid = (B // block_rows, -(-out_w // n_tile))
+    grid = (B // block_rows, n // n_tile if has_base
+            else -(-out_w // n_tile))
 
     # Pair indices for feature tile j are the contiguous slab
     # [j * n_tile/2, (j+1) * n_tile/2): groups are sequential in the flat
@@ -236,12 +288,31 @@ def spm_stack_kernel_call(x: jax.Array, coeffs: jax.Array,
             operands.append(vec.reshape(1, n))
             in_specs.append(_vec_spec(n_tile))
 
+    kernel = functools.partial(_kernel, strides=strides,
+                               has_din=d_in is not None,
+                               has_dout=d_out is not None,
+                               has_bias=bias is not None,
+                               in_width=in_width, has_base=has_base)
+    if has_base:
+        # Scalar prefetch: every index map gains a trailing base ref; only
+        # the x map consumes it (blocks past the operand edge clamp; the
+        # in-VMEM mask against the global column zero-fills them).
+        in_specs = [pl.BlockSpec(x_spec.block_shape,
+                                 lambda i, j, b: (i, b[0] + j))]
+        in_specs += [_lift_spec(s) for s in ([cf_spec]
+                                             + [_vec_spec(n_tile)]
+                                             * (len(operands) - 2))]
+        return pl.pallas_call(
+            kernel,
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=1, grid=grid,
+                in_specs=in_specs, out_specs=_lift_spec(o_spec)),
+            out_shape=jax.ShapeDtypeStruct((B, n), x.dtype),
+            interpret=interpret,
+        )(col_base.astype(jnp.int32), *operands)
+
     return pl.pallas_call(
-        functools.partial(_kernel, strides=strides,
-                          has_din=d_in is not None,
-                          has_dout=d_out is not None,
-                          has_bias=bias is not None,
-                          in_width=in_width),
+        kernel,
         grid=grid,
         in_specs=in_specs,
         out_specs=o_spec,
@@ -270,13 +341,18 @@ def spm_stack_kernel_call(x: jax.Array, coeffs: jax.Array,
 # revisits; accumulating across a non-minor axis would read back a flushed
 # buffer on real TPU): init at batch step 0, accumulate after.
 
-def _bwd_kernel(x_ref, cf_ref, gy_ref, *rest,
+def _bwd_kernel(*refs,
                 strides: Tuple[int, ...],
                 has_din: bool, has_dout: bool, has_bias: bool,
-                in_width: Optional[int], out_width: Optional[int]):
-    refs = list(rest)
+                in_width: Optional[int], out_width: Optional[int],
+                has_base: bool = False, n_zero_init: int = 0):
+    refs = list(refs)
+    base = refs.pop(0)[0] if has_base else 0
+    x_ref, cf_ref, gy_ref = refs.pop(0), refs.pop(0), refs.pop(0)
     din_ref = refs.pop(0) if has_din else None
     dout_ref = refs.pop(0) if has_dout else None
+    if n_zero_init:
+        del refs[:n_zero_init]       # aliased zero-init operands, unread
     gx_ref = refs.pop(0)
     gcf_ref = refs.pop(0)
     gdin_ref = refs.pop(0) if has_din else None
@@ -285,7 +361,10 @@ def _bwd_kernel(x_ref, cf_ref, gy_ref, *rest,
 
     bb, nt = x_ref.shape
     L = len(strides)
-    j = pl.program_id(0)  # feature tile: major grid axis
+    # feature tile: major grid axis.  ``base`` shifts it to the GLOBAL
+    # feature tile in the sharded windowed mode (0 otherwise), so the
+    # in_width/out_width masks below always compare global columns.
+    j = base + pl.program_id(0)
 
     # recompute stage inputs in VMEM (forward remat), incl. the d_in fold.
     # Rectangular first run: lanes past in_width are zero-filled exactly as
@@ -357,17 +436,19 @@ def _bwd_kernel(x_ref, cf_ref, gy_ref, *rest,
 @functools.partial(jax.jit, static_argnames=("strides", "block_rows",
                                              "n_tile", "has_bias",
                                              "in_width", "out_width",
-                                             "interpret"))
+                                             "dead_from", "interpret"))
 def spm_stack_bwd_kernel_call(x: jax.Array, coeffs: jax.Array,
                               gy: jax.Array,
                               d_in: Optional[jax.Array] = None,
-                              d_out: Optional[jax.Array] = None, *,
+                              d_out: Optional[jax.Array] = None,
+                              col_base: Optional[jax.Array] = None, *,
                               strides: Tuple[int, ...],
                               block_rows: int,
                               n_tile: int,
                               has_bias: bool = False,
                               in_width: Optional[int] = None,
                               out_width: Optional[int] = None,
+                              dead_from: Optional[int] = None,
                               interpret: bool = False):
     """Fused backward for (optionally) the full operator.
 
@@ -378,29 +459,65 @@ def spm_stack_bwd_kernel_call(x: jax.Array, coeffs: jax.Array,
 
     Rectangular boundaries: ``x`` is (B, in_width) and ``gy`` is
     (B, out_width) when set; both are masked to exact zeros past their
-    width in VMEM.  Unlike the forward, the grid covers ALL n // n_tile
-    feature tiles — every parameter-grad output block must be written
-    (their value on fully-padded tiles is an exact zero, which the masked
-    loads produce for free).  ``g_x`` comes back (B, in_width) only when
-    ceil(in_width / n_tile) equals the grid's feature-tile count; when
-    ``in_width`` leaves whole feature tiles past the array edge
-    (n > n_tile with a small input), it comes back (B, n) and the CALLER
-    slices — a fully out-of-bounds output block is not masked but CLAMPED
-    onto the last valid block (both interpret mode and Mosaic clamp block
-    indices), which would corrupt valid g_x columns.
+    width in VMEM, so padded lanes contribute exact zeros to the
+    coefficient, diag, and bias grads.
+
+    Dead-tile skip: a feature tile whose columns all sit at or past
+    ``out_width`` carries an all-zero masked gy, and tile-local pairing
+    makes EVERY grad it produces an exact zero — the grid visits only
+    ``ceil(out_width / n_tile)`` feature tiles, and the skipped tiles'
+    parameter-grad / g_x blocks are zero-initialized by aliasing pre-zeroed
+    operands onto the outputs (``input_output_aliases``: an unvisited
+    block keeps its input value).  ``dead_from`` declares the same
+    all-zero-cotangent property for an interior run of a multi-run plan
+    (its gy is the downstream run's g_x, exactly zero from the first
+    column that run skipped) without implying a narrow gy operand.
+
+    ``g_x`` comes back (B, in_width) only when ceil(in_width / n_tile)
+    covers at least the visited tiles; when ``in_width`` leaves whole
+    VISITED feature tiles past the array edge it comes back widened to the
+    visited width and the CALLER slices — a fully out-of-bounds output
+    block is not masked but CLAMPED onto the last valid block (both
+    interpret mode and Mosaic clamp block indices), which would corrupt
+    valid g_x columns.
+
+    ``col_base`` (sharded windowed mode — see the forward kernel): a
+    TRACED (1,) int32 base feature tile.  ``in_width``/``out_width``
+    become GLOBAL widths; the matching operand (x / gy) is the
+    feature-complete global array read through an offset index map, masks
+    compare global columns, g_x is the full (B, n) shard-local slab, and
+    the grid keeps every local tile (it must be SPMD-uniform across
+    shards, so the skip is single-device only).
     """
     B = x.shape[0]
     L, n = coeffs.shape[0], 2 * coeffs.shape[1]
+    has_base = col_base is not None
+    assert not (has_base and dead_from is not None)
+    x_windowed = has_base and in_width is not None
+    gy_windowed = has_base and out_width is not None
     in_w = in_width if in_width is not None else n
     assert x.shape[-1] == in_w
     assert gy.shape[-1] == (out_width if out_width is not None else n)
     assert B % block_rows == 0 and n % n_tile == 0
-    if -(-in_w // n_tile) != n // n_tile:
-        in_w = n  # see docstring: narrow g_x would alias clamped stores
+    n_tiles = n // n_tile
+
+    # Visited feature tiles: every tile from the first all-dead column on
+    # is skipped (single-device only: the sharded grid is SPMD-uniform).
+    live = n
+    if out_width is not None:
+        live = min(live, out_width)
+    if dead_from is not None:
+        live = min(live, dead_from)
+    vis = n_tiles if has_base else min(n_tiles, -(-live // n_tile))
+
+    gx_w = n if x_windowed else in_w
+    if not x_windowed and -(-gx_w // n_tile) < vis:
+        gx_w = vis * n_tile  # see docstring: narrow g_x would alias
+        #                      clamped stores; the caller slices
     # batch is the MINOR grid axis: parameter-grad blocks (indexed by the
     # feature tile only) are revisited on consecutive iterations, which is
     # required for the in-block accumulation to be valid on real TPU.
-    grid = (n // n_tile, B // block_rows)
+    grid = (vis, B // block_rows)
     act_spec = pl.BlockSpec((block_rows, n_tile), lambda j, i: (i, j))
     cf_spec = pl.BlockSpec((L, n_tile // 2, 4), lambda j, i: (0, j, 0))
     vec_spec = pl.BlockSpec((1, n_tile), lambda j, i: (0, j))
@@ -413,25 +530,64 @@ def spm_stack_bwd_kernel_call(x: jax.Array, coeffs: jax.Array,
             in_specs.append(vec_spec)
 
     out_specs = [act_spec, cf_spec]
-    out_shape = [jax.ShapeDtypeStruct((B, in_w), x.dtype),
+    out_shape = [jax.ShapeDtypeStruct((B, gx_w), x.dtype),
                  jax.ShapeDtypeStruct((L, n // 2, 4), jnp.float32)]
     for present in (d_in is not None, d_out is not None, has_bias):
         if present:
             out_specs.append(vec_spec)
             out_shape.append(jax.ShapeDtypeStruct((1, n), jnp.float32))
 
-    out = pl.pallas_call(
-        functools.partial(_bwd_kernel, strides=strides,
-                          has_din=d_in is not None,
-                          has_dout=d_out is not None,
-                          has_bias=has_bias,
-                          in_width=in_width, out_width=out_width),
-        grid=grid,
-        in_specs=in_specs,
-        out_specs=out_specs,
-        out_shape=out_shape,
-        interpret=interpret,
-    )(*operands)
+    # Zero-init every output owning blocks the shrunk grid never visits by
+    # aliasing a zeros operand onto it: g_x only when it is wider than the
+    # visited region, parameter grads whenever any tile is skipped.  The
+    # zeros operands sit at the END of the input list (the kernel body
+    # skips ``n_zero_init`` refs there).
+    aliases = {}
+    n_zero_init = 0
+    if vis < n_tiles:
+        for o, (spec, sh) in enumerate(zip(out_specs, out_shape)):
+            if o == 0 and -(-gx_w // n_tile) <= vis:
+                continue
+            aliases[len(operands)] = o
+            operands.append(jnp.zeros(sh.shape, sh.dtype))
+            in_specs.append(spec)
+            n_zero_init += 1
+
+    kernel = functools.partial(_bwd_kernel, strides=strides,
+                               has_din=d_in is not None,
+                               has_dout=d_out is not None,
+                               has_bias=has_bias,
+                               in_width=in_width, out_width=out_width,
+                               has_base=has_base, n_zero_init=n_zero_init)
+    if has_base:
+        # Scalar prefetch: every index map gains a trailing base ref; only
+        # the windowed operands consume it (offset feature block).
+        win_spec = pl.BlockSpec((block_rows, n_tile),
+                                lambda j, i, b: (i, b[0] + j))
+        in_specs = [_lift_spec(s) for s in in_specs]
+        if x_windowed:
+            in_specs[0] = win_spec
+        if gy_windowed:
+            in_specs[2] = win_spec
+        out = pl.pallas_call(
+            kernel,
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=1, grid=grid,
+                in_specs=in_specs,
+                out_specs=[_lift_spec(s) for s in out_specs]),
+            out_shape=out_shape,
+            interpret=interpret,
+        )(col_base.astype(jnp.int32), *operands)
+    else:
+        out = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            out_shape=out_shape,
+            input_output_aliases=aliases,
+            interpret=interpret,
+        )(*operands)
     gx, gcf = out[0], out[1]
     vec_grads = tuple(v.reshape(n) for v in out[2:])
     return (gx, gcf) + vec_grads

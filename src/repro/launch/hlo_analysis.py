@@ -74,7 +74,12 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
 
 def sharded_stage_traffic(n_local: int, batch_rows: int, steps,
                           dtype_bytes: int = 4,
-                          hw: Optional[dict] = None) -> Dict:
+                          hw: Optional[dict] = None, *,
+                          use_diag: bool = False,
+                          use_bias: bool = False,
+                          in_width: Optional[int] = None,
+                          out_width: Optional[int] = None,
+                          fold_boundaries: bool = True) -> Dict:
     """Modeled per-chip traffic of a feature-sharded SPM schedule.
 
     ``steps`` is ``parallel.spm_shard.plan_steps(...)`` output: per
@@ -82,10 +87,31 @@ def sharded_stage_traffic(n_local: int, batch_rows: int, steps,
     whole ``(batch_rows, n_local)`` slab to its XOR partner; per
     ``("local", off, strides)`` run the fused kernel costs one HBM read +
     one write of the slab (interior run boundaries of a multi-run plan are
-    not modeled here — n_local is tile-sized in practice).  Returns
-    per-stage rows plus totals and roofline seconds on the §Roofline HW
-    constants (per-chip HBM vs ICI), so kernel_bench / dryrun can place
-    the collective term next to the HBM term.
+    not modeled here — n_local is tile-sized in practice).
+
+    Boundary terms: with ``fold_boundaries=True`` (the executor since the
+    kernel-native-boundaries PR) the diag multiplies / bias add ride the
+    boundary kernel runs and a rectangular input is window-read straight
+    from the (rows, in_width) operand — but ONLY where the matching
+    boundary step is a local run (``ShardPlan.fold_din`` requires the
+    first step local, ``fold_dout``/``fold_bias``/the windowed cotangent
+    read the last): a schedule whose cycle ends on a cross stage keeps
+    the explicit elementwise d_out/bias (and the gathered gy window) for
+    that side, and the model charges them accordingly.  The always-paid
+    remainder is the single local slice cutting the assembled output to
+    ``out_width`` (one slab-portion read + write).
+    ``fold_boundaries=False`` reproduces the PRE-fold executor for
+    comparison: every enabled diag/bias term is one extra elementwise
+    round-trip of the slab regardless of boundary kinds, and rectangular
+    widths cost an XLA pad (write the slab from the narrower input) and
+    slice (read the slab, write the narrower output) around the square
+    core.  The overhead is reported per chip in
+    ``boundary_bytes_per_chip`` and included in ``hbm_bytes_per_chip`` /
+    ``memory_s``.
+
+    Returns per-stage rows plus totals and roofline seconds on the
+    §Roofline HW constants (per-chip HBM vs ICI), so kernel_bench / dryrun
+    can place the collective term next to the HBM term.
     """
     hw = hw or HW
     slab = batch_rows * n_local * dtype_bytes
@@ -102,8 +128,36 @@ def sharded_stage_traffic(n_local: int, batch_rows: int, steps,
                            "n_stages": len(step[2]), "permute_bytes": 0,
                            "hbm_bytes": 2 * slab})
             hbm_total += 2 * slab
+    boundary = 0
+    first_local = bool(steps) and steps[0][0] == "local"
+    last_local = bool(steps) and steps[-1][0] == "local"
+    if fold_boundaries:
+        if use_diag and not first_local:
+            boundary += 2 * slab               # explicit d_in elementwise
+        if not last_local:
+            boundary += (2 * slab if use_diag else 0)   # explicit d_out
+            boundary += (2 * slab if use_bias else 0)   # explicit bias
+        if in_width is not None and not first_local:
+            # gather-fallback window build instead of the in-kernel read
+            boundary += slab + batch_rows * min(n_local, in_width) \
+                * dtype_bytes
+        if out_width is not None:
+            # the lone always-paid boundary op: the local per-shard slice
+            # of the assembled output (read + write of the kept portion)
+            boundary += 2 * min(slab, batch_rows * out_width * dtype_bytes)
+    else:
+        n_elementwise = (2 if use_diag else 0) + (1 if use_bias else 0)
+        boundary += n_elementwise * 2 * slab
+        if in_width is not None:
+            boundary += slab + batch_rows * min(n_local, in_width) \
+                * dtype_bytes                       # pad: read d_in, write n
+        if out_width is not None:
+            boundary += slab + batch_rows * min(n_local, out_width) \
+                * dtype_bytes                       # slice: read n, write out
+    hbm_total += boundary
     return {"stages": stages,
             "permute_bytes_per_chip": coll_total,
+            "boundary_bytes_per_chip": boundary,
             "hbm_bytes_per_chip": hbm_total,
             "collective_s": coll_total / hw["ici_bw"],
             "memory_s": hbm_total / hw["hbm_bw"]}

@@ -70,6 +70,9 @@ def feature_mesh(n_shards: Optional[int] = None) -> Optional[Mesh]:
 
 
 def constrain(x: jax.Array, kind: str) -> jax.Array:
+    """Apply the activation-sharding constraint of ``kind`` (see the
+    module docstring) under the active ``activation_sharding`` context;
+    the identity when no context is active."""
     ctx = _current()
     if ctx is None:
         return x

@@ -31,6 +31,8 @@ def data_axes(mesh: Mesh) -> Tuple[str, ...]:
 
 
 def tree_path_str(path) -> str:
+    """Render a jax.tree_util key path as the dotted/indexed string the
+    ``param_spec`` profile rules match against (e.g. "layers.3.ffn.w")."""
     parts = []
     for k in path:
         if isinstance(k, jax.tree_util.DictKey):

@@ -38,13 +38,43 @@ the rows its lanes need: for a local stage the contiguous pair block
 rows ``[Q(j)*n_local, (Q(j)+1)*n_local)`` with
 ``Q(j) = ((j & ~k) // 2k)*k + ((j & ~k) % 2k)``.
 
-Rectangular widths (``in_width``/``out_width``) are realized as an XLA
-pad/slice AROUND the square sharded core (the rectangular-native in-kernel
-masking of the unsharded path needs per-shard widths — a later PR).
+The operator boundaries are kernel-native inside the shard (this PR):
+
+* **diag/bias folding** — ``D_in`` folds into the first kernel run of the
+  first shard-local step, ``D_out``/bias into the last kernel run of the
+  last, exactly as the single-device plan folds them into its boundary
+  runs — the shard body issues NO elementwise diag/bias ops (they only
+  reappear on the XLA fallback path or when a boundary step is a
+  cross-shard stage).  The boundary runs' backward kernels emit the
+  closed-form g_din/g_dout/g_bias per-shard slices collective-free.
+* **windowed rectangular boundaries** — for a rectangular operator the
+  ``(rows, in_width)`` input enters the shard_map feature-REPLICATED and
+  the first shard-local kernel run reads this shard's n_local-wide window
+  straight out of it: a scalar-prefetch base tile offsets the x block
+  index and an in-VMEM iota mask zero-fills lanes at or past the GLOBAL
+  ``in_width`` (``kernels/spm_stack.py`` ``col_base``).  The zero-padded
+  square input is never materialized in HBM and interior shards' masks
+  are no-ops by construction.  The backward remats through the same
+  windowed read (the replicated x is the residual) and the custom_vjp
+  returns the input cotangent as ``(rows, in_width)`` with exact-zero
+  padded-lane parameter grads.  The COTANGENT travels the other way: it
+  enters the backward as an even-width slab (zero-padded to n — a local
+  op fused into the slab reshard) rather than a windowed read, because
+  replicating a feature-sharded cotangent would cost a
+  batch-proportional all-gather.  Two further SPMD constraints remain by
+  design: the assembled (rows, n) output is cut to ``out_width`` by one
+  local per-shard slice (shard_map outputs must be evenly sharded), and
+  the backward grid stays uniform across shards (a shard cannot skip its
+  dead edge tiles — which costs no wall-clock, since the fully-live
+  interior shards bound the step anyway).
 
 The lowered HLO of this path contains ``collective-permute`` only — no
 all-gather or all-reduce of the feature axis (asserted by
-tests/test_distributed.py via ``hlo_analysis.collective_bytes``).
+tests/test_distributed.py via ``hlo_analysis.collective_bytes``; the
+backward's two bounded exceptions are the O(nL) replicated
+coefficient-grad assembly and, for rectangular operators only, the
+jit-boundary replication of the indivisible-width g_x output — inherent
+to any transport design).
 """
 
 from __future__ import annotations
@@ -163,7 +193,16 @@ def _cross_coeff_rows(n_shards: int, n_local: int, k: int) -> np.ndarray:
 
 @dataclasses.dataclass(frozen=True)
 class ShardPlan:
-    """Hashable static description closed over by the custom_vjp."""
+    """Hashable static description closed over by the custom_vjp.
+
+    ``in_width`` / ``out_width`` are the GLOBAL rectangular widths (None =
+    square).  The derived ``win_in`` flag says whether the first
+    shard-local kernel run reads the input through a windowed
+    (scalar-prefetch offset) kernel call; ``fold_din`` / ``fold_dout`` /
+    ``fold_bias`` say whether the diag/bias operands fold into the
+    boundary kernel runs instead of running as elementwise ops in the
+    shard body.
+    """
 
     mesh: Mesh
     n: int
@@ -177,7 +216,64 @@ class ShardPlan:
     block_rows: int
     interpret: bool
     dp: Tuple[str, ...] = ()     # pure-DP mesh axes: rows shard over these
+    in_width: Optional[int] = None
+    out_width: Optional[int] = None
 
+    # -- boundary-step structure -------------------------------------------
+    @property
+    def first_local(self) -> bool:
+        return self.steps[0][0] == "local"
+
+    @property
+    def last_local(self) -> bool:
+        return self.steps[-1][0] == "local"
+
+    @property
+    def fold_din(self) -> bool:
+        """D_in folds into the first kernel run of the first local step."""
+        return self.has_din and self.use_kernel and self.first_local
+
+    @property
+    def fold_dout(self) -> bool:
+        """D_out folds into the last kernel run of the last local step."""
+        return self.has_dout and self.use_kernel and self.last_local
+
+    @property
+    def fold_bias(self) -> bool:
+        return self.has_bias and self.use_kernel and self.last_local
+
+    @property
+    def win_in(self) -> bool:
+        """The first kernel run reads the (rows, in_width) global input
+        through a windowed (col_base) call — the padded square input is
+        never materialized in HBM."""
+        return (self.in_width is not None and self.use_kernel
+                and self.first_local)
+
+    # NOTE deliberately no ``win_out``: the backward cotangent is
+    # transported as an even-width slab (zero-padded to n in
+    # ``_sharded_core_bwd`` — a local op fused into the slab reshard)
+    # rather than window-read from a replicated (rows, out_width) array.
+    # The windowed read would force replicating the cotangent, and when it
+    # arrives feature-sharded (the common case: it flows back from the
+    # sharded forward output) that replication is a batch-proportional
+    # all-gather over ICI — strictly worse than the fused local pad.
+
+    # -- residual layout ----------------------------------------------------
+    @property
+    def saves_x_res(self) -> bool:
+        """Whether a stage-0 input residual rides next to step_ins: the
+        replicated x itself under win_in (the backward's windowed remat
+        source), else the pre-D_in slab when g_din is computed explicitly."""
+        return self.win_in or (self.has_din and not self.fold_din)
+
+    @property
+    def saves_z_last(self) -> bool:
+        """z_L (pre-D_out) is a residual only when g_dout is explicit; a
+        folded boundary run remats it in VMEM."""
+        return self.has_dout and not self.fold_dout
+
+    # -- shard_map specs ----------------------------------------------------
     def table_specs(self) -> Tuple[P, ...]:
         return tuple(P(AXIS) for _ in self.steps)
 
@@ -189,6 +285,25 @@ class ShardPlan:
         # none), features over "model" — entering with batch-sharded
         # activations must NOT all-gather them.
         return P(self.dp if self.dp else None, AXIS)
+
+    def rep_spec(self) -> P:
+        # (rows, width) with the feature axis replicated over "model" —
+        # the natural sharding of a rectangular boundary operand, whose
+        # width is not divisible by the shard count.
+        return P(self.dp if self.dp else None, None)
+
+    def x_spec(self) -> P:
+        return self.rep_spec() if self.in_width is not None \
+            else self.act_spec()
+
+    def res_specs(self):
+        act = self.act_spec()
+        x_res = (self.rep_spec() if self.win_in
+                 else (act if self.saves_x_res else P(None)))
+        step_ins = tuple(P(None) if (i == 0 and self.win_in) else act
+                         for i in range(len(self.steps)))
+        z_last = act if self.saves_z_last else P(None)
+        return (x_res, step_ins, z_last)
 
 
 def _step_tables(coeffs: jax.Array, steps, n_shards: int,
@@ -210,6 +325,19 @@ def _step_tables(coeffs: jax.Array, steps, n_shards: int,
             rows = _cross_coeff_rows(n_shards, n_local, k)
             tabs.append(coeffs[ell][rows])                 # (S, n_local, 4)
     return tuple(tabs)
+
+
+def _window_slab(x_full: jax.Array, base_cols: jax.Array, n_local: int,
+                 width: int) -> jax.Array:
+    """XLA fallback for the windowed boundary read: this shard's
+    (rows, n_local) slab of a feature-complete (rows, width) operand,
+    zero-filled past ``width``.  A clipped static-length gather + mask —
+    local, collective-free, but it does materialize the slab in HBM,
+    which the windowed KERNEL read (``win_in``) avoids."""
+    col = base_cols + jnp.arange(n_local)
+    idx = jnp.clip(col, 0, width - 1)
+    slab = jnp.take(x_full, idx, axis=-1)
+    return jnp.where(col < width, slab, jnp.zeros_like(slab))
 
 
 # ---------------------------------------------------------------------------
@@ -247,16 +375,38 @@ def _cross_bwd(z_in, delta, cf, k: int, plan: ShardPlan):
     return g_in, g_cf.astype(cf.dtype)
 
 
-def _segment_fwd(z, cf, run: Tuple[int, ...], plan: ShardPlan):
+def _base_tiles(col_base, n_tile: int):
+    """Convert a traced base-column scalar to the (1,) base-feature-tile
+    operand of a windowed kernel call."""
+    return jnp.reshape(col_base // n_tile, (1,))
+
+
+def _segment_fwd(z, cf, run: Tuple[int, ...], plan: ShardPlan, *,
+                 d_in=None, d_out=None, bias=None,
+                 col_base=None, in_width: Optional[int] = None):
     """A maximal run of shard-local stages on the resident slab: the fused
     Pallas kernel when enabled (interpret off-TPU), else the XLA 2x2
-    composition."""
+    composition.  On the kernel path the BOUNDARY sub-runs absorb the
+    operator boundaries: ``d_in`` folds into the first sub-run (applied in
+    VMEM before its first stage), ``d_out``/``bias`` into the last, and
+    with ``col_base``/``in_width`` the first sub-run is a windowed call
+    that reads this shard's n_local-wide window straight out of the
+    feature-complete (rows, in_width) operand ``z``."""
     if plan.use_kernel:
+        runs = plan_runs(plan.n_local, run)
         off = 0
-        for run_strides, n_tile in plan_runs(plan.n_local, run):
+        for r, (run_strides, n_tile) in enumerate(runs):
+            first, last = r == 0, r == len(runs) - 1
             z = K.spm_stack_kernel_call(
-                z, cf[off: off + len(run_strides)], strides=run_strides,
-                block_rows=plan.block_rows, n_tile=n_tile,
+                z, cf[off: off + len(run_strides)],
+                d_in if first else None,
+                d_out if last else None,
+                bias if last else None,
+                _base_tiles(col_base, n_tile)
+                if (first and col_base is not None) else None,
+                strides=run_strides, block_rows=plan.block_rows,
+                n_tile=n_tile,
+                in_width=in_width if first else None,
                 interpret=plan.interpret)
             off += len(run_strides)
         return z
@@ -265,41 +415,79 @@ def _segment_fwd(z, cf, run: Tuple[int, ...], plan: ShardPlan):
     return z
 
 
-def _segment_bwd(z_in, delta, cf, run: Tuple[int, ...], plan: ShardPlan):
+def _segment_bwd(z_in, delta, cf, run: Tuple[int, ...], plan: ShardPlan, *,
+                 d_in=None, d_out=None, has_bias: bool = False,
+                 col_base=None, in_width: Optional[int] = None):
     """Closed-form backward of a local run from its saved input: the fused
     backward kernel per planned sub-run (stage inputs remat in VMEM), else
-    forward-recompute + per-stage eq. 12-14 grads."""
+    forward-recompute + per-stage eq. 12-14 grads.
+
+    Kernel path boundary handling mirrors ``_segment_fwd``: the first
+    sub-run consumes ``d_in`` (and with ``in_width``/``col_base`` remats
+    from the feature-complete replicated x through a windowed read,
+    emitting exact-zero padded-lane grads), the last sub-run consumes
+    ``d_out``/``has_bias``.  ``delta`` is always the slab cotangent (a
+    rectangular out_width arrives pre-zero-padded — see _shard_bwd).
+    Returns ``(delta_slab, g_coeffs, vec_grads)`` with ``vec_grads``
+    ordered [g_din?, g_dout?, g_bias?].
+    """
     if plan.use_kernel:
         runs = plan_runs(plan.n_local, run)
         zs, z, off = [], z_in, 0
-        for run_strides, n_tile in runs:
+        for r, (run_strides, n_tile) in enumerate(runs):
             zs.append(z)
-            z = K.spm_stack_kernel_call(
-                z, cf[off: off + len(run_strides)], strides=run_strides,
-                block_rows=plan.block_rows, n_tile=n_tile,
-                interpret=plan.interpret)
+            if r < len(runs) - 1:    # the last output is never needed
+                z = K.spm_stack_kernel_call(
+                    z, cf[off: off + len(run_strides)],
+                    d_in if r == 0 else None, None, None,
+                    _base_tiles(col_base, n_tile)
+                    if (r == 0 and in_width is not None
+                        and col_base is not None) else None,
+                    strides=run_strides, block_rows=plan.block_rows,
+                    n_tile=n_tile,
+                    in_width=in_width if r == 0 else None,
+                    interpret=plan.interpret)
             off += len(run_strides)
         offs = np.cumsum([0] + [len(rs) for rs, _ in runs])
         g_parts = [None] * len(runs)
+        g_din = g_dout = g_bias = None
         for r in range(len(runs) - 1, -1, -1):
             run_strides, n_tile = runs[r]
-            delta, gcf = K.spm_stack_bwd_kernel_call(
+            first, last = r == 0, r == len(runs) - 1
+            win_x = first and in_width is not None and col_base is not None
+            out = K.spm_stack_bwd_kernel_call(
                 zs[r], cf[offs[r]: offs[r + 1]], delta,
+                d_in if first else None,
+                d_out if last else None,
+                _base_tiles(col_base, n_tile) if win_x else None,
                 strides=run_strides, block_rows=plan.block_rows,
-                n_tile=n_tile, interpret=plan.interpret)
-            g_parts[r] = gcf
-        return delta, jnp.concatenate(g_parts, axis=0).astype(cf.dtype)
+                n_tile=n_tile, has_bias=last and has_bias,
+                in_width=in_width if first else None,
+                interpret=plan.interpret)
+            delta, g_parts[r] = out[0], out[1]
+            vecs = list(out[2:])
+            if first and d_in is not None:
+                g_din = vecs.pop(0)
+            if last and d_out is not None:
+                g_dout = vecs.pop(0)
+            if last and has_bias:
+                g_bias = vecs.pop(0)
+        vec_grads = [g for g in (g_din, g_dout, g_bias) if g is not None]
+        return (delta, jnp.concatenate(g_parts, axis=0).astype(cf.dtype),
+                vec_grads)
     zs, z = [], z_in
     for i, s in enumerate(run):
         zs.append(z)
-        z = spm_mod.apply_stage(z, cf[i].astype(z.dtype), Stage(stride=s))
+        if i < len(run) - 1:
+            z = spm_mod.apply_stage(z, cf[i].astype(z.dtype),
+                                    Stage(stride=s))
     g_cf = []
     for i in range(len(run) - 1, -1, -1):
         delta, gc, _ = spm_mod._stage_grads(
             zs[i], delta, cf[i].astype(delta.dtype), Stage(stride=run[i]),
             None)
         g_cf.append(gc)
-    return delta, jnp.stack(g_cf[::-1], axis=0).astype(cf.dtype)
+    return delta, jnp.stack(g_cf[::-1], axis=0).astype(cf.dtype), []
 
 
 # ---------------------------------------------------------------------------
@@ -308,53 +496,96 @@ def _segment_bwd(z_in, delta, cf, run: Tuple[int, ...], plan: ShardPlan):
 
 def _shard_fwd(plan: ShardPlan, tabs, d_in, d_out, bias, x2, collect: bool):
     fdt = x2.dtype
-    z = x2
-    if plan.has_din:
+    ph = jnp.zeros((1,), fdt)
+    base_cols = jax.lax.axis_index(AXIS) * plan.n_local
+    if plan.in_width is None:
+        z = x2                                 # the shard-resident slab
+    elif plan.win_in:
+        z = x2      # feature-complete: the first kernel run windows it
+    else:
+        z = _window_slab(x2, base_cols, plan.n_local, plan.in_width)
+    x_res = x2 if plan.win_in else (z if plan.saves_x_res else ph)
+    if plan.has_din and not plan.fold_din:
         z = z * d_in.astype(fdt)
     step_ins = []
-    for step, tab in zip(plan.steps, tabs):
+    n_steps = len(plan.steps)
+    for i, (step, tab) in enumerate(zip(plan.steps, tabs)):
+        first, last = i == 0, i == n_steps - 1
         if collect:
-            step_ins.append(z)
+            step_ins.append(ph if (first and plan.win_in) else z)
         cf = tab[0]                      # drop the (1,) local shard axis
         if step[0] == "cross":
             z = _cross_fwd(z, cf, step[2], plan)
         else:
-            z = _segment_fwd(z, cf, step[2], plan)
+            z = _segment_fwd(
+                z, cf, step[2], plan,
+                d_in=d_in if (first and plan.fold_din) else None,
+                d_out=d_out if (last and plan.fold_dout) else None,
+                bias=bias if (last and plan.fold_bias) else None,
+                col_base=base_cols if (first and plan.win_in) else None,
+                in_width=plan.in_width if (first and plan.win_in) else None)
     z_last = z
-    if plan.has_dout:
+    if plan.has_dout and not plan.fold_dout:
         z = z * d_out.astype(fdt)
-    if plan.has_bias:
+    if plan.has_bias and not plan.fold_bias:
         z = z + bias.astype(fdt)
     if collect:
-        return z, (x2, tuple(step_ins), z_last)
+        return z, (x_res, tuple(step_ins),
+                   z_last if plan.saves_z_last else ph)
     return z
 
 
 def _shard_bwd(plan: ShardPlan, tabs, d_in, d_out, bias, res, gy):
-    x2, step_ins, z_last = res
+    x_res, step_ins, z_last = res
     fdt = gy.dtype
     ph = jnp.zeros((1,), _F32)
-    g_bias = (jnp.sum(gy.astype(_F32), axis=0) if plan.has_bias else ph)
-    delta = gy
-    if plan.has_dout:
-        g_dout = jnp.sum(gy.astype(_F32) * z_last.astype(_F32), axis=0)
-        delta = gy * d_out.astype(fdt)
+    base_cols = jax.lax.axis_index(AXIS) * plan.n_local
+    # gy is always the (rows, n_local) slab cotangent: a rectangular
+    # out_width arrives zero-padded to n by _sharded_core_bwd (see the
+    # ShardPlan note on why the cotangent is not window-read), so the
+    # padded lanes contribute exact zeros to every grad below with no
+    # masking needed.
+    gys = gy
+    g_din = g_dout = g_bias = None
+    if plan.has_bias and not plan.fold_bias:
+        g_bias = jnp.sum(gys.astype(_F32), axis=0)
+    if plan.has_dout and not plan.fold_dout:
+        g_dout = jnp.sum(gys.astype(_F32) * z_last.astype(_F32), axis=0)
+        delta = gys * d_out.astype(fdt)
     else:
-        g_dout = ph
+        delta = gys
     g_tabs = []
-    for i in range(len(plan.steps) - 1, -1, -1):
+    n_steps = len(plan.steps)
+    for i in range(n_steps - 1, -1, -1):
         step = plan.steps[i]
         cf = tabs[i][0]
+        first, last = i == 0, i == n_steps - 1
         if step[0] == "cross":
             delta, g = _cross_bwd(step_ins[i], delta, cf, step[2], plan)
         else:
-            delta, g = _segment_bwd(step_ins[i], delta, cf, step[2], plan)
+            z_in = x_res if (first and plan.win_in) else step_ins[i]
+            delta, g, vecs = _segment_bwd(
+                z_in, delta, cf, step[2], plan,
+                d_in=d_in if (first and plan.fold_din) else None,
+                d_out=d_out if (last and plan.fold_dout) else None,
+                has_bias=last and plan.fold_bias,
+                col_base=base_cols
+                if (first and plan.win_in) else None,
+                in_width=plan.in_width
+                if (first and plan.win_in) else None)
+            if first and plan.fold_din:
+                g_din = vecs.pop(0)
+            if last and plan.fold_dout:
+                g_dout = vecs.pop(0)
+            if last and plan.fold_bias:
+                g_bias = vecs.pop(0)
         g_tabs.append(g[None])           # restore the (1,) local shard axis
-    if plan.has_din:
-        g_din = jnp.sum(delta.astype(_F32) * x2.astype(_F32), axis=0)
+    if plan.has_din and not plan.fold_din:
+        g_din = jnp.sum(delta.astype(_F32) * x_res.astype(_F32), axis=0)
         delta = delta * d_in.astype(fdt)
-    else:
-        g_din = ph
+    g_din = ph if g_din is None else g_din
+    g_dout = ph if g_dout is None else g_dout
+    g_bias = ph if g_bias is None else g_bias
     if plan.dp:
         # rows shard over the DP axes, so every batch-summed parameter grad
         # above is a per-DP-shard partial: reduce over dp (standard data-
@@ -375,24 +606,25 @@ def _shard_bwd(plan: ShardPlan, tabs, d_in, d_out, bias, res, gy):
 # ---------------------------------------------------------------------------
 
 def _fwd_specs(plan: ShardPlan):
-    act = plan.act_spec()
     in_specs = (plan.table_specs(), plan.vec_spec(plan.has_din),
                 plan.vec_spec(plan.has_dout), plan.vec_spec(plan.has_bias),
-                act)
-    res_specs = (act, tuple(act for _ in plan.steps), act)
-    return in_specs, act, res_specs
+                plan.x_spec())
+    return in_specs, plan.act_spec(), plan.res_specs()
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
 def _sharded_core(plan: ShardPlan, tables, d_in, d_out, bias, x2):
-    """x2: (rows, n) row-major, rows pre-padded to block_rows when the
-    kernel path is on.  Returns (rows, n)."""
+    """x2: (rows, in_width or n) row-major, rows pre-padded to block_rows
+    when the kernel path is on.  Returns (rows, out_width or n)."""
     in_specs, y_spec, _ = _fwd_specs(plan)
     f = shard_map(
         functools.partial(_shard_fwd, plan, collect=False),
         mesh=plan.mesh, in_specs=in_specs, out_specs=y_spec,
         check_rep=False)
-    return f(tables, d_in, d_out, bias, x2)
+    y2 = f(tables, d_in, d_out, bias, x2)
+    if plan.out_width is not None:
+        y2 = y2[:, :plan.out_width]
+    return y2
 
 
 def _sharded_core_fwd(plan, tables, d_in, d_out, bias, x2):
@@ -402,12 +634,22 @@ def _sharded_core_fwd(plan, tables, d_in, d_out, bias, x2):
         mesh=plan.mesh, in_specs=in_specs, out_specs=(y_spec, res_specs),
         check_rep=False)
     y2, res = f(tables, d_in, d_out, bias, x2)
+    if plan.out_width is not None:
+        y2 = y2[:, :plan.out_width]
     return y2, (tables, d_in, d_out, bias, res)
 
 
 def _sharded_core_bwd(plan, saved, gy2):
     tables, d_in, d_out, bias, res = saved
     in_specs, y_spec, res_specs = _fwd_specs(plan)
+    if plan.out_width is not None:
+        # Transport the cotangent as an even-width slab: the zero-pad is a
+        # local op that fuses into the slab reshard, and the padded lanes
+        # carry exact-zero cotangent (the transpose of the forward's
+        # output slice).  Window-reading the (rows, out_width) cotangent
+        # instead would force replicating it — a batch-proportional
+        # all-gather whenever it flows back feature-sharded.
+        gy2 = jnp.pad(gy2, ((0, 0), (0, plan.n - plan.out_width)))
     out_specs = (y_spec, plan.table_specs(), plan.vec_spec(plan.has_din),
                  plan.vec_spec(plan.has_dout), plan.vec_spec(plan.has_bias))
     f = shard_map(
@@ -417,6 +659,11 @@ def _sharded_core_bwd(plan, saved, gy2):
         out_specs=out_specs, check_rep=False)
     g_x2, g_tabs, g_din, g_dout, g_bias = f(tables, d_in, d_out, bias,
                                             res, gy2)
+    if plan.in_width is not None:
+        # the shard_map assembles the (rows, n) sharded delta; the primal
+        # contract is (rows, in_width) — a local per-shard slice, and the
+        # dropped lanes are the padded ones whose cotangent is discarded
+        g_x2 = g_x2[:, :plan.in_width]
 
     def _vg(g, like, present):
         return g.astype(like.dtype) if present else jnp.zeros_like(like)
@@ -435,6 +682,9 @@ _sharded_core.defvjp(_sharded_core_fwd, _sharded_core_bwd)
 # ---------------------------------------------------------------------------
 
 def _resolve_kernel(cfg, steps, backend_tpu: bool) -> bool:
+    """Resolve the tri-state ``use_kernel`` knob for the shard-local runs
+    (None = auto/on-TPU, True = force/interpret off-TPU, False = never);
+    a schedule with no local steps has nothing to fuse."""
     if cfg.use_kernel is False:
         return False
     if not any(step[0] == "local" for step in steps):
@@ -454,22 +704,41 @@ def spm_apply_sharded(params: dict, x: jax.Array, cfg, mesh: Mesh, *,
     all-gather.  Collectives issued: one collective-permute per cross-shard
     stage (two in the backward) — plus, only when DP axes exist, the
     standard parameter-sized grad psum over those axes in the backward.
+
+    Rectangular widths: ``x`` stays ``(..., in_width)`` — it enters the
+    shard_map feature-replicated and the FIRST shard-local kernel run reads
+    this shard's n_local-wide window straight out of it (scalar-prefetch
+    offset + in-VMEM iota mask against the global width), so no
+    zero-padded square array is ever materialized in HBM; the backward
+    remats through the same windowed read and the custom_vjp returns the
+    input cotangent as ``(..., in_width)`` with exact-zero padded-lane
+    parameter grads.  (Off the kernel path the window falls back to a
+    local gather + mask in the shard body.)  The output leaves the
+    shard_map as the assembled (rows, n) sharded array and is cut to
+    ``out_width`` by one local per-shard slice, and the backward's
+    cotangent enters as an even-width slab (local zero-pad fused into the
+    reshard — see the ShardPlan note) — the two boundary XLA ops a
+    rectangular operator still costs; under SPMD the edge shard's
+    dead-tile compute is wall-clock-free (fully-live interior shards
+    bound the step).
     """
     n = cfg.n
     if mesh.shape[AXIS] != cfg.n_shards:
         raise ValueError(
             f"mesh axis {AXIS!r} has size {mesh.shape[AXIS]}, operator has "
             f"n_shards={cfg.n_shards}")
+    if in_width == n:
+        in_width = None
+    if out_width == n:
+        out_width = None
     sched = cfg.pairing
     steps = plan_steps(n, sched.strides(), cfg.n_shards)
     n_local = n // cfg.n_shards
 
-    if in_width is not None and in_width != n:
-        pad = [(0, 0)] * (x.ndim - 1) + [(0, n - in_width)]
-        x = jnp.pad(x, pad)
+    in_w = in_width if in_width is not None else n
     lead = x.shape[:-1]
     rows = int(np.prod(lead, dtype=np.int64)) if lead else 1
-    x2 = x.reshape(rows, n)
+    x2 = x.reshape(rows, in_w)
 
     from repro.parallel.sharding import data_axes
     dp = data_axes(mesh)
@@ -499,7 +768,8 @@ def spm_apply_sharded(params: dict, x: jax.Array, cfg, mesh: Mesh, *,
         mesh=mesh, n=n, n_local=n_local, n_shards=cfg.n_shards,
         steps=steps, has_din=cfg.use_diag, has_dout=cfg.use_diag,
         has_bias=cfg.use_bias, use_kernel=use_kernel,
-        block_rows=block_rows, interpret=default_interpret(), dp=dp)
+        block_rows=block_rows, interpret=default_interpret(), dp=dp,
+        in_width=in_width, out_width=out_width)
 
     coeffs = spm_mod.stage_coeffs(params, cfg)
     tables = _step_tables(coeffs, steps, cfg.n_shards, n_local)
@@ -521,7 +791,5 @@ def spm_apply_sharded(params: dict, x: jax.Array, cfg, mesh: Mesh, *,
         x2)
     if y2.shape[0] != rows:
         y2 = y2[:rows]
-    y = y2.reshape(lead + (n,))
-    if out_width is not None and out_width != n:
-        y = y[..., :out_width]
-    return y
+    out_w = out_width if out_width is not None else n
+    return y2.reshape(lead + (out_w,))

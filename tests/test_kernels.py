@@ -285,11 +285,73 @@ def test_fused_rectangular_no_xla_pad_or_slice():
                 f"feature-axis output slice survived: {iv.shape}->{ov.shape}"
 
 
+def test_bwd_dead_tile_skip_zero_blocks():
+    """ISSUE 4 acceptance: with ``out_width`` the backward grid visits only
+    ceil(out_width / n_tile) feature tiles, the unvisited parameter-grad
+    (and g_x) blocks come back EXACTLY zero (aliased zero-init, not
+    computed), and the visited region matches the full-grid oracle.
+    ``dead_from`` produces the same pruning for an interior run whose
+    cotangent is already zero past the downstream run's skip point."""
+    B, n, nt, strides = 8, 256, 64, (1, 2, 4)
+    out_w = 100                         # vis = ceil(100/64) = 2 of 4 tiles
+    x = jax.random.normal(KEY, (B, n))
+    gy = jax.random.normal(jax.random.PRNGKey(2), (B, out_w))
+    cf = 0.4 * jax.random.normal(jax.random.PRNGKey(1),
+                                 (len(strides), n // 2, 4))
+    d_in = 1 + 0.1 * jax.random.normal(jax.random.PRNGKey(3), (n,))
+    d_out = 1 + 0.1 * jax.random.normal(jax.random.PRNGKey(4), (n,))
+    out = spm_stack_bwd_kernel_call(x, cf, gy, d_in, d_out, strides=strides,
+                                    block_rows=8, n_tile=nt, has_bias=True,
+                                    out_width=out_w, interpret=True)
+    gx, gcf, gdin, gdout, gbias = out
+    # oracle: full-width gy with an explicit zero tail, full grid
+    gy_full = jnp.pad(gy, ((0, 0), (0, n - out_w)))
+
+    def ref(x, cf, d_in, d_out):
+        z = spm_stack_ref(x * d_in, cf, strides)
+        return jnp.sum(z * d_out * gy_full)
+
+    rgx, rgcf, rgdin, rgdout = jax.grad(ref, argnums=(0, 1, 2, 3))(
+        x, cf, d_in, d_out)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(rgx),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(gcf), np.asarray(rgcf),
+                               atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(gdin), np.asarray(rgdin),
+                               atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(gdout), np.asarray(rgdout),
+                               atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(gbias),
+                               np.asarray(jnp.sum(gy_full, axis=0)),
+                               atol=1e-4, rtol=1e-4)
+    # unvisited blocks (tiles 2..3: pair rows >= 64, columns >= 128) are
+    # exact zeros — not small numbers: they were never computed
+    assert np.all(np.asarray(gcf[:, 2 * (nt // 2):]) == 0)
+    assert np.all(np.asarray(gx[:, 2 * nt:]) == 0)
+    for v in (gdin, gdout, gbias):
+        assert np.all(np.asarray(v[2 * nt:]) == 0)
+    # dead_from: interior-run shape — full-width gy whose tail is already
+    # exactly zero; the pruned grid must reproduce the full-grid grads
+    gx2, gcf2 = spm_stack_bwd_kernel_call(x, cf, gy_full, strides=strides,
+                                          block_rows=8, n_tile=nt,
+                                          dead_from=out_w, interpret=True)
+    rgx2, rgcf2 = spm_stack_grads_ref(x, cf, strides, gy_full)
+    np.testing.assert_allclose(np.asarray(gx2), np.asarray(rgx2),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(gcf2), np.asarray(rgcf2),
+                               atol=1e-3, rtol=1e-3)
+    assert np.all(np.asarray(gcf2[:, 2 * (nt // 2):]) == 0)
+
+
 @pytest.mark.parametrize("in_w,out_w", [
     (3000, 2500),   # both widths partial in their edge tiles
     (1500, 2500),   # in_w <= n - first-run n_tile: whole input feature
                     # tiles past the edge (the g_x width-vs-grid aliasing
                     # regime — the backward must widen g_x internally)
+    (1500, 1800),   # both widths below the first/last run tile — here the
+                    # plan's last run is a single 4096-wide tile, so the
+                    # backward skip does NOT engage (dead-chain coverage
+                    # lives in test_fused_dead_chain_non_monotone_tiles)
 ])
 def test_fused_rectangular_multi_run_boundaries(in_w, out_w):
     """Rectangular widths on a MULTI-run plan (n=4096 splits in two):
@@ -329,6 +391,83 @@ def test_fused_rectangular_multi_run_boundaries(in_w, out_w):
     assert np.all(np.asarray(g[2][in_w:]) == 0)    # g_din past d_in
     assert np.all(np.asarray(g[3][out_w:]) == 0)   # g_dout past d_out
     assert np.all(np.asarray(g[4][out_w:]) == 0)   # g_bias past d_out
+
+
+@pytest.mark.parametrize("in_w,out_w", [
+    (None, 1800),   # square input, narrow output: every dead column holds
+                    # real remat data, so a wrong skip corrupts grads
+    (3000, 1200),   # narrowing with both widths partial
+])
+def test_fused_dead_chain_non_monotone_tiles(in_w, out_w):
+    """Regression for the dead_from chain on a plan whose run tiles are
+    NOT monotone (2048 -> 4096 -> 8): a larger-tile middle run spreads
+    live cotangent across its whole edge tile, so the upstream run's dead
+    boundary must be re-derived from EACH run's tile width — propagating
+    the last run's boundary verbatim zeroed real gradients here."""
+    n, strides = 4096, (1, 2, 4, 8, 1024, 2048, 1, 2)
+    tiles = [t for _, t in plan_runs(n, strides)]
+    assert len(tiles) == 3 and tiles[1] > tiles[0] > tiles[2], tiles
+    cf = 0.4 * jax.random.normal(jax.random.PRNGKey(1),
+                                 (len(strides), n // 2, 4))
+    xw = in_w if in_w is not None else n
+    x = jax.random.normal(KEY, (4, xw))
+
+    def f(x, cf):
+        y = spm_stack_fused(x, cf, strides, in_width=in_w, out_width=out_w)
+        return jnp.sum(y ** 2)
+
+    def r(x, cf):
+        xp = jnp.pad(x, ((0, 0), (0, n - xw)))
+        return jnp.sum(spm_stack_ref(xp, cf, strides)[:, :out_w] ** 2)
+
+    g = jax.grad(f, argnums=(0, 1))(x, cf)
+    gr = jax.grad(r, argnums=(0, 1))(x, cf)
+    assert g[0].shape == (4, xw)
+    for a, b in zip(g, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-3, rtol=1e-3)
+
+
+def test_windowed_col_base_kernel_mode():
+    """The sharded windowed (col_base) kernel mode, driven directly as the
+    distributed executor drives it per shard: the forward/backward read
+    each shard's n_local-wide window straight out of the feature-complete
+    operands, masking against GLOBAL widths in VMEM.  (The executor uses
+    the x window; the symmetric gy window is exercised here to keep the
+    kernel contract covered.)"""
+    n, S, n_local, in_w, out_w = 64, 4, 16, 50, 40
+    B, nt, strides = 8, 16, (1, 2, 4)
+    x = jax.random.normal(KEY, (B, in_w))
+    gy = jax.random.normal(jax.random.PRNGKey(2), (B, out_w))
+    cf_l = 0.4 * jax.random.normal(jax.random.PRNGKey(1),
+                                   (len(strides), n_local // 2, 4))
+    d_in = 1 + 0.1 * jax.random.normal(jax.random.PRNGKey(3), (n,))
+    xp = jnp.pad(x, ((0, 0), (0, n - in_w)))
+    gyp = jnp.pad(gy, ((0, 0), (0, n - out_w)))
+    for j in range(S):
+        base = jnp.asarray([j * (n_local // nt)], jnp.int32)
+        d_loc = d_in[j * n_local:(j + 1) * n_local]
+        slab = xp[:, j * n_local:(j + 1) * n_local]
+        gy_slab = gyp[:, j * n_local:(j + 1) * n_local]
+        y = spm_stack_kernel_call(x, cf_l, d_loc, None, None, base,
+                                  strides=strides, block_rows=8, n_tile=nt,
+                                  in_width=in_w, interpret=True)
+        ref = spm_stack_ref(slab * d_loc, cf_l, strides)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                                   atol=1e-5, rtol=1e-5)
+        gx, gcf, gdin, gbias = spm_stack_bwd_kernel_call(
+            x, cf_l, gy, d_loc, None, base, strides=strides, block_rows=8,
+            n_tile=nt, has_bias=True, in_width=in_w, out_width=out_w,
+            interpret=True)
+
+        def f(slab, cf, d):
+            return jnp.sum(spm_stack_ref(slab * d, cf, strides) * gy_slab)
+
+        rgx, rgcf, rgd = jax.grad(f, argnums=(0, 1, 2))(slab, cf_l, d_loc)
+        for a, b in ((gx, rgx), (gcf, rgcf), (gdin, rgd),
+                     (gbias, jnp.sum(gy_slab, axis=0))):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-3, rtol=1e-3)
 
 
 def test_use_kernel_fallback_rules():
