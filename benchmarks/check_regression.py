@@ -1,0 +1,123 @@
+"""CI bench-regression gate over ``BENCH_kernel.json``.
+
+Compares a freshly generated bench file against the committed baseline on
+the DETERMINISTIC traffic-model numbers only — modeled HBM bytes per chip
+and exposed-communication bytes (wall-clock off-TPU is interpret-mode
+noise and is never gated).  A fresh value may not exceed its baseline by
+more than ``--tol`` (relative): a PR that grows the modeled traffic of an
+existing shape fails CI instead of silently landing, while IMPROVEMENTS
+and brand-new rows land free (a key missing from the baseline is skipped
+with a note; a baseline key missing from the fresh file fails, since
+dropping a row is how a regression would hide).
+
+Both files must be generated at the same scale (the smoke CI bench vs the
+committed smoke baseline): records are matched on their identity keys
+including the batch sizes, and a top-level batch mismatch is an error
+rather than a vacuous pass.
+
+Usage:
+  PYTHONPATH=src:. python benchmarks/kernel_bench.py --smoke --out fresh.json
+  PYTHONPATH=src:. python benchmarks/check_regression.py \
+      --baseline BENCH_kernel.json --fresh fresh.json [--tol 0.02]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, Tuple
+
+DEFAULT_TOL = 0.02
+
+
+def gated_metrics(bench: dict) -> Dict[Tuple, float]:
+    """Flatten one bench payload into {key: value} for every gated metric.
+
+    Keys are fully self-describing tuples, so two files generated at the
+    same scale produce the same key set and any structural drift shows up
+    as missing/new keys rather than silent misalignment.
+    """
+    out: Dict[Tuple, float] = {}
+    batch, lb = bench.get("batch"), bench.get("linear_batch")
+    for r in bench.get("results", []):
+        t = r["traffic"]
+        base = ("square", r["n"], batch, lb)
+        out[base + ("fused_bytes",)] = t["fused_bytes"]
+        out[base + ("fused_roundtrips",)] = t["fused_roundtrips"]
+    for r in bench.get("rect_results", []):
+        t = r["traffic"]
+        base = ("rect", r["shape"], r["d_in"], r["d_out"], lb)
+        out[base + ("fused_bytes",)] = t["fused_bytes"]
+    for r in bench.get("sharded_results", []):
+        base = ("sharded", r["n"], r["L"], r["n_shards"],
+                r.get("in_width"), r.get("out_width"), batch)
+        m, mo = r["modeled"], r.get("modeled_overlap", {})
+        out[base + ("hbm_bytes_per_chip",)] = m["hbm_bytes_per_chip"]
+        out[base + ("permute_bytes_per_chip",)] = m["permute_bytes_per_chip"]
+        if "exposed_permute_bytes_per_chip" in m:
+            out[base + ("exposed_serial",)] = \
+                m["exposed_permute_bytes_per_chip"]
+        if mo:
+            out[base + ("exposed_overlap",)] = \
+                mo["exposed_permute_bytes_per_chip"]
+    return out
+
+
+def compare(baseline: dict, fresh: dict,
+            tol: float = DEFAULT_TOL) -> Tuple[list, list, list]:
+    """Returns (regressions, dropped, new) key lists; the gate passes iff
+    the first two are empty.  A regression entry is (key, base, fresh)."""
+    b, f = gated_metrics(baseline), gated_metrics(fresh)
+    regressions = []
+    for key, bv in b.items():
+        if key not in f:
+            continue
+        fv = f[key]
+        if fv > bv * (1.0 + tol):
+            regressions.append((key, bv, fv))
+    dropped = sorted((k for k in b if k not in f), key=repr)
+    new = sorted((k for k in f if k not in b), key=repr)
+    return regressions, dropped, new
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_kernel.json")
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--tol", type=float, default=DEFAULT_TOL,
+                    help="relative headroom before a grown metric fails")
+    ap.add_argument("--allow-dropped", action="store_true",
+                    help="do not fail when a baseline row disappears")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    with open(args.fresh) as fh:
+        fresh = json.load(fh)
+    if (baseline.get("batch"), baseline.get("linear_batch")) != \
+            (fresh.get("batch"), fresh.get("linear_batch")):
+        print(f"ERROR: scale mismatch — baseline batch="
+              f"{baseline.get('batch')}/{baseline.get('linear_batch')}, "
+              f"fresh batch={fresh.get('batch')}/"
+              f"{fresh.get('linear_batch')}; regenerate at the same scale")
+        return 2
+    regressions, dropped, new = compare(baseline, fresh, args.tol)
+    for key in new:
+        print(f"note: new bench row (no baseline, not gated): {key}")
+    for key in dropped:
+        print(f"{'note' if args.allow_dropped else 'FAIL'}: "
+              f"baseline row missing from fresh bench: {key}")
+    for key, bv, fv in regressions:
+        print(f"FAIL: {key}: {bv:,} -> {fv:,} "
+              f"(+{(fv / bv - 1) * 100:.1f}% > tol {args.tol * 100:.0f}%)")
+    if regressions or (dropped and not args.allow_dropped):
+        print(f"bench regression gate FAILED "
+              f"({len(regressions)} regressions, {len(dropped)} dropped)")
+        return 1
+    print(f"bench regression gate passed "
+          f"({len(gated_metrics(fresh))} metrics, {len(new)} new)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

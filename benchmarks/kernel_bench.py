@@ -185,13 +185,16 @@ def sharded_model(n: int, batch: int, L: int,
     stages each move the slab once over ICI (collective_permute partner
     exchange).  Bytes are per chip, f32 activations.
 
-    The sharded traffic is modeled TWICE for the full operator (diag +
-    bias, plus any rectangular widths): ``modeled`` is the kernel-native
-    executor (diag/bias folded into the boundary kernel runs, the
-    rectangular input window-read in VMEM — this PR), ``modeled_pr3`` is
-    the PR 3 baseline (explicit elementwise diag/bias ops in the shard
-    body and an XLA pad/slice around the square core);
-    ``boundary_reduction`` is their per-stage-total HBM ratio.
+    The sharded traffic is modeled THREE ways for the full operator (diag
+    + bias, plus any rectangular widths): ``modeled`` is the kernel-native
+    step-serial executor (diag/bias folded into the boundary kernel runs,
+    the rectangular input window-read in VMEM), ``modeled_overlap`` the
+    overlap-scheduled executor (row-block pipelined cross-shard exchanges
+    — same HBM, but the per-stage permute bytes split into exposed vs
+    hidden), and ``modeled_pr3`` the PR 3 baseline (explicit elementwise
+    diag/bias ops in the shard body and an XLA pad/slice around the
+    square core).  ``boundary_reduction`` is the folded/pre-fold HBM
+    ratio; ``exposed_reduction`` the serial/overlap exposed-comm ratio.
     """
     strides = tuple(two_level_schedule(n, L, n_shards).strides())
     steps = plan_steps(n, strides, n_shards)
@@ -206,6 +209,8 @@ def sharded_model(n: int, batch: int, L: int,
               in_width=in_width, out_width=out_width)
     sh = sharded_stage_traffic(n_local, batch, steps,
                                fold_boundaries=True, **kw)
+    sh_ov = sharded_stage_traffic(n_local, batch, steps,
+                                  fold_boundaries=True, overlap=True, **kw)
     sh_pr3 = sharded_stage_traffic(n_local, batch, steps,
                                    fold_boundaries=False, **kw)
     act = batch * n * 4
@@ -219,9 +224,13 @@ def sharded_model(n: int, batch: int, L: int,
             "n_cross_stages": sum(1 for s in steps if s[0] == "cross"),
             "n_local_runs": sum(1 for s in steps if s[0] == "local"),
             "modeled": sh,
+            "modeled_overlap": sh_ov,
             "modeled_pr3": sh_pr3,
             "boundary_reduction": (sh_pr3["hbm_bytes_per_chip"]
                                    / sh["hbm_bytes_per_chip"]),
+            "exposed_reduction": (
+                sh["exposed_permute_bytes_per_chip"]
+                / max(sh_ov["exposed_permute_bytes_per_chip"], 1)),
             "replicated_hbm_bytes": rep_bytes,
             "replicated_s": rep_s,
             "sharded_s": shard_s,
@@ -260,9 +269,13 @@ def run_sharded_worker(spec: str) -> None:
     from jax.sharding import Mesh
     from repro.parallel.ctx import activation_sharding
 
+    import dataclasses
+
     n, batch, L, n_shards = map(int, spec.split(","))
     cfg = SPMConfig(n=n, n_stages=L, schedule="two_level",
-                    n_shards=n_shards, backward="custom", use_kernel=False)
+                    n_shards=n_shards, backward="custom", use_kernel=False,
+                    overlap=False)
+    cfg_ov = dataclasses.replace(cfg, overlap=True)
     p = init_spm(KEY, cfg)
     x = jax.random.normal(KEY, (batch, n))
     mesh = Mesh(np.asarray(jax.devices()[:n_shards]).reshape(n_shards,),
@@ -279,6 +292,14 @@ def run_sharded_worker(spec: str) -> None:
             lambda x: jnp.sum(spm_apply(p, x, cfg) ** 2)))
         out["sharded_fwd_us"] = time_step(sh_f, x) * 1e6
         out["sharded_fwdbwd_us"] = time_step(sh_g, x) * 1e6
+        # overlap schedule (per-block ppermute transport on host devices —
+        # correctness wall-clock only; the ICI overlap claim rides the
+        # exposed/hidden traffic model)
+        ov_f = jax.jit(lambda x: spm_apply(p, x, cfg_ov))
+        ov_g = jax.jit(jax.grad(
+            lambda x: jnp.sum(spm_apply(p, x, cfg_ov) ** 2)))
+        out["sharded_overlap_fwd_us"] = time_step(ov_f, x) * 1e6
+        out["sharded_overlap_fwdbwd_us"] = time_step(ov_g, x) * 1e6
     print(json.dumps(out))
 
 
@@ -371,7 +392,8 @@ def main(argv=None) -> None:
     # plus an interpret-safe wall-clock from a forced-device-count child
     # for the smallest width.
     print("# sharded vs replicated (n,L,n_shards,cross_stages,"
-          "permute_bytes/chip,hbm_bytes/chip,pr3_hbm_bytes/chip,"
+          "permute_bytes/chip,exposed_serial,exposed_overlap,"
+          "exposed_reduction,hbm_bytes/chip,pr3_hbm_bytes/chip,"
           "boundary_reduction,replicated_bytes,model_speedup)")
     sharded_records = []
     shapes = [(n, None, None, None) for n in widths]
@@ -398,9 +420,13 @@ def main(argv=None) -> None:
             # seconds and measured microseconds describe ONE workload
             sr["timing"] = time_sharded_subprocess(n, args.batch, L)
         sharded_records.append(sr)
-        m = sr["modeled"]
+        m, mo = sr["modeled"], sr["modeled_overlap"]
         print(f"{n},{sr['L']},{sr['n_shards']},{sr['n_cross_stages']},"
-              f"{m['permute_bytes_per_chip']},{m['hbm_bytes_per_chip']},"
+              f"{m['permute_bytes_per_chip']},"
+              f"{m['exposed_permute_bytes_per_chip']},"
+              f"{mo['exposed_permute_bytes_per_chip']},"
+              f"{sr['exposed_reduction']:.2f}x,"
+              f"{m['hbm_bytes_per_chip']},"
               f"{sr['modeled_pr3']['hbm_bytes_per_chip']},"
               f"{sr['boundary_reduction']:.2f}x,"
               f"{sr['replicated_hbm_bytes']},{sr['speedup_model']:.2f}x")

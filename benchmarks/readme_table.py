@@ -52,27 +52,37 @@ def render(bench: dict) -> str:
     out.append("")
     out.append("Feature-sharded two_level executor, per chip "
                f"({bench['sharded_results'][0]['n_shards']}-way): "
-               "kernel-native boundaries vs the pre-fold executor "
-               "(explicit diag/bias elementwise ops + pad/slice around "
-               "the square core):\n")
-    out.append("| n | L | widths | cross stages | permute bytes | HBM "
+               "kernel-native boundaries vs the pre-fold executor, and "
+               "exposed communication under the overlap schedule "
+               "(row-block pipelined cross-shard exchanges) vs the "
+               "step-serial executor:\n")
+    out.append("| n | L | widths | cross stages | permute bytes | "
+               "exposed comm (serial / overlap) | exposed reduction | HBM "
                "bytes (now / pre-fold) | boundary reduction |")
-    out.append("|---|---|---|---|---|---|---|")
+    out.append("|---|---|---|---|---|---|---|---|---|")
     for r in bench["sharded_results"]:
         iw, ow = r.get("in_width"), r.get("out_width")
         w = ("square" if iw is None and ow is None
              else f"{iw or r['n']} → {ow or r['n']}")
-        m, m3 = r["modeled"], r["modeled_pr3"]
+        m, mo, m3 = r["modeled"], r["modeled_overlap"], r["modeled_pr3"]
         out.append(
             f"| {r['n']} | {r['L']} | {w} | {r['n_cross_stages']} | "
             f"{m['permute_bytes_per_chip']:,} | "
+            f"{m['exposed_permute_bytes_per_chip']:,} / "
+            f"{mo['exposed_permute_bytes_per_chip']:,} | "
+            f"{r['exposed_reduction']:.2f}x | "
             f"{m['hbm_bytes_per_chip']:,} / {m3['hbm_bytes_per_chip']:,} | "
             f"{r['boundary_reduction']:.2f}x |")
     out.append("")
     out.append("(A two_level schedule whose cycle ends on a cross stage "
                "keeps explicit d_out/bias ops on that side and the model "
                "charges them; the last row pads L to end on a local step, "
-               "folding BOTH boundaries into kernel runs.)")
+               "folding BOTH boundaries into kernel runs.  Exposed comm "
+               "is the modeled non-hidden share of the permute bytes: the "
+               "overlap schedule pipelines row blocks so a block's "
+               "exchange hides under other blocks' compute and under "
+               "other cross stages' exchanges on distinct XOR links — "
+               "see docs/sharding.md.)")
     return "\n".join(out)
 
 

@@ -9,7 +9,8 @@ from repro.models.transformer import LayerSpec, ModelConfig
 
 __all__ = ["dense_layers", "local_global_layers", "moe_layers",
            "mamba_layers", "hybrid_layers", "with_overrides",
-           "with_fused_linears", "with_feature_sharding"]
+           "with_fused_linears", "with_feature_sharding",
+           "with_overlap_executor"]
 
 
 def dense_layers(n: int) -> Tuple[LayerSpec, ...]:
@@ -73,3 +74,16 @@ def with_feature_sharding(cfg: ModelConfig, n_shards: int) -> ModelConfig:
     unsharded (it is just a reordered butterfly)."""
     return dataclasses.replace(cfg, spm_schedule="two_level",
                                spm_n_shards=n_shards)
+
+
+def with_overlap_executor(cfg: ModelConfig,
+                          on: Optional[bool] = True) -> ModelConfig:
+    """Set the overlap-scheduled sharded executor knob on every SPM linear
+    (``spm_overlap``: None = auto/on-TPU, True = force the row-block
+    pipelined schedule everywhere — off-TPU it runs with the per-block
+    collective_permute transport, the interpret-mode proof path — False =
+    keep the step-serial schedule).  Only consulted when the distributed
+    executor engages (``with_feature_sharding`` + a matching
+    ``activation_sharding`` context); see core/eligibility.resolve_overlap
+    for the resolution rules."""
+    return dataclasses.replace(cfg, spm_overlap=on)

@@ -9,7 +9,7 @@ from __future__ import annotations
 import importlib
 from typing import Any, Tuple
 
-from repro.configs.base import with_fused_linears
+from repro.configs.base import with_fused_linears, with_overlap_executor
 from repro.configs.shapes import SHAPES, ShapeSpec
 from repro.models.transformer import ModelConfig
 
@@ -43,21 +43,29 @@ _UNSET = object()  # distinct from None: None is itself a valid tri-state
 
 
 def get_config(arch: str,
-               use_kernel: Any = _UNSET) -> ModelConfig:
+               use_kernel: Any = _UNSET,
+               overlap: Any = _UNSET) -> ModelConfig:
     """Resolve an arch id; ``use_kernel`` (when passed) overrides the
-    fused-Pallas-linear knob: None = auto (fused on TPU backends, XLA
-    elsewhere), True = force, False = off.  Omit to keep the arch
-    config's own setting."""
+    fused-Pallas-linear knob and ``overlap`` the overlap-scheduled
+    sharded-executor knob (each tri-state: None = auto/on-TPU, True =
+    force, False = off).  Omit either to keep the arch config's own
+    setting."""
     cfg = _mod(arch).CONFIG
     if use_kernel is not _UNSET:
         cfg = with_fused_linears(cfg, use_kernel)
+    if overlap is not _UNSET:
+        cfg = with_overlap_executor(cfg, overlap)
     return cfg
 
 
-def get_smoke(arch: str, use_kernel: Any = _UNSET) -> ModelConfig:
+def get_smoke(arch: str, use_kernel: Any = _UNSET,
+              overlap: Any = _UNSET) -> ModelConfig:
+    """Smoke-scale variant of ``get_config`` (same knob overrides)."""
     cfg = _mod(arch).SMOKE
     if use_kernel is not _UNSET:
         cfg = with_fused_linears(cfg, use_kernel)
+    if overlap is not _UNSET:
+        cfg = with_overlap_executor(cfg, overlap)
     return cfg
 
 

@@ -1,0 +1,242 @@
+"""One fallback matrix for every SPM execution path.
+
+Before this module, "can this operator take the fast path?" was answered
+in three places that had to agree by convention: ``core/spm.py`` decided
+kernel eligibility (``kernel_eligible`` / ``use_fused_kernel``),
+``parallel/spm_shard.py`` decided distributed eligibility
+(``sharded_eligible``) plus its own private kernel re-resolution
+(``_resolve_kernel``), and the overlap executor would have added a fourth.
+This module is now the single home of those predicates; ``core/spm`` and
+``parallel/spm_shard`` re-export them unchanged for back-compat.
+
+The matrix (rows are operator properties, columns the three executors):
+
+===========================  ==========  ===========  ================
+property                     XLA compose fused kernel sharded executor
+===========================  ==========  ===========  ================
+permutation pairings         yes         no           no
+odd n                        yes         no           no
+backward=custom_inverse      yes         no           no
+n % n_shards != 0            yes         yes          no
+odd n_local (stride-1 list)  yes         yes          no
+non-XOR cross stride         yes         yes          no
+===========================  ==========  ===========  ================
+
+and the two tri-state engagement knobs resolved here:
+
+* ``use_kernel`` — fused Pallas operator.  ``None`` = auto (on-TPU only:
+  off-TPU the kernels run in interpret mode, a validation tool), ``True``
+  = force (interpret off-TPU), ``False`` = never.
+* ``overlap`` — the overlap-scheduled sharded executor (row-block
+  pipelined cross-shard exchanges, ``parallel/spm_shard.py``).  Same
+  tri-state: ``None`` = auto (on-TPU only), ``True`` = force the overlap
+  SCHEDULE everywhere (off-TPU it runs with the per-block
+  collective_permute transport — the interpret-mode proof of
+  correctness), ``False`` = keep the step-serial full-slab schedule.
+  The in-kernel RDMA transport (``resolve_rdma``) additionally requires
+  a real TPU backend: ``pltpu.make_async_remote_copy`` has no interpret
+  realization, so off-TPU the overlap schedule always transports blocks
+  via ``jax.lax.ppermute``.
+
+All predicates take the ``SPMConfig`` duck-typed (attributes ``n``,
+``odd``, ``n_shards``, ``backward``, ``pairing``, ``use_kernel``,
+``overlap``) so this module depends only on ``core/pairings``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+
+from repro.core.pairings import Schedule
+
+__all__ = ["plan_steps", "kernel_eligible", "use_fused_kernel",
+           "sharded_eligible", "resolve_shard_kernel", "resolve_overlap",
+           "resolve_rdma", "overlap_segments", "OVERLAP_ROW_BLOCKS"]
+
+# Row blocks per shard slab under the overlap schedule: block i's partner
+# exchange hides under block i+1's compute, so >= 2 blocks are needed for
+# any overlap and the marginal win shrinks past a handful (each block adds
+# kernel-call overhead and, on the RDMA path, a VMEM send/recv slot pair
+# amortized over fewer rows).  Lives here — the ONE module both the
+# executor (parallel/spm_shard.pick_row_blocks) and the traffic model
+# (launch/hlo_analysis.sharded_stage_traffic's overlap default) import —
+# so the modeled pipeline depth can never drift from the executed one.
+OVERLAP_ROW_BLOCKS = 4
+
+
+def _is_pow2(k: int) -> bool:
+    return k > 0 and (k & (k - 1)) == 0
+
+
+# ---------------------------------------------------------------------------
+# shard-schedule planning (pure stride arithmetic — no jax, no kernels)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def plan_steps(n: int, strides: Tuple[int, ...],
+               n_shards: int) -> Tuple[tuple, ...]:
+    """Split a stride schedule into shard-executable steps.
+
+    Returns a tuple of ``("local", stage_offset, run_strides)`` /
+    ``("cross", stage_index, k)`` entries covering the schedule in order;
+    consecutive local stages are grouped into one run (one fused kernel
+    call).  Raises ValueError when any stage is neither shard-local nor an
+    XOR partner exchange — callers treat that as "not sharded-eligible".
+    """
+    if n % n_shards:
+        raise ValueError(f"n={n} not divisible by n_shards={n_shards}")
+    n_local = n // n_shards
+    steps = []
+    run: list = []
+    run_start = 0
+    for ell, s in enumerate(strides):
+        if n % (2 * s):
+            raise ValueError(f"stride {s} invalid for n={n}")
+        if s < n_local and n_local % (2 * s) == 0:
+            if not run:
+                run_start = ell
+            run.append(s)
+            continue
+        if run:
+            steps.append(("local", run_start, tuple(run)))
+            run = []
+        k, rem = divmod(s, n_local)
+        if rem or not _is_pow2(k) or n_shards % (2 * k):
+            raise ValueError(
+                f"stride {s} is neither local to n_local={n_local} nor a "
+                f"power-of-two multiple partner exchange over "
+                f"{n_shards} shards")
+        steps.append(("cross", ell, k))
+    if run:
+        steps.append(("local", run_start, tuple(run)))
+    return tuple(steps)
+
+
+@functools.lru_cache(maxsize=None)
+def overlap_segments(steps: Tuple[tuple, ...]) -> Tuple[tuple, ...]:
+    """Group ``plan_steps`` output into overlap segments.
+
+    Each segment is ``("pair", local_step, cross_step)`` — a shard-local
+    run immediately followed by a cross stage, the shape the fused RDMA
+    kernel executes as one ``pallas_call`` (the local mix of row block
+    ``i+1`` hides block ``i``'s partner exchange) — or ``("one", step)``
+    for an unpaired step (a trailing local run, or the 2nd+ of
+    consecutive cross stages, whose exchange overlaps OTHER blocks' work
+    in the row-block pipeline rather than a dedicated local run).
+    """
+    segs = []
+    i = 0
+    while i < len(steps):
+        if (steps[i][0] == "local" and i + 1 < len(steps)
+                and steps[i + 1][0] == "cross"):
+            segs.append(("pair", steps[i], steps[i + 1]))
+            i += 2
+        else:
+            segs.append(("one", steps[i]))
+            i += 1
+    return tuple(segs)
+
+
+# ---------------------------------------------------------------------------
+# fused-kernel eligibility (single device)
+# ---------------------------------------------------------------------------
+
+def kernel_eligible(cfg, sched: Optional[Schedule] = None) -> bool:
+    """Whether the fused Pallas kernel can express this operator exactly:
+    all-structured (stride) stages, even n, and a backward mode whose
+    residual contract the kernel honors (custom_inverse stores outputs
+    instead of inputs, so it falls back to the XLA composition).
+
+    ``n_shards > 1`` is no longer an exclusion: when a feature-sharding
+    mesh context is active, ``spm_apply`` routes the operator through the
+    distributed executor (``parallel/spm_shard.py`` — shard-local runs
+    through this same kernel, cross-shard stages as collective_permute
+    partner exchanges) BEFORE this check; without a mesh context a
+    two_level schedule is just a stride schedule and runs through the
+    single-device fused kernel directly.  Remaining exclusions: permutation
+    pairings, odd n, and ``custom_inverse``."""
+    sched = cfg.pairing if sched is None else sched
+    return (sched.all_structured and not cfg.odd
+            and cfg.backward != "custom_inverse")
+
+
+def use_fused_kernel(cfg, sched: Optional[Schedule] = None) -> bool:
+    """Resolve the tri-state ``use_kernel`` knob (see SPMConfig)."""
+    if cfg.use_kernel is False:
+        return False
+    if not kernel_eligible(cfg, sched):
+        return False  # graceful fallback, even when forced on
+    if cfg.use_kernel:
+        return True
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# distributed-executor eligibility
+# ---------------------------------------------------------------------------
+
+def sharded_eligible(cfg, sched: Optional[Schedule] = None) -> bool:
+    """Whether the distributed executor can express this operator exactly:
+    even n divisible by n_shards, all-structured stages each either
+    shard-local or an XOR partner exchange, and a backward mode whose
+    residual contract the custom_vjp honors (custom_inverse stores outputs;
+    this path stores step inputs)."""
+    if cfg.n_shards <= 1 or cfg.odd or cfg.n % cfg.n_shards:
+        return False
+    if cfg.backward == "custom_inverse":
+        return False
+    sched = cfg.pairing if sched is None else sched
+    if not sched.all_structured:
+        return False
+    try:
+        plan_steps(cfg.n, sched.strides(), cfg.n_shards)
+    except ValueError:
+        return False
+    return True
+
+
+def resolve_shard_kernel(cfg, steps, backend_tpu: bool) -> bool:
+    """Resolve the tri-state ``use_kernel`` knob for the shard-local runs
+    (None = auto/on-TPU, True = force/interpret off-TPU, False = never);
+    a schedule with no local steps has nothing to fuse."""
+    if cfg.use_kernel is False:
+        return False
+    if not any(step[0] == "local" for step in steps):
+        return False
+    return True if cfg.use_kernel else backend_tpu
+
+
+def resolve_overlap(cfg, steps, backend_tpu: bool) -> bool:
+    """Resolve the tri-state ``overlap`` knob for the sharded executor.
+
+    ``False`` — never.  ``True`` — force the overlap schedule (row-block
+    pipelined exchanges; off-TPU the per-block transport is
+    ``jax.lax.ppermute``, which is how the interpret-mode parity tests
+    exercise the exact schedule the TPU path runs).  ``None`` — auto:
+    engage only on a TPU backend, where the exchange actually has ICI
+    latency to hide; off-TPU the step-serial PR 3/4 schedule remains the
+    proof-of-correctness fallback.  Structurally the overlap schedule
+    needs at least one cross stage (a communication-free schedule has
+    nothing to overlap — re-blocking rows would only add kernel-call
+    overhead)."""
+    if getattr(cfg, "overlap", None) is False:
+        return False
+    if not any(step[0] == "cross" for step in steps):
+        return False
+    if getattr(cfg, "overlap", None):
+        return True
+    return backend_tpu
+
+
+def resolve_rdma(use_kernel: bool, backend_tpu: bool,
+                 interpret: bool) -> bool:
+    """Whether the overlap schedule's pair segments may use the in-kernel
+    RDMA transport (``pltpu.make_async_remote_copy`` double-buffered over
+    row blocks).  Requires the fused kernel path, a real TPU backend, and
+    a compiled (non-interpret) kernel: interpret mode has no remote-DMA
+    realization, so it keeps the per-block ppermute transport — by design
+    the two transports realize the identical schedule."""
+    return use_kernel and backend_tpu and not interpret

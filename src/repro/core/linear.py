@@ -67,6 +67,11 @@ class LinearConfig:
     param_dtype: Any = jnp.float32
     use_kernel: Optional[bool] = None    # fused Pallas operator: None=auto
                                          # (on-TPU), True=force, False=off
+    overlap: Optional[bool] = None       # overlap-scheduled sharded executor
+                                         # (row-block pipelined cross-shard
+                                         # exchanges): None=auto (on-TPU),
+                                         # True=force the schedule (ppermute
+                                         # transport off-TPU), False=off
 
     def __post_init__(self):
         if self.impl not in LINEAR_IMPLS:
@@ -100,7 +105,7 @@ class LinearConfig:
             schedule=self.schedule, use_diag=True, use_bias=self.use_bias,
             backward=backward, init_scale=self.init_scale,
             n_shards=self.n_shards, param_dtype=self.param_dtype,
-            use_kernel=self.use_kernel)
+            use_kernel=self.use_kernel, overlap=self.overlap)
 
 
 def init_linear(key: jax.Array, cfg: LinearConfig) -> dict:

@@ -43,6 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pairings
+from repro.core.eligibility import kernel_eligible, use_fused_kernel
 from repro.core.pairings import Schedule, Stage
 
 __all__ = ["SPMConfig", "init_spm", "spm_apply", "spm_matrix", "stage_coeffs",
@@ -78,6 +79,18 @@ class SPMConfig:
     # reversible backward stores outputs, incompatible with the in-VMEM
     # remat the kernel backward performs).
     use_kernel: Optional[bool] = None
+    # Overlap-scheduled sharded executor (parallel/spm_shard.py): tri-state.
+    #   None  — auto: row-block pipelined cross-shard exchanges on TPU
+    #           backends only (where the ICI latency is real); off-TPU the
+    #           step-serial full-slab schedule remains the fallback.
+    #   True  — force the overlap SCHEDULE everywhere; off-TPU / interpret
+    #           it runs with the per-block collective_permute transport
+    #           (the parity-test proof path), on TPU pair segments use the
+    #           in-kernel RDMA transport (make_async_remote_copy).
+    #   False — keep the step-serial schedule.
+    # Resolution lives in core/eligibility.resolve_overlap; only consulted
+    # when the distributed executor engages (n_shards > 1 + mesh context).
+    overlap: Optional[bool] = None
 
     def __post_init__(self):
         if self.variant not in ("general", "rotation"):
@@ -393,34 +406,9 @@ def _cached_core(sched: Schedule, mode: str):
 # public apply
 # ---------------------------------------------------------------------------
 
-def kernel_eligible(cfg: SPMConfig, sched: Optional[Schedule] = None) -> bool:
-    """Whether the fused Pallas kernel can express this operator exactly:
-    all-structured (stride) stages, even n, and a backward mode whose
-    residual contract the kernel honors (custom_inverse stores outputs
-    instead of inputs, so it falls back to the XLA composition).
-
-    ``n_shards > 1`` is no longer an exclusion: when a feature-sharding
-    mesh context is active, ``spm_apply`` routes the operator through the
-    distributed executor (``parallel/spm_shard.py`` — shard-local runs
-    through this same kernel, cross-shard stages as collective_permute
-    partner exchanges) BEFORE this check; without a mesh context a
-    two_level schedule is just a stride schedule and runs through the
-    single-device fused kernel directly.  Remaining exclusions: permutation
-    pairings, odd n, and ``custom_inverse``."""
-    sched = cfg.pairing if sched is None else sched
-    return (sched.all_structured and not cfg.odd
-            and cfg.backward != "custom_inverse")
-
-
-def use_fused_kernel(cfg: SPMConfig, sched: Optional[Schedule] = None) -> bool:
-    """Resolve the tri-state ``use_kernel`` knob (see SPMConfig)."""
-    if cfg.use_kernel is False:
-        return False
-    if not kernel_eligible(cfg, sched):
-        return False  # graceful fallback, even when forced on
-    if cfg.use_kernel:
-        return True
-    return jax.default_backend() == "tpu"
+# kernel_eligible / use_fused_kernel moved to core/eligibility.py (the
+# single fallback matrix shared with the distributed executor); re-exported
+# here unchanged for back-compat.
 
 
 def spm_apply(params: dict, x: jax.Array, cfg: SPMConfig, *,

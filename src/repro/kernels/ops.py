@@ -141,14 +141,20 @@ def _pad_rows(x2: jax.Array, block_rows: int) -> Tuple[jax.Array, int]:
     return x2, rows
 
 
-def pick_block_rows_for_plan(runs, n_rows: int, dtype_bytes: int) -> int:
+def pick_block_rows_for_plan(runs, n_rows: int, dtype_bytes: int, *,
+                             overlap_bufs: bool = False) -> int:
     """One uniform row-block for every run of a plan (uniform row padding),
     budgeted per run: run r only keeps its OWN L_r + 2 tiles of its OWN
     width resident, so the binding constraint is the min over runs — not
     the old uniform (max_tile, total L) worst case, which under-sized the
-    row block for every multi-run plan."""
+    row block for every multi-run plan.  ``overlap_bufs`` additionally
+    reserves the overlap (RDMA) kernels' per-block send/recv double
+    buffers in the same budget (``spm_stack.overlap_vmem_bytes``) — set by
+    the sharded executor whenever the in-kernel transport may engage, so
+    a row block never outgrows VMEM once the comm slots move in."""
     br = min(K.pick_block_rows(n_tile, len(run_strides),
-                               dtype_bytes=dtype_bytes)
+                               dtype_bytes=dtype_bytes,
+                               overlap=overlap_bufs)
              for run_strides, n_tile in runs)
     return min(br, max(8, 1 << (n_rows - 1).bit_length()))
 

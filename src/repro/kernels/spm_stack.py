@@ -109,7 +109,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["spm_stack_kernel_call", "spm_stack_bwd_kernel_call",
-           "pick_block_rows", "vmem_bytes"]
+           "spm_overlap_kernel_call", "spm_overlap_bwd_kernel_call",
+           "pick_block_rows", "vmem_bytes", "overlap_vmem_bytes"]
 
 _F32 = jnp.float32
 
@@ -205,12 +206,40 @@ def vmem_bytes(block_rows: int, n_tile: int, n_stages: int,
     return act + io + cf
 
 
+def overlap_vmem_bytes(block_rows: int, n_tile: int, n_stages: int,
+                       dtype_bytes: int = 4) -> int:
+    """VMEM working set of the overlap (RDMA) kernels — the binding one is
+    again the backward: the ``vmem_bytes`` stage-remat working set PLUS the
+    per-block send/recv communication buffers.  The backward exchanges a
+    ``(2, block_rows, n_tile)`` package per row block — the (delta, z_out)
+    pair — double-buffered on BOTH ends (2 slots x send + recv), i.e.
+
+        comm = 2 slots * 2 tensors * 2 ends * block_rows * n_tile * io_bytes
+
+    in the activation I/O dtype (blocks travel the wire as sent), plus ONE
+    extra I/O tile: the overlap backward streams x through two BlockSpec
+    windows (the send-side remat reads block i while the walk-side remat
+    reads block i-1), one more activation window than the three
+    ``vmem_bytes`` models.  The forward ships only z_out (half the
+    package) and needs strictly less; budgeting the backward keeps
+    ``block_rows`` shared, exactly as ``vmem_bytes`` does for the
+    non-overlap pair."""
+    comm = 8 * block_rows * n_tile * dtype_bytes
+    x_walk = block_rows * n_tile * dtype_bytes   # second x window (bwd)
+    return vmem_bytes(block_rows, n_tile, n_stages, dtype_bytes) \
+        + comm + x_walk
+
+
 def pick_block_rows(n_tile: int, n_stages: int, dtype_bytes: int = 4,
-                    budget: int = 12 * 2**20) -> int:
-    """Largest power-of-two row-block (>=8) within the VMEM budget."""
+                    budget: int = 12 * 2**20, *,
+                    overlap: bool = False) -> int:
+    """Largest power-of-two row-block (>=8) within the VMEM budget;
+    ``overlap`` budgets against ``overlap_vmem_bytes`` (the RDMA kernels'
+    send/recv double buffers ride the same VMEM)."""
+    cost = overlap_vmem_bytes if overlap else vmem_bytes
     bb = 8
-    while bb < 1024 and vmem_bytes(bb * 2, n_tile, n_stages,
-                                   dtype_bytes) <= budget:
+    while bb < 1024 and cost(bb * 2, n_tile, n_stages,
+                             dtype_bytes) <= budget:
         bb *= 2
     return bb
 
@@ -341,6 +370,38 @@ def spm_stack_kernel_call(x: jax.Array, coeffs: jax.Array,
 # revisits; accumulating across a non-minor axis would read back a flushed
 # buffer on real TPU): init at batch step 0, accumulate after.
 
+def _stage_walk_bwd(zs, delta, cf_ref, strides: Tuple[int, ...]):
+    """Reverse walk over one run's stages from the collected stage-input
+    tiles ``zs``: the eq. 14 pair grads (reduced over the batch-tile rows)
+    and delta <- B^T delta (eqs. 12-13).  Returns ``(delta_0,
+    gcf (L, nt//2, 4))`` — shared by the plain and overlap backward
+    kernels."""
+    bb, nt = delta.shape
+    gcf_parts = []
+    for ell in range(len(strides) - 1, -1, -1):
+        s = strides[ell]
+        g = nt // (2 * s)
+        cf = cf_ref[ell].astype(_F32)
+        a = cf[:, 0].reshape(g, 1, s)
+        b = cf[:, 1].reshape(g, 1, s)
+        c = cf[:, 2].reshape(g, 1, s)
+        d = cf[:, 3].reshape(g, 1, s)
+        zr = zs[ell].reshape(bb, g, 2, s)
+        dr = delta.reshape(bb, g, 2, s)
+        x0 = zr[:, :, 0, :].reshape(bb, g, 1, s)
+        x1 = zr[:, :, 1, :].reshape(bb, g, 1, s)
+        d0 = dr[:, :, 0, :].reshape(bb, g, 1, s)
+        d1 = dr[:, :, 1, :].reshape(bb, g, 1, s)
+        ga = jnp.sum(d0 * x0, axis=0).reshape(g * s)
+        gb = jnp.sum(d0 * x1, axis=0).reshape(g * s)
+        gc = jnp.sum(d1 * x0, axis=0).reshape(g * s)
+        gd = jnp.sum(d1 * x1, axis=0).reshape(g * s)
+        gcf_parts.append(jnp.stack([ga, gb, gc, gd], axis=-1))
+        delta = jnp.concatenate([a * d0 + c * d1, b * d0 + d * d1],
+                                axis=2).reshape(bb, nt)
+    return delta, jnp.stack(gcf_parts[::-1], axis=0)
+
+
 def _bwd_kernel(*refs,
                 strides: Tuple[int, ...],
                 has_din: bool, has_dout: bool, has_bias: bool,
@@ -401,36 +462,13 @@ def _bwd_kernel(*refs,
     else:
         delta = gy
 
-    gcf_parts = []
-    for ell in range(L - 1, -1, -1):
-        s = strides[ell]
-        g = nt // (2 * s)
-        cf = cf_ref[ell].astype(_F32)
-        a = cf[:, 0].reshape(g, 1, s)
-        b = cf[:, 1].reshape(g, 1, s)
-        c = cf[:, 2].reshape(g, 1, s)
-        d = cf[:, 3].reshape(g, 1, s)
-        zr = zs[ell].reshape(bb, g, 2, s)
-        dr = delta.reshape(bb, g, 2, s)
-        x0 = zr[:, :, 0, :].reshape(bb, g, 1, s)
-        x1 = zr[:, :, 1, :].reshape(bb, g, 1, s)
-        d0 = dr[:, :, 0, :].reshape(bb, g, 1, s)
-        d1 = dr[:, :, 1, :].reshape(bb, g, 1, s)
-        # eq. 14 pair grads, reduced over the batch-tile rows
-        ga = jnp.sum(d0 * x0, axis=0).reshape(g * s)
-        gb = jnp.sum(d0 * x1, axis=0).reshape(g * s)
-        gc = jnp.sum(d1 * x0, axis=0).reshape(g * s)
-        gd = jnp.sum(d1 * x1, axis=0).reshape(g * s)
-        gcf_parts.append(jnp.stack([ga, gb, gc, gd], axis=-1))
-        # eqs. 12-13: delta <- B^T delta
-        delta = jnp.concatenate([a * d0 + c * d1, b * d0 + d * d1],
-                                axis=2).reshape(bb, nt)
+    delta, gcf = _stage_walk_bwd(zs, delta, cf_ref, strides)
 
     if has_din:
         _acc(gdin_ref, jnp.sum(delta * x_raw, axis=0).reshape(1, nt))
         delta = delta * din_ref[...].astype(_F32)
     gx_ref[...] = delta.astype(gx_ref.dtype)
-    _acc(gcf_ref, jnp.stack(gcf_parts[::-1], axis=0))  # (L, nt//2, 4)
+    _acc(gcf_ref, gcf)                                 # (L, nt//2, 4)
 
 
 @functools.partial(jax.jit, static_argnames=("strides", "block_rows",
@@ -591,3 +629,407 @@ def spm_stack_bwd_kernel_call(x: jax.Array, coeffs: jax.Array,
     gx, gcf = out[0], out[1]
     vec_grads = tuple(v.reshape(n) for v in out[2:])
     return (gx, gcf) + vec_grads
+
+
+# ---------------------------------------------------------------------------
+# overlap (RDMA) kernels: fused {local run -> cross exchange -> 2x2 mix}
+# ---------------------------------------------------------------------------
+#
+# The distributed executor's cross stages were one full-slab ppermute each:
+# the whole (rows, n_local) slab had to finish its local kernel run before
+# a single byte moved, so the ICI time was fully exposed.  These kernels
+# restructure one {shard-local run -> cross stage} pair into a row-block
+# pipeline INSIDE one pallas_call: the grid walks row blocks, block i's
+# partner-half remote copy (pltpu.make_async_remote_copy over the mesh)
+# starts the moment its local mix finishes, and the cross 2x2 mix is the
+# receiving epilogue of iteration i+1 — so block i's exchange flies while
+# block i+1 computes, double-buffered through two VMEM send/recv slots.
+#
+# Roles are resolved OUTSIDE the kernel: the shard body passes
+# (mix_a, mix_b) with y = mix_a * z + mix_b * z_partner — (a, b) on the
+# low partner, (d, c) on the high — so the kernel is role-free and the
+# same program runs SPMD on every shard.  The partner's mesh coordinates
+# arrive via scalar prefetch (they depend on jax.lax.axis_index, traced
+# inside shard_map).
+#
+# Flow control (per slot s = i % 2):
+#   * send side: before reusing slot s at iteration i >= 2, wait for our
+#     own send from s to drain (wait_send) AND for one CREDIT — the
+#     partner signals our capacity semaphore after consuming the block we
+#     previously landed in ITS recv slot s, so a fast sender can never
+#     overwrite an unconsumed remote buffer;
+#   * recv side: iteration i consumes block i-1 (wait_recv on slot
+#     (i-1) % 2), applies the mix epilogue, stores, and signals the credit.
+#   * epilogue (iteration n_blocks): drain the last two sends and the two
+#     unconsumed credits so every semaphore ends at zero.
+#
+# The BACKWARD kernel replays the same pipeline in reverse roles: the
+# partner exchange is its own transpose, so each block SENDS the
+# (delta, z_out) package — z_out rematerialized in VMEM from the local
+# run's saved input (the forward never wrote it to HBM) — and the
+# receiving iteration applies the transpose mix
+# delta_mid = u * delta + v * delta_partner as its PROLOGUE, accumulates
+# the role-owned cross-coefficient sums (s_own = sum delta*z_out,
+# s_swp = sum delta*z_partner), then walks the local stages in reverse
+# (shared _stage_walk_bwd).  The local forward runs twice per block (once
+# for the send-side remat, once collecting stage inputs for the walk) —
+# deliberate: the recompute is exactly the VPU work the in-flight
+# exchange hides under, and it keeps the VMEM working set at one block.
+#
+# There is NO interpret realization of make_async_remote_copy, so these
+# kernels are TPU-compile-only (core/eligibility.resolve_rdma); the
+# per-block ppermute transport in parallel/spm_shard.py runs the identical
+# schedule everywhere else and is what the parity tests exercise.
+
+def _partner_device_id(partner_ref, mesh_ndim: int):
+    """The partner's mesh-coordinate ``device_id`` tuple, read from the
+    scalar-prefetch ref — the ONE encoding shared by the remote-copy
+    descriptors and the credit-semaphore signals."""
+    return tuple(partner_ref[a] for a in range(mesh_ndim))
+
+
+def _rdma_descriptor(send_buf, recv_buf, send_sem, recv_sem, slot,
+                     partner_ref, mesh_ndim: int):
+    """The slot's remote-copy descriptor (reconstructed each iteration —
+    start/wait are semaphore ops on the same (src, dst, sems, size)
+    tuple)."""
+    return pltpu.make_async_remote_copy(
+        send_buf.at[slot], recv_buf.at[slot],
+        send_sem.at[slot], recv_sem.at[slot],
+        device_id=_partner_device_id(partner_ref, mesh_ndim),
+        device_id_type=pltpu.DeviceIdType.MESH)
+
+
+def _slot_reuse_guard(rdma, cap_sem, slot, i):
+    """Flow control before reusing slot ``i % 2`` at iteration ``i >= 2``:
+    our own send from this slot must have drained AND the partner must
+    have consumed the block we previously landed in ITS recv slot (one
+    credit).  Shared by the forward and backward overlap kernels — the
+    protocol must never desynchronize between them."""
+    @pl.when(i >= 2)
+    def _():
+        rdma(slot).wait_send()
+        pltpu.semaphore_wait(cap_sem, 1)
+
+
+def _drain_epilogue(rdma, cap_sem, n_blocks: int):
+    """Final-iteration drain: the last two sends were never waited on and
+    the partner's last (up to two) credits never consumed — retire them
+    so every semaphore ends the kernel at zero.  Shared by both overlap
+    kernels."""
+    rdma(jax.lax.rem(n_blocks - 1, 2)).wait_send()
+    if n_blocks >= 2:
+        rdma(jax.lax.rem(n_blocks - 2, 2)).wait_send()
+    pltpu.semaphore_wait(cap_sem, min(2, n_blocks))
+
+
+def _overlap_kernel(partner_ref, base_ref, *refs,
+                    strides: Tuple[int, ...], n_blocks: int,
+                    mesh_ndim: int, has_din: bool,
+                    in_width: Optional[int]):
+    refs = list(refs)
+    x_ref, cf_ref, ma_ref, mb_ref = (refs.pop(0), refs.pop(0),
+                                     refs.pop(0), refs.pop(0))
+    din_ref = refs.pop(0) if has_din else None
+    o_ref, send_buf, recv_buf, send_sem, recv_sem, cap_sem = refs
+
+    i = pl.program_id(0)
+
+    def _rdma(slot):
+        return _rdma_descriptor(send_buf, recv_buf, send_sem, recv_sem,
+                                slot, partner_ref, mesh_ndim)
+
+    @pl.when(i < n_blocks)
+    def _compute_send():
+        slot = jax.lax.rem(i, 2)
+        _slot_reuse_guard(_rdma, cap_sem, slot, i)
+
+        z = x_ref[...].astype(_F32)
+        if in_width is not None:
+            z = _mask_cols(z, base_ref[0], in_width)
+        if has_din:
+            z = z * din_ref[...].astype(_F32)
+        z = _apply_stages_fwd(z, cf_ref, strides)
+        send_buf[slot] = z.astype(send_buf.dtype)
+        _rdma(slot).start()
+
+    @pl.when(i > 0)
+    def _recv_mix():
+        slot = jax.lax.rem(i - 1, 2)
+        _rdma(slot).wait_recv()
+        zm = send_buf[slot].astype(_F32)
+        zp = recv_buf[slot].astype(_F32)
+        y = ma_ref[...].astype(_F32) * zm + mb_ref[...].astype(_F32) * zp
+        o_ref[...] = y.astype(o_ref.dtype)
+        pltpu.semaphore_signal(cap_sem, inc=1,
+                               device_id=_partner_device_id(partner_ref,
+                                                            mesh_ndim),
+                               device_id_type=pltpu.DeviceIdType.MESH)
+
+    @pl.when(i == n_blocks)
+    def _drain():
+        _drain_epilogue(_rdma, cap_sem, n_blocks)
+
+
+@functools.partial(jax.jit, static_argnames=("strides", "block_rows",
+                                             "n_tile", "in_width",
+                                             "collective_id", "interpret"))
+def spm_overlap_kernel_call(x: jax.Array, coeffs: jax.Array,
+                            mix_a: jax.Array, mix_b: jax.Array,
+                            partner: jax.Array,
+                            d_in: Optional[jax.Array] = None,
+                            col_base: Optional[jax.Array] = None, *,
+                            strides: Tuple[int, ...],
+                            block_rows: int,
+                            n_tile: int,
+                            in_width: Optional[int] = None,
+                            collective_id: int = 0,
+                            interpret: bool = False) -> jax.Array:
+    """Fused {local run -> cross exchange -> mix epilogue} forward.
+
+    x: (B, n_tile) shard slab — or, windowed (``col_base`` + ``in_width``,
+    both GLOBAL as in ``spm_stack_kernel_call``), the feature-complete
+    (B, in_width) operand.  coeffs: (L, n_tile//2, 4) local-run stages;
+    mix_a / mix_b: (n_tile,) role-resolved cross coefficients
+    (y = mix_a * z + mix_b * z_partner); partner: (mesh_ndim,) int32
+    logical mesh coordinates of the XOR partner (scalar prefetch);
+    optional d_in: (n_tile,) this shard's diagonal slice, folded before
+    the first stage.  Pipelines ``B // block_rows`` row blocks with
+    double-buffered VMEM send/recv slots (budgeted by
+    ``overlap_vmem_bytes``); returns the mixed (B, n_tile) slab.
+
+    TPU-compile-only: ``make_async_remote_copy`` has no interpret
+    realization (``core/eligibility.resolve_rdma`` gates engagement).
+    """
+    assert not interpret, "RDMA overlap kernel has no interpret mode"
+    B = x.shape[0]
+    L = coeffs.shape[0]
+    assert 2 * coeffs.shape[1] == n_tile
+    assert B % block_rows == 0
+    nb = B // block_rows
+    mesh_ndim = partner.shape[0]
+    io_dt = x.dtype
+    base = (col_base.astype(jnp.int32) if col_base is not None
+            else jnp.zeros((1,), jnp.int32))
+
+    nbm1 = nb - 1
+    x_spec = pl.BlockSpec(
+        (block_rows, n_tile),
+        lambda i, p, b: (jnp.minimum(i, nbm1),
+                         b[0] if in_width is not None else 0))
+    cf_spec = pl.BlockSpec((L, n_tile // 2, 4), lambda i, p, b: (0, 0, 0))
+    vec_spec = pl.BlockSpec((1, n_tile), lambda i, p, b: (0, 0))
+    o_spec = pl.BlockSpec((block_rows, n_tile),
+                          lambda i, p, b: (jnp.maximum(i - 1, 0), 0))
+
+    operands = [x, coeffs, mix_a.reshape(1, n_tile),
+                mix_b.reshape(1, n_tile)]
+    in_specs = [x_spec, cf_spec, vec_spec, vec_spec]
+    if d_in is not None:
+        operands.append(d_in.reshape(1, n_tile))
+        in_specs.append(vec_spec)
+
+    kernel = functools.partial(_overlap_kernel, strides=strides,
+                               n_blocks=nb, mesh_ndim=mesh_ndim,
+                               has_din=d_in is not None, in_width=in_width)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2, grid=(nb + 1,),
+            in_specs=in_specs, out_specs=o_spec,
+            scratch_shapes=[
+                pltpu.VMEM((2, block_rows, n_tile), io_dt),   # send slots
+                pltpu.VMEM((2, block_rows, n_tile), io_dt),   # recv slots
+                pltpu.SemaphoreType.DMA((2,)),
+                pltpu.SemaphoreType.DMA((2,)),
+                pltpu.SemaphoreType.REGULAR,                  # credits
+            ]),
+        out_shape=jax.ShapeDtypeStruct((B, n_tile), io_dt),
+        compiler_params=pltpu.TPUCompilerParams(
+            collective_id=collective_id),
+    )(partner.astype(jnp.int32), base, *operands)
+
+
+def _overlap_bwd_kernel(partner_ref, base_ref, *refs,
+                        strides: Tuple[int, ...], n_blocks: int,
+                        mesh_ndim: int, has_din: bool,
+                        in_width: Optional[int]):
+    refs = list(refs)
+    x_ref, xw_ref, cf_ref, gy_ref = (refs.pop(0), refs.pop(0),
+                                     refs.pop(0), refs.pop(0))
+    u_ref, v_ref = refs.pop(0), refs.pop(0)
+    din_ref = refs.pop(0) if has_din else None
+    gx_ref, gcf_ref, gso_ref, gsw_ref = (refs.pop(0), refs.pop(0),
+                                         refs.pop(0), refs.pop(0))
+    gdin_ref = refs.pop(0) if has_din else None
+    send_buf, recv_buf, send_sem, recv_sem, cap_sem = refs
+
+    i = pl.program_id(0)
+    bb, nt = gy_ref.shape
+
+    def _rdma(slot):
+        return _rdma_descriptor(send_buf, recv_buf, send_sem, recv_sem,
+                                slot, partner_ref, mesh_ndim)
+
+    def _masked(xr):
+        z = xr[...].astype(_F32)
+        if in_width is not None:
+            z = _mask_cols(z, base_ref[0], in_width)
+        return z
+
+    @pl.when(i < n_blocks)
+    def _remat_send():
+        slot = jax.lax.rem(i, 2)
+        _slot_reuse_guard(_rdma, cap_sem, slot, i)
+
+        z = _masked(x_ref)
+        if has_din:
+            z = z * din_ref[...].astype(_F32)
+        z_out = _apply_stages_fwd(z, cf_ref, strides)
+        send_buf[slot, 0] = gy_ref[...].astype(send_buf.dtype)
+        send_buf[slot, 1] = z_out.astype(send_buf.dtype)
+        _rdma(slot).start()
+
+    @pl.when(i > 0)
+    def _consume():
+        slot = jax.lax.rem(i - 1, 2)
+        _rdma(slot).wait_recv()
+        delta = send_buf[slot, 0].astype(_F32)     # own block i-1 cotangent
+        z_out = send_buf[slot, 1].astype(_F32)     # own remat z_out
+        delta_p = recv_buf[slot, 0].astype(_F32)
+        zp = recv_buf[slot, 1].astype(_F32)
+
+        def _acc(ref, tile):
+            @pl.when(i == 1)
+            def _init():
+                ref[...] = tile
+
+            @pl.when(i > 1)
+            def _add():
+                ref[...] += tile
+
+        # role-owned cross-coefficient sums (slot placement by the caller)
+        _acc(gso_ref, jnp.sum(delta * z_out, axis=0).reshape(1, nt))
+        _acc(gsw_ref, jnp.sum(delta * zp, axis=0).reshape(1, nt))
+        # transpose-mix prologue, then the local stage walk (collect remat)
+        dmid = (u_ref[...].astype(_F32) * delta
+                + v_ref[...].astype(_F32) * delta_p)
+        x_raw = _masked(xw_ref)
+        z0 = x_raw * din_ref[...].astype(_F32) if has_din else x_raw
+        _, zs = _apply_stages_fwd(z0, cf_ref, strides, collect=True)
+        delta0, gcf = _stage_walk_bwd(zs, dmid, cf_ref, strides)
+        _acc(gcf_ref, gcf)
+        if has_din:
+            _acc(gdin_ref, jnp.sum(delta0 * x_raw, axis=0).reshape(1, nt))
+            delta0 = delta0 * din_ref[...].astype(_F32)
+        gx_ref[...] = delta0.astype(gx_ref.dtype)
+        pltpu.semaphore_signal(cap_sem, inc=1,
+                               device_id=_partner_device_id(partner_ref,
+                                                            mesh_ndim),
+                               device_id_type=pltpu.DeviceIdType.MESH)
+
+    @pl.when(i == n_blocks)
+    def _drain():
+        _drain_epilogue(_rdma, cap_sem, n_blocks)
+
+
+@functools.partial(jax.jit, static_argnames=("strides", "block_rows",
+                                             "n_tile", "in_width",
+                                             "collective_id", "interpret"))
+def spm_overlap_bwd_kernel_call(x: jax.Array, coeffs: jax.Array,
+                                gy: jax.Array,
+                                u: jax.Array, v: jax.Array,
+                                partner: jax.Array,
+                                d_in: Optional[jax.Array] = None,
+                                col_base: Optional[jax.Array] = None, *,
+                                strides: Tuple[int, ...],
+                                block_rows: int,
+                                n_tile: int,
+                                in_width: Optional[int] = None,
+                                collective_id: int = 1,
+                                interpret: bool = False):
+    """Fused backward of one {local run -> cross stage} pair from the
+    LOCAL step's saved input.
+
+    x: the local run's input — the (B, n_tile) slab, or the windowed
+    feature-complete (B, in_width) operand (``col_base``); gy: (B, n_tile)
+    post-cross cotangent slab; u / v: (n_tile,) role-resolved transpose
+    mix (delta_mid = u * delta + v * delta_partner — (a, c) low,
+    (d, b) high); partner: (mesh_ndim,) int32 mesh coordinates.  Each row
+    block SENDS its (delta, remat z_out) package — the partner exchange
+    is its own transpose — and the receiving iteration applies the
+    transpose mix, accumulates the role-owned cross sums, and walks the
+    local stages in reverse.
+
+    Returns ``(g_x (B, n_tile), g_coeffs (L, n_tile//2, 4) f32,
+    s_own (n_tile,), s_swp (n_tile,)[, g_din (n_tile,)])`` with
+    s_own = sum_B delta * z_out and s_swp = sum_B delta * z_partner — the
+    caller places them into the (a, b) / (c, d) slots by role.  TPU-only,
+    like the forward."""
+    assert not interpret, "RDMA overlap kernel has no interpret mode"
+    B = gy.shape[0]
+    L = coeffs.shape[0]
+    assert 2 * coeffs.shape[1] == n_tile
+    assert B % block_rows == 0
+    nb = B // block_rows
+    mesh_ndim = partner.shape[0]
+    io_dt = gy.dtype
+    base = (col_base.astype(jnp.int32) if col_base is not None
+            else jnp.zeros((1,), jnp.int32))
+
+    nbm1 = nb - 1
+    x_col = (lambda b: b[0]) if in_width is not None else (lambda b: 0)
+    x_send_spec = pl.BlockSpec(
+        (block_rows, n_tile),
+        lambda i, p, b: (jnp.minimum(i, nbm1), x_col(b)))
+    x_walk_spec = pl.BlockSpec(
+        (block_rows, n_tile),
+        lambda i, p, b: (jnp.maximum(i - 1, 0), x_col(b)))
+    gy_spec = pl.BlockSpec((block_rows, n_tile),
+                           lambda i, p, b: (jnp.minimum(i, nbm1), 0))
+    cf_spec = pl.BlockSpec((L, n_tile // 2, 4), lambda i, p, b: (0, 0, 0))
+    vec_spec = pl.BlockSpec((1, n_tile), lambda i, p, b: (0, 0))
+    gx_spec = pl.BlockSpec((block_rows, n_tile),
+                           lambda i, p, b: (jnp.maximum(i - 1, 0), 0))
+
+    operands = [x, x, coeffs, gy, u.reshape(1, n_tile),
+                v.reshape(1, n_tile)]
+    in_specs = [x_send_spec, x_walk_spec, cf_spec, gy_spec, vec_spec,
+                vec_spec]
+    if d_in is not None:
+        operands.append(d_in.reshape(1, n_tile))
+        in_specs.append(vec_spec)
+
+    out_specs = [gx_spec, cf_spec, vec_spec, vec_spec]
+    out_shape = [jax.ShapeDtypeStruct((B, n_tile), io_dt),
+                 jax.ShapeDtypeStruct((L, n_tile // 2, 4), jnp.float32),
+                 jax.ShapeDtypeStruct((1, n_tile), jnp.float32),
+                 jax.ShapeDtypeStruct((1, n_tile), jnp.float32)]
+    if d_in is not None:
+        out_specs.append(vec_spec)
+        out_shape.append(jax.ShapeDtypeStruct((1, n_tile), jnp.float32))
+
+    kernel = functools.partial(_overlap_bwd_kernel, strides=strides,
+                               n_blocks=nb, mesh_ndim=mesh_ndim,
+                               has_din=d_in is not None, in_width=in_width)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2, grid=(nb + 1,),
+            in_specs=in_specs, out_specs=out_specs,
+            scratch_shapes=[
+                pltpu.VMEM((2, 2, block_rows, n_tile), io_dt),  # send slots
+                pltpu.VMEM((2, 2, block_rows, n_tile), io_dt),  # recv slots
+                pltpu.SemaphoreType.DMA((2,)),
+                pltpu.SemaphoreType.DMA((2,)),
+                pltpu.SemaphoreType.REGULAR,                    # credits
+            ]),
+        out_shape=out_shape,
+        compiler_params=pltpu.TPUCompilerParams(
+            collective_id=collective_id),
+    )(partner.astype(jnp.int32), base, *operands)
+    gx, gcf, s_own, s_swp = out[0], out[1], out[2], out[3]
+    res = (gx, gcf, s_own.reshape(n_tile), s_swp.reshape(n_tile))
+    if d_in is not None:
+        res = res + (out[4].reshape(n_tile),)
+    return res

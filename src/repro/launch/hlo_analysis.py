@@ -79,7 +79,9 @@ def sharded_stage_traffic(n_local: int, batch_rows: int, steps,
                           use_bias: bool = False,
                           in_width: Optional[int] = None,
                           out_width: Optional[int] = None,
-                          fold_boundaries: bool = True) -> Dict:
+                          fold_boundaries: bool = True,
+                          overlap: bool = False,
+                          n_row_blocks: Optional[int] = None) -> Dict:
     """Modeled per-chip traffic of a feature-sharded SPM schedule.
 
     ``steps`` is ``parallel.spm_shard.plan_steps(...)`` output: per
@@ -109,18 +111,49 @@ def sharded_stage_traffic(n_local: int, batch_rows: int, steps,
     ``boundary_bytes_per_chip`` and included in ``hbm_bytes_per_chip`` /
     ``memory_s``.
 
+    Exposed vs hidden communication: with ``overlap=False`` (the
+    step-serial executor) every cross stage's exchange is fully exposed —
+    the whole slab must finish its local kernel run before a byte moves,
+    and the 2x2 mix waits on the whole-slab permute.  With
+    ``overlap=True`` the executor pipelines ``n_row_blocks`` row blocks
+    (default: the executor's ``core.eligibility.OVERLAP_ROW_BLOCKS``)
+    through the schedule, and a stage's per-block exchange
+    hides under (a) OTHER cross stages' exchanges — each XOR distance
+    ``k`` pairs over a distinct ICI link class, so stage ``k=2``'s block
+    ``i`` flies while stage ``k=1``'s block ``i+1`` flies — and (b) the
+    adjacent local compute (HBM-bound kernel time converted to
+    ICI-equivalent bytes).  The exposed remainder is the busiest link
+    class (less what compute hides, floored at its one-block pipeline
+    fill) plus the other links' fill terms:
+
+        exposed = max(bottleneck - compute_hide, bottleneck / nb)
+                  + (total - bottleneck) / nb
+
+    clamped to ``[0, total]``; ``hidden = total - exposed``.  The last
+    block of each stage has nothing behind it to hide under, which is the
+    ``(nb-1)/nb`` factor on the compute-hide term.
+
     Returns per-stage rows plus totals and roofline seconds on the
     §Roofline HW constants (per-chip HBM vs ICI), so kernel_bench / dryrun
     can place the collective term next to the HBM term.
     """
     hw = hw or HW
+    if overlap and n_row_blocks is None:
+        # the executor's pipeline depth — shared constant, so the model
+        # can never drift from the executed schedule.  (Tiny slabs that
+        # degenerate to fewer blocks should pass the plan's actual count.)
+        from repro.core.eligibility import OVERLAP_ROW_BLOCKS
+        n_row_blocks = OVERLAP_ROW_BLOCKS
+    nb = n_row_blocks if overlap else 1
     slab = batch_rows * n_local * dtype_bytes
     stages = []
+    link_bytes: Dict[int, int] = {}
     coll_total = hbm_total = 0
     for step in steps:
         if step[0] == "cross":
             stages.append({"kind": "cross", "stage": step[1], "k": step[2],
                            "permute_bytes": slab, "hbm_bytes": 2 * slab})
+            link_bytes[step[2]] = link_bytes.get(step[2], 0) + slab
             coll_total += slab
             hbm_total += 2 * slab
         else:
@@ -128,6 +161,28 @@ def sharded_stage_traffic(n_local: int, batch_rows: int, steps,
                            "n_stages": len(step[2]), "permute_bytes": 0,
                            "hbm_bytes": 2 * slab})
             hbm_total += 2 * slab
+    if nb <= 1 or not link_bytes:
+        exposed = coll_total
+    else:
+        # hbm_total here is still the bare stage traffic (the boundary
+        # terms are added below, after the exposure split)
+        bottleneck = max(link_bytes.values())
+        compute_hide = (hbm_total / hw["hbm_bw"]) * hw["ici_bw"] \
+            * (nb - 1) / nb
+        exposed = (max(bottleneck - compute_hide, bottleneck / nb)
+                   + (coll_total - bottleneck) / nb)
+        exposed = min(max(exposed, 0.0), coll_total)
+    exposed = int(round(exposed))
+    # pro-rate per stage; the last cross row absorbs the rounding
+    # remainder so the stage rows always sum to the per-chip total
+    crosses = [row for row in stages if row["kind"] == "cross"]
+    shared = 0
+    for row in crosses:
+        row["exposed_bytes"] = int(round(
+            exposed * row["permute_bytes"] / coll_total))
+        shared += row["exposed_bytes"]
+    if crosses:
+        crosses[-1]["exposed_bytes"] += exposed - shared
     boundary = 0
     first_local = bool(steps) and steps[0][0] == "local"
     last_local = bool(steps) and steps[-1][0] == "local"
@@ -156,10 +211,15 @@ def sharded_stage_traffic(n_local: int, batch_rows: int, steps,
                 * dtype_bytes                       # slice: read n, write out
     hbm_total += boundary
     return {"stages": stages,
+            "overlap": bool(overlap),
+            "n_row_blocks": nb,
             "permute_bytes_per_chip": coll_total,
+            "exposed_permute_bytes_per_chip": exposed,
+            "hidden_permute_bytes_per_chip": coll_total - exposed,
             "boundary_bytes_per_chip": boundary,
             "hbm_bytes_per_chip": hbm_total,
             "collective_s": coll_total / hw["ici_bw"],
+            "exposed_collective_s": exposed / hw["ici_bw"],
             "memory_s": hbm_total / hw["hbm_bw"]}
 
 

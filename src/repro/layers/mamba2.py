@@ -40,6 +40,7 @@ class Mamba2Config:
     spm_use_kernel: Optional[bool] = None
     spm_schedule: str = "butterfly"
     spm_n_shards: int = 1
+    spm_overlap: Optional[bool] = None
     param_dtype: Any = jnp.float32
 
     @property
@@ -60,7 +61,8 @@ class Mamba2Config:
             d_in=d_in, d_out=d_out, impl=self.linear_impl, use_bias=False,
             n_stages=self.spm_stages, backward=self.spm_backward,
             use_kernel=self.spm_use_kernel, schedule=self.spm_schedule,
-            n_shards=self.spm_n_shards, param_dtype=self.param_dtype)
+            n_shards=self.spm_n_shards, overlap=self.spm_overlap,
+            param_dtype=self.param_dtype)
 
     @property
     def in_proj(self) -> LinearConfig:

@@ -41,6 +41,7 @@ class MoEConfig:
     spm_use_kernel: Optional[bool] = None
     spm_schedule: str = "butterfly"
     spm_n_shards: int = 1
+    spm_overlap: Optional[bool] = None
     param_dtype: Any = jnp.float32
 
     @property
@@ -52,6 +53,7 @@ class MoEConfig:
                          spm_use_kernel=self.spm_use_kernel,
                          spm_schedule=self.spm_schedule,
                          spm_n_shards=self.spm_n_shards,
+                         spm_overlap=self.spm_overlap,
                          param_dtype=self.param_dtype)
 
     @property
@@ -63,6 +65,7 @@ class MoEConfig:
                          spm_use_kernel=self.spm_use_kernel,
                          spm_schedule=self.spm_schedule,
                          spm_n_shards=self.spm_n_shards,
+                         spm_overlap=self.spm_overlap,
                          param_dtype=self.param_dtype)
 
     def capacity(self, group_tokens: int) -> int:

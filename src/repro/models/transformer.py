@@ -87,6 +87,10 @@ class ModelConfig:
     spm_n_shards: int = 1                  # feature axis distributable over
                                            # the "model" mesh axis via
                                            # parallel/spm_shard.py
+    spm_overlap: Optional[bool] = None     # overlap-scheduled sharded
+                                           # executor (row-block pipelined
+                                           # exchanges): None=auto/on-TPU,
+                                           # True=force, False=off
     # io
     input_kind: str = "tokens"       # "tokens" | "embeddings"
     tie_embeddings: bool = True
@@ -108,6 +112,7 @@ class ModelConfig:
             spm_backward=self.spm_backward,
             spm_use_kernel=self.spm_use_kernel,
             spm_schedule=self.spm_schedule, spm_n_shards=self.spm_n_shards,
+            spm_overlap=self.spm_overlap,
             q_chunk=self.q_chunk,
             k_chunk=self.k_chunk, param_dtype=self.param_dtype)
 
@@ -118,6 +123,7 @@ class ModelConfig:
             spm_backward=self.spm_backward,
             spm_use_kernel=self.spm_use_kernel,
             spm_schedule=self.spm_schedule, spm_n_shards=self.spm_n_shards,
+            spm_overlap=self.spm_overlap,
             param_dtype=self.param_dtype)
 
     def moe_cfg(self) -> MoEConfig:
@@ -129,6 +135,7 @@ class ModelConfig:
             spm_stages=self.spm_stages, spm_backward=self.spm_backward,
             spm_use_kernel=self.spm_use_kernel,
             spm_schedule=self.spm_schedule, spm_n_shards=self.spm_n_shards,
+            spm_overlap=self.spm_overlap,
             param_dtype=self.param_dtype)
 
     def mamba_cfg(self) -> Mamba2Config:
@@ -139,6 +146,7 @@ class ModelConfig:
             spm_backward=self.spm_backward,
             spm_use_kernel=self.spm_use_kernel,
             spm_schedule=self.spm_schedule, spm_n_shards=self.spm_n_shards,
+            spm_overlap=self.spm_overlap,
             param_dtype=self.param_dtype)
 
     def shared_attn_cfg(self) -> AttentionConfig:
@@ -151,6 +159,7 @@ class ModelConfig:
             spm_backward=self.spm_backward,
             spm_use_kernel=self.spm_use_kernel,
             spm_schedule=self.spm_schedule, spm_n_shards=self.spm_n_shards,
+            spm_overlap=self.spm_overlap,
             param_dtype=self.param_dtype)
 
     def embed_cfg(self) -> EmbeddingConfig:

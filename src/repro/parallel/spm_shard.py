@@ -75,6 +75,24 @@ backward's two bounded exceptions are the O(nL) replicated
 coefficient-grad assembly and, for rectangular operators only, the
 jit-boundary replication of the indivisible-width g_x output — inherent
 to any transport design).
+
+**Overlap schedule** (this PR): with ``SPMConfig.overlap`` resolved on
+(``core/eligibility.resolve_overlap`` — auto on TPU, forceable
+everywhere), the walk above restructures into a row-block pipeline: the
+slab splits into ``ShardPlan.row_blocks`` and every step processes
+per block, so block i's partner exchange flies while block i+1 computes.
+On compiled TPU backends each {local run -> cross stage} pair fuses into
+ONE pallas_call (``kernels/spm_stack.spm_overlap_kernel_call`` — the
+remote copy is an in-kernel ``pltpu.make_async_remote_copy`` started per
+row block, the 2x2 mix its receiving epilogue, and the backward remats
+the sent activation in VMEM; those cross steps save placeholder
+residuals, ``ShardPlan.rdma_crosses``).  Everywhere else the SAME
+schedule transports blocks via per-block ``jax.lax.ppermute`` — the
+interpret-mode proof path — and the custom_vjp replays the overlapped
+walk in reverse using the same exchange-is-its-own-transpose property.
+``launch/hlo_analysis.sharded_stage_traffic(..., overlap=True)`` models
+the exposed-vs-hidden permute-byte split; docs/sharding.md "The overlap
+executor" is the design reference.
 """
 
 from __future__ import annotations
@@ -90,84 +108,25 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import spm as spm_mod
-from repro.core.pairings import Schedule, Stage
+from repro.core.eligibility import (OVERLAP_ROW_BLOCKS, overlap_segments,
+                                    plan_steps, resolve_overlap,
+                                    resolve_rdma, resolve_shard_kernel,
+                                    sharded_eligible)
+from repro.core.pairings import Stage
 from repro.kernels import spm_stack as K
 from repro.kernels.ops import (default_interpret, pick_block_rows_for_plan,
                                plan_runs)
 
 __all__ = ["spm_apply_sharded", "sharded_eligible", "plan_steps",
-           "cross_partner_perm"]
+           "cross_partner_perm", "pick_row_blocks"]
 
 AXIS = "model"
 _F32 = jnp.float32
 
-
-def _is_pow2(k: int) -> bool:
-    return k > 0 and (k & (k - 1)) == 0
-
-
-# ---------------------------------------------------------------------------
-# schedule planning
-# ---------------------------------------------------------------------------
-
-@functools.lru_cache(maxsize=None)
-def plan_steps(n: int, strides: Tuple[int, ...],
-               n_shards: int) -> Tuple[tuple, ...]:
-    """Split a stride schedule into shard-executable steps.
-
-    Returns a tuple of ``("local", stage_offset, run_strides)`` /
-    ``("cross", stage_index, k)`` entries covering the schedule in order;
-    consecutive local stages are grouped into one run (one fused kernel
-    call).  Raises ValueError when any stage is neither shard-local nor an
-    XOR partner exchange — callers treat that as "not sharded-eligible".
-    """
-    if n % n_shards:
-        raise ValueError(f"n={n} not divisible by n_shards={n_shards}")
-    n_local = n // n_shards
-    steps = []
-    run: list = []
-    run_start = 0
-    for ell, s in enumerate(strides):
-        if n % (2 * s):
-            raise ValueError(f"stride {s} invalid for n={n}")
-        if s < n_local and n_local % (2 * s) == 0:
-            if not run:
-                run_start = ell
-            run.append(s)
-            continue
-        if run:
-            steps.append(("local", run_start, tuple(run)))
-            run = []
-        k, rem = divmod(s, n_local)
-        if rem or not _is_pow2(k) or n_shards % (2 * k):
-            raise ValueError(
-                f"stride {s} is neither local to n_local={n_local} nor a "
-                f"power-of-two multiple partner exchange over "
-                f"{n_shards} shards")
-        steps.append(("cross", ell, k))
-    if run:
-        steps.append(("local", run_start, tuple(run)))
-    return tuple(steps)
-
-
-def sharded_eligible(cfg, sched: Optional[Schedule] = None) -> bool:
-    """Whether the distributed executor can express this operator exactly:
-    even n divisible by n_shards, all-structured stages each either
-    shard-local or an XOR partner exchange, and a backward mode whose
-    residual contract the custom_vjp honors (custom_inverse stores outputs;
-    this path stores step inputs)."""
-    if cfg.n_shards <= 1 or cfg.odd or cfg.n % cfg.n_shards:
-        return False
-    if cfg.backward == "custom_inverse":
-        return False
-    sched = cfg.pairing if sched is None else sched
-    if not sched.all_structured:
-        return False
-    try:
-        plan_steps(cfg.n, sched.strides(), cfg.n_shards)
-    except ValueError:
-        return False
-    return True
+# plan_steps / sharded_eligible / OVERLAP_ROW_BLOCKS moved to
+# core/eligibility.py (the single
+# fallback matrix shared with the single-device kernel path); re-exported
+# here unchanged for back-compat.
 
 
 def cross_partner_perm(n_shards: int, k: int) -> Tuple[Tuple[int, int], ...]:
@@ -218,6 +177,26 @@ class ShardPlan:
     dp: Tuple[str, ...] = ()     # pure-DP mesh axes: rows shard over these
     in_width: Optional[int] = None
     out_width: Optional[int] = None
+    # -- overlap schedule (this PR) ----------------------------------------
+    # row_blocks: static per-shard row-block sizes of the pipelined walk
+    # (empty = step-serial full-slab schedule).  rdma_crosses: indices of
+    # cross steps executed as the epilogue of a fused RDMA pair kernel
+    # (TPU only — see core/eligibility.resolve_rdma); their saved stage
+    # input is a placeholder, rematerialized in VMEM by the backward
+    # kernel.
+    row_blocks: Tuple[int, ...] = ()
+    rdma_crosses: Tuple[int, ...] = ()
+
+    @property
+    def overlap(self) -> bool:
+        """Whether the row-block pipelined (overlap) walk is engaged."""
+        return bool(self.row_blocks)
+
+    @property
+    def segments(self) -> Tuple[tuple, ...]:
+        """The overlap segmentation of ``steps`` (``("pair", local,
+        cross)`` / ``("one", step)`` — core/eligibility.overlap_segments)."""
+        return overlap_segments(self.steps)
 
     # -- boundary-step structure -------------------------------------------
     @property
@@ -297,10 +276,17 @@ class ShardPlan:
             else self.act_spec()
 
     def res_specs(self):
+        """Shard_map specs of the residual tuple ``(x_res, step_ins,
+        z_last)``: placeholders ride replicated ``P(None)``, slabs the act
+        spec, the windowed x residual the replicated rep spec.  An RDMA
+        pair's cross step saves a placeholder — its stage input (the local
+        run's output) never reaches HBM and the backward kernel remats it
+        from the local run's own input."""
         act = self.act_spec()
         x_res = (self.rep_spec() if self.win_in
                  else (act if self.saves_x_res else P(None)))
-        step_ins = tuple(P(None) if (i == 0 and self.win_in) else act
+        step_ins = tuple(P(None) if ((i == 0 and self.win_in)
+                                     or i in self.rdma_crosses) else act
                          for i in range(len(self.steps)))
         z_last = act if self.saves_z_last else P(None)
         return (x_res, step_ins, z_last)
@@ -344,13 +330,22 @@ def _window_slab(x_full: jax.Array, base_cols: jax.Array, n_local: int,
 # shard-local stage math
 # ---------------------------------------------------------------------------
 
+def _cross_mix(z, zp, cf, k: int):
+    """The local 2x2 half of a cross stage, once the partner slab ``zp``
+    is in hand: the low partner (``j & k == 0``) holds the x0 role and
+    computes ``y0 = a*z + b*zp``, the high partner ``y1 = c*zp + d*z``.
+    Factored out of ``_cross_fwd`` so the overlap schedule can apply it
+    per row block (and the RDMA kernel as its in-VMEM epilogue)."""
+    low = (jax.lax.axis_index(AXIS) & k) == 0
+    a, b, c, d = (cf[:, i].astype(z.dtype) for i in range(4))
+    return jnp.where(low, a * z + b * zp, c * zp + d * z)
+
+
 def _cross_fwd(z, cf, k: int, plan: ShardPlan):
     """One partner exchange + local 2x2 mix.  z: (rows, n_local);
     cf: (n_local, 4) rows shared with the partner shard."""
     zp = jax.lax.ppermute(z, AXIS, cross_partner_perm(plan.n_shards, k))
-    low = (jax.lax.axis_index(AXIS) & k) == 0
-    a, b, c, d = (cf[:, i].astype(z.dtype) for i in range(4))
-    return jnp.where(low, a * z + b * zp, c * zp + d * z)
+    return _cross_mix(z, zp, cf, k)
 
 
 def _cross_bwd(z_in, delta, cf, k: int, plan: ShardPlan):
@@ -491,6 +486,250 @@ def _segment_bwd(z_in, delta, cf, run: Tuple[int, ...], plan: ShardPlan, *,
 
 
 # ---------------------------------------------------------------------------
+# overlap schedule: row-block pipelined walk
+# ---------------------------------------------------------------------------
+
+def pick_row_blocks(rows: int, block_rows: int,
+                    target: int = OVERLAP_ROW_BLOCKS) -> Tuple[int, ...]:
+    """Static per-shard row-block sizes of the overlap pipeline.
+
+    Splits ``rows`` (the per-DP-shard slab rows, already padded to a
+    ``block_rows`` multiple) into at most ``target`` contiguous blocks,
+    each a ``block_rows`` multiple so every block is a whole number of
+    kernel row-blocks.  Degenerate inputs (fewer kernel row-blocks than
+    ``target``) get fewer, down to the single-block tuple — the overlap
+    walk then reduces to the step-serial schedule on the same code path.
+    """
+    if rows <= 0:
+        return (max(rows, 0),) if rows else ()
+    units = max(1, rows // block_rows)        # whole kernel row-blocks
+    nb = max(1, min(target, units))
+    base, extra = divmod(units, nb)
+    sizes = []
+    used = 0
+    for b in range(nb):
+        u = base + (1 if b < extra else 0)
+        sizes.append(u * block_rows)
+        used += u * block_rows
+    sizes[-1] += rows - used                  # fold any sub-block remainder
+    return tuple(s for s in sizes if s > 0)
+
+
+def _overlap_split(z, row_blocks: Tuple[int, ...]):
+    """Slice the slab's row axis into the plan's static row blocks."""
+    offs = np.cumsum((0,) + row_blocks)
+    return [jax.lax.slice_in_dim(z, int(offs[b]), int(offs[b + 1]), axis=0)
+            for b in range(len(row_blocks))]
+
+
+def _partner_coords(plan: ShardPlan, k: int):
+    """(mesh.ndim,) int32 logical mesh coordinates of this shard's XOR-k
+    partner — every axis keeps this device's index except ``"model"``,
+    which flips to ``j XOR k``.  Consumed by the RDMA kernels' remote-copy
+    ``device_id`` (scalar prefetch)."""
+    coords = []
+    for a in plan.mesh.axis_names:
+        idx = jax.lax.axis_index(a)
+        if a == AXIS:
+            idx = idx ^ k
+        coords.append(idx)
+    return jnp.stack([c.astype(jnp.int32) for c in coords])
+
+
+def _cross_role_vecs(cf, k: int, low):
+    """Role-resolved forward mix vectors: the epilogue computes
+    ``y = mix_a * z + mix_b * zp`` where (mix_a, mix_b) is (a, b) on the
+    low partner and (d, c) on the high — O(n_local) elementwise, computed
+    in the shard body so the kernel itself is role-free."""
+    return (jnp.where(low, cf[:, 0], cf[:, 3]),
+            jnp.where(low, cf[:, 1], cf[:, 2]))
+
+
+def _pair_rdma_fwd(z, li: int, ci: int, plan: ShardPlan, tabs,
+                   d_in, base_cols):
+    """One fused {local run -> cross exchange -> mix epilogue} pallas_call
+    over the whole slab: the kernel row-block-pipelines internally, a
+    block's partner-half remote copy starting as soon as its local mix
+    finishes (kernels/spm_stack.spm_overlap_kernel_call)."""
+    local_step, cross_step = plan.steps[li], plan.steps[ci]
+    k = cross_step[2]
+    low = (jax.lax.axis_index(AXIS) & k) == 0
+    mix_a, mix_b = _cross_role_vecs(tabs[ci][0], k, low)
+    (run_strides, n_tile), = plan_runs(plan.n_local, local_step[2])
+    first = li == 0
+    return K.spm_overlap_kernel_call(
+        z, tabs[li][0], mix_a, mix_b, _partner_coords(plan, k),
+        d_in=d_in if (first and plan.fold_din) else None,
+        col_base=(_base_tiles(base_cols, n_tile)
+                  if (first and plan.win_in) else None),
+        strides=run_strides, block_rows=plan.block_rows, n_tile=n_tile,
+        in_width=plan.in_width if (first and plan.win_in) else None,
+        collective_id=2 * ci)       # distinct per pair; bwd takes 2*ci+1
+
+
+def _pair_rdma_bwd(z_in, delta, li: int, ci: int, plan: ShardPlan, tabs,
+                   d_in, base_cols):
+    """Backward of an RDMA pair from the LOCAL step's saved input: the
+    kernel remats the local run's output in VMEM (the forward sent it
+    without ever writing HBM), exchanges (delta, z_out) blocks with the
+    partner — the partner exchange is its own transpose — applies the
+    cross-backward mix as its prologue and walks the local stages in
+    reverse.  Returns (delta, g_local_coeffs, g_cross_coeffs, vec_grads)
+    with the cross grads placed into the role-owned (a,b)/(c,d) slots
+    exactly as ``_cross_bwd`` does."""
+    local_step, cross_step = plan.steps[li], plan.steps[ci]
+    k = cross_step[2]
+    low = (jax.lax.axis_index(AXIS) & k) == 0
+    cfc = tabs[ci][0]
+    # transpose mix: g_mid = u * delta + v * delta_p with (u, v) = (a, c)
+    # on the low partner and (d, b) on the high (see _cross_bwd)
+    u = jnp.where(low, cfc[:, 0], cfc[:, 3])
+    v = jnp.where(low, cfc[:, 2], cfc[:, 1])
+    (run_strides, n_tile), = plan_runs(plan.n_local, local_step[2])
+    first = li == 0
+    out = K.spm_overlap_bwd_kernel_call(
+        z_in, tabs[li][0], delta, u, v, _partner_coords(plan, k),
+        d_in=d_in if (first and plan.fold_din) else None,
+        col_base=(_base_tiles(base_cols, n_tile)
+                  if (first and plan.win_in) else None),
+        strides=run_strides, block_rows=plan.block_rows, n_tile=n_tile,
+        in_width=plan.in_width if (first and plan.win_in) else None,
+        collective_id=2 * ci + 1)
+    delta, g_local, s_own, s_swp = out[:4]
+    vecs = list(out[4:])
+    zero = jnp.zeros_like(s_own)
+    g_cross = jnp.where(low,
+                        jnp.stack([s_own, s_swp, zero, zero], axis=-1),
+                        jnp.stack([zero, zero, s_swp, s_own], axis=-1))
+    return (delta, g_local.astype(tabs[li][0].dtype),
+            g_cross.astype(cfc.dtype), vecs)
+
+
+def _overlap_steps_fwd(plan: ShardPlan, tabs, d_in, d_out, bias, z,
+                       base_cols, collect: bool):
+    """Row-block pipelined forward walk of the schedule.
+
+    Blocks are independent, so issuing block b's partner exchange right
+    after its local mix lets it fly while block b+1 computes — on TPU the
+    pair segments fuse this into one RDMA kernel
+    (``plan.rdma_crosses``); everywhere else the per-block
+    ``jax.lax.ppermute`` transport realizes the IDENTICAL schedule (the
+    interpret-mode proof path), with XLA's async collectives free to
+    overlap the in-flight permutes with the next block's kernel.
+    Residual layout matches the serial walk except RDMA cross steps,
+    whose stage input is a placeholder (rematerialized by the backward
+    kernel)."""
+    fdt = z.dtype
+    ph = jnp.zeros((1,), fdt)
+    n_steps = len(plan.steps)
+    step_ins = [ph] * n_steps
+    i = 0
+    for seg in plan.segments:
+        if seg[0] == "pair" and (i + 1) in plan.rdma_crosses:
+            li, ci = i, i + 1
+            if collect and not (li == 0 and plan.win_in):
+                step_ins[li] = z
+            z = _pair_rdma_fwd(z, li, ci, plan, tabs, d_in, base_cols)
+            i += 2
+            continue
+        for step in (seg[1:] if seg[0] == "pair" else (seg[1],)):
+            first, last = i == 0, i == n_steps - 1
+            if collect and not (first and plan.win_in):
+                step_ins[i] = z
+            cf = tabs[i][0]
+            blocks = _overlap_split(z, plan.row_blocks)
+            if step[0] == "cross":
+                perm = cross_partner_perm(plan.n_shards, step[2])
+                zps = [jax.lax.ppermute(b, AXIS, perm) for b in blocks]
+                outs = [_cross_mix(b, p, cf, step[2])
+                        for b, p in zip(blocks, zps)]
+            else:
+                outs = [_segment_fwd(
+                    b, cf, step[2], plan,
+                    d_in=d_in if (first and plan.fold_din) else None,
+                    d_out=d_out if (last and plan.fold_dout) else None,
+                    bias=bias if (last and plan.fold_bias) else None,
+                    col_base=base_cols if (first and plan.win_in) else None,
+                    in_width=plan.in_width
+                    if (first and plan.win_in) else None) for b in blocks]
+            z = jnp.concatenate(outs, axis=0)
+            i += 1
+    return z, step_ins
+
+
+def _sum_vec_lists(parts):
+    """Elementwise-sum the per-block ``vec_grads`` lists of a local step
+    (each ordered [g_din?, g_dout?, g_bias?])."""
+    if not parts or not parts[0]:
+        return []
+    return [functools.reduce(jnp.add, [p[j] for p in parts])
+            for j in range(len(parts[0]))]
+
+
+def _overlap_steps_bwd(plan: ShardPlan, tabs, d_in, d_out, res, delta,
+                       base_cols):
+    """Reverse of ``_overlap_steps_fwd``: walks the segments backwards,
+    per row block, replaying the same exchanges (the XOR permutation is
+    its own transpose); RDMA pairs run their fused backward kernel on the
+    whole slab.  Returns (delta, g_tabs in schedule order, vec_grads dict
+    keyed 'din'/'dout'/'bias' for the folded boundary grads)."""
+    x_res, step_ins, _ = res
+    n_steps = len(plan.steps)
+    g_tabs = [None] * n_steps
+    folded = {}
+    spans = []
+    i = 0
+    for seg in plan.segments:
+        spans.append((seg, i))
+        i += 2 if seg[0] == "pair" else 1
+    for seg, i0 in reversed(spans):
+        if seg[0] == "pair" and (i0 + 1) in plan.rdma_crosses:
+            li, ci = i0, i0 + 1
+            z_in = x_res if (li == 0 and plan.win_in) else step_ins[li]
+            delta, g_l, g_c, vecs = _pair_rdma_bwd(
+                z_in, delta, li, ci, plan, tabs, d_in, base_cols)
+            g_tabs[li], g_tabs[ci] = g_l, g_c
+            if li == 0 and plan.fold_din:
+                folded["din"] = vecs.pop(0)
+            continue
+        steps_here = seg[1:] if seg[0] == "pair" else (seg[1],)
+        for off in range(len(steps_here) - 1, -1, -1):
+            i = i0 + off
+            step = steps_here[off]
+            first, last = i == 0, i == n_steps - 1
+            cf = tabs[i][0]
+            d_blocks = _overlap_split(delta, plan.row_blocks)
+            if step[0] == "cross":
+                z_blocks = _overlap_split(step_ins[i], plan.row_blocks)
+                outs = [_cross_bwd(zb, db, cf, step[2], plan)
+                        for zb, db in zip(z_blocks, d_blocks)]
+                delta = jnp.concatenate([o[0] for o in outs], axis=0)
+                g_tabs[i] = functools.reduce(jnp.add, [o[1] for o in outs])
+            else:
+                z_in = x_res if (first and plan.win_in) else step_ins[i]
+                z_blocks = _overlap_split(z_in, plan.row_blocks)
+                outs = [_segment_bwd(
+                    zb, db, cf, step[2], plan,
+                    d_in=d_in if (first and plan.fold_din) else None,
+                    d_out=d_out if (last and plan.fold_dout) else None,
+                    has_bias=last and plan.fold_bias,
+                    col_base=base_cols if (first and plan.win_in) else None,
+                    in_width=plan.in_width
+                    if (first and plan.win_in) else None)
+                    for zb, db in zip(z_blocks, d_blocks)]
+                delta = jnp.concatenate([o[0] for o in outs], axis=0)
+                g_tabs[i] = functools.reduce(jnp.add, [o[1] for o in outs])
+                vecs = _sum_vec_lists([o[2] for o in outs])
+                if first and plan.fold_din:
+                    folded["din"] = vecs.pop(0)
+                if last and plan.fold_dout:
+                    folded["dout"] = vecs.pop(0)
+                if last and plan.fold_bias:
+                    folded["bias"] = vecs.pop(0)
+    return delta, g_tabs, folded
+
+
+# ---------------------------------------------------------------------------
 # per-shard operator body
 # ---------------------------------------------------------------------------
 
@@ -507,23 +746,29 @@ def _shard_fwd(plan: ShardPlan, tabs, d_in, d_out, bias, x2, collect: bool):
     x_res = x2 if plan.win_in else (z if plan.saves_x_res else ph)
     if plan.has_din and not plan.fold_din:
         z = z * d_in.astype(fdt)
-    step_ins = []
     n_steps = len(plan.steps)
-    for i, (step, tab) in enumerate(zip(plan.steps, tabs)):
-        first, last = i == 0, i == n_steps - 1
-        if collect:
-            step_ins.append(ph if (first and plan.win_in) else z)
-        cf = tab[0]                      # drop the (1,) local shard axis
-        if step[0] == "cross":
-            z = _cross_fwd(z, cf, step[2], plan)
-        else:
-            z = _segment_fwd(
-                z, cf, step[2], plan,
-                d_in=d_in if (first and plan.fold_din) else None,
-                d_out=d_out if (last and plan.fold_dout) else None,
-                bias=bias if (last and plan.fold_bias) else None,
-                col_base=base_cols if (first and plan.win_in) else None,
-                in_width=plan.in_width if (first and plan.win_in) else None)
+    if plan.overlap:
+        z, step_ins = _overlap_steps_fwd(plan, tabs, d_in, d_out, bias, z,
+                                         base_cols, collect)
+    else:
+        step_ins = []
+        for i, (step, tab) in enumerate(zip(plan.steps, tabs)):
+            first, last = i == 0, i == n_steps - 1
+            if collect:
+                step_ins.append(ph if (first and plan.win_in) else z)
+            cf = tab[0]                  # drop the (1,) local shard axis
+            if step[0] == "cross":
+                z = _cross_fwd(z, cf, step[2], plan)
+            else:
+                z = _segment_fwd(
+                    z, cf, step[2], plan,
+                    d_in=d_in if (first and plan.fold_din) else None,
+                    d_out=d_out if (last and plan.fold_dout) else None,
+                    bias=bias if (last and plan.fold_bias) else None,
+                    col_base=base_cols
+                    if (first and plan.win_in) else None,
+                    in_width=plan.in_width
+                    if (first and plan.win_in) else None)
     z_last = z
     if plan.has_dout and not plan.fold_dout:
         z = z * d_out.astype(fdt)
@@ -554,32 +799,42 @@ def _shard_bwd(plan: ShardPlan, tabs, d_in, d_out, bias, res, gy):
         delta = gys * d_out.astype(fdt)
     else:
         delta = gys
-    g_tabs = []
     n_steps = len(plan.steps)
-    for i in range(n_steps - 1, -1, -1):
-        step = plan.steps[i]
-        cf = tabs[i][0]
-        first, last = i == 0, i == n_steps - 1
-        if step[0] == "cross":
-            delta, g = _cross_bwd(step_ins[i], delta, cf, step[2], plan)
-        else:
-            z_in = x_res if (first and plan.win_in) else step_ins[i]
-            delta, g, vecs = _segment_bwd(
-                z_in, delta, cf, step[2], plan,
-                d_in=d_in if (first and plan.fold_din) else None,
-                d_out=d_out if (last and plan.fold_dout) else None,
-                has_bias=last and plan.fold_bias,
-                col_base=base_cols
-                if (first and plan.win_in) else None,
-                in_width=plan.in_width
-                if (first and plan.win_in) else None)
-            if first and plan.fold_din:
-                g_din = vecs.pop(0)
-            if last and plan.fold_dout:
-                g_dout = vecs.pop(0)
-            if last and plan.fold_bias:
-                g_bias = vecs.pop(0)
-        g_tabs.append(g[None])           # restore the (1,) local shard axis
+    if plan.overlap:
+        delta, g_list, folded = _overlap_steps_bwd(
+            plan, tabs, d_in, d_out, res, delta, base_cols)
+        # restore the (1,) local shard axis; reversed so the shared
+        # epilogue's final [::-1] yields schedule order
+        g_tabs = [g[None] for g in reversed(g_list)]
+        g_din = folded.get("din", g_din)
+        g_dout = folded.get("dout", g_dout)
+        g_bias = folded.get("bias", g_bias)
+    else:
+        g_tabs = []
+        for i in range(n_steps - 1, -1, -1):
+            step = plan.steps[i]
+            cf = tabs[i][0]
+            first, last = i == 0, i == n_steps - 1
+            if step[0] == "cross":
+                delta, g = _cross_bwd(step_ins[i], delta, cf, step[2], plan)
+            else:
+                z_in = x_res if (first and plan.win_in) else step_ins[i]
+                delta, g, vecs = _segment_bwd(
+                    z_in, delta, cf, step[2], plan,
+                    d_in=d_in if (first and plan.fold_din) else None,
+                    d_out=d_out if (last and plan.fold_dout) else None,
+                    has_bias=last and plan.fold_bias,
+                    col_base=base_cols
+                    if (first and plan.win_in) else None,
+                    in_width=plan.in_width
+                    if (first and plan.win_in) else None)
+                if first and plan.fold_din:
+                    g_din = vecs.pop(0)
+                if last and plan.fold_dout:
+                    g_dout = vecs.pop(0)
+                if last and plan.fold_bias:
+                    g_bias = vecs.pop(0)
+            g_tabs.append(g[None])       # restore the (1,) local shard axis
     if plan.has_din and not plan.fold_din:
         g_din = jnp.sum(delta.astype(_F32) * x_res.astype(_F32), axis=0)
         delta = delta * d_in.astype(fdt)
@@ -681,15 +936,27 @@ _sharded_core.defvjp(_sharded_core_fwd, _sharded_core_bwd)
 # public entry
 # ---------------------------------------------------------------------------
 
-def _resolve_kernel(cfg, steps, backend_tpu: bool) -> bool:
-    """Resolve the tri-state ``use_kernel`` knob for the shard-local runs
-    (None = auto/on-TPU, True = force/interpret off-TPU, False = never);
-    a schedule with no local steps has nothing to fuse."""
-    if cfg.use_kernel is False:
-        return False
-    if not any(step[0] == "local" for step in steps):
-        return False
-    return True if cfg.use_kernel else backend_tpu
+# _resolve_kernel moved to core/eligibility.resolve_shard_kernel (the
+# single fallback matrix), next to resolve_overlap / resolve_rdma.
+
+
+def _rdma_cross_indices(steps, n_local: int) -> Tuple[int, ...]:
+    """Cross-step indices executable as fused RDMA pair kernels: the pair's
+    local run must plan to ONE kernel run (its stages' pair spans all fit
+    one n_local-wide tile — true for every two_level cycle with
+    n_local <= MAX_TILE).  The kernel pipelines at its own ``block_rows``
+    granularity (one grid step per row block), independent of the coarser
+    ``row_blocks`` the ppermute transport uses."""
+    out = []
+    i = 0
+    for seg in overlap_segments(steps):
+        if seg[0] == "pair":
+            if len(plan_runs(n_local, seg[1][2])) == 1:
+                out.append(i + 1)
+            i += 2
+        else:
+            i += 1
+    return tuple(out)
 
 
 def spm_apply_sharded(params: dict, x: jax.Array, cfg, mesh: Mesh, *,
@@ -704,6 +971,11 @@ def spm_apply_sharded(params: dict, x: jax.Array, cfg, mesh: Mesh, *,
     all-gather.  Collectives issued: one collective-permute per cross-shard
     stage (two in the backward) — plus, only when DP axes exist, the
     standard parameter-sized grad psum over those axes in the backward.
+    Under the overlap schedule (``cfg.overlap`` — see the module
+    docstring) each of those permutes splits into one per row block with
+    IDENTICAL total bytes, pipelined so a block's exchange hides under
+    the other blocks' compute (in-kernel ``make_async_remote_copy`` on
+    compiled TPU backends, per-block ppermute everywhere else).
 
     Rectangular widths: ``x`` stays ``(..., in_width)`` — it enters the
     shard_map feature-replicated and the FIRST shard-local kernel run reads
@@ -746,16 +1018,28 @@ def spm_apply_sharded(params: dict, x: jax.Array, cfg, mesh: Mesh, *,
     for a in dp:
         dp_total *= int(mesh.shape[a])
 
-    use_kernel = _resolve_kernel(cfg, steps,
-                                 jax.default_backend() == "tpu")
+    backend_tpu = jax.default_backend() == "tpu"
+    interpret = default_interpret()
+    use_kernel = resolve_shard_kernel(cfg, steps, backend_tpu)
+    overlap = resolve_overlap(cfg, steps, backend_tpu)
+    rdma = overlap and resolve_rdma(use_kernel, backend_tpu, interpret)
     block_rows = 1
     if use_kernel:
         rows_per_dp = -(-rows // dp_total)
         block_rows = min(
             pick_block_rows_for_plan(plan_runs(n_local, step[2]),
                                      rows_per_dp,
-                                     dtype_bytes=x.dtype.itemsize)
+                                     dtype_bytes=x.dtype.itemsize,
+                                     overlap_bufs=rdma)
             for step in steps if step[0] == "local")
+        if overlap:
+            # the pipeline needs >= OVERLAP_ROW_BLOCKS kernel row blocks to
+            # hide anything: trade block size down (never below the 8-row
+            # VREG floor) until the slab yields that many — the per-block
+            # VMEM working set only shrinks with it
+            while (block_rows > 8
+                   and rows_per_dp // block_rows < OVERLAP_ROW_BLOCKS):
+                block_rows //= 2
     # rows must split evenly over the DP axes AND (kernel path) each
     # DP-local slab must be a block_rows multiple; padded rows are zeros,
     # contributing exact zeros to every batch-summed parameter grad.
@@ -764,12 +1048,17 @@ def spm_apply_sharded(params: dict, x: jax.Array, cfg, mesh: Mesh, *,
     if padded != rows:
         x2 = jnp.pad(x2, ((0, padded - rows), (0, 0)))
 
+    row_blocks = pick_row_blocks(padded // dp_total,
+                                 block_rows) if overlap else ()
+    rdma_crosses = (_rdma_cross_indices(steps, n_local)
+                    if rdma else ())
     plan = ShardPlan(
         mesh=mesh, n=n, n_local=n_local, n_shards=cfg.n_shards,
         steps=steps, has_din=cfg.use_diag, has_dout=cfg.use_diag,
         has_bias=cfg.use_bias, use_kernel=use_kernel,
-        block_rows=block_rows, interpret=default_interpret(), dp=dp,
-        in_width=in_width, out_width=out_width)
+        block_rows=block_rows, interpret=interpret, dp=dp,
+        in_width=in_width, out_width=out_width,
+        row_blocks=row_blocks, rdma_crosses=rdma_crosses)
 
     coeffs = spm_mod.stage_coeffs(params, cfg)
     tables = _step_tables(coeffs, steps, cfg.n_shards, n_local)

@@ -1,0 +1,96 @@
+"""Unit tests for the CI bench-regression gate
+(``benchmarks/check_regression.py``): the comparator that fails a PR when
+the freshly generated ``BENCH_kernel.json`` grows a modeled HBM or
+exposed-communication metric past the committed baseline.
+"""
+
+import copy
+import importlib.util
+import json
+import os
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+spec = importlib.util.spec_from_file_location(
+    "check_regression", os.path.join(REPO, "benchmarks",
+                                     "check_regression.py"))
+cr = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(cr)
+
+
+def _payload():
+    return {
+        "batch": 64, "linear_batch": 16,
+        "results": [{"n": 256, "traffic": {"fused_bytes": 1000,
+                                           "fused_roundtrips": 2}}],
+        "rect_results": [{"shape": "ffn_up", "d_in": 128, "d_out": 512,
+                          "traffic": {"fused_bytes": 500}}],
+        "sharded_results": [{
+            "n": 256, "L": 8, "n_shards": 8,
+            "in_width": None, "out_width": None,
+            "modeled": {"hbm_bytes_per_chip": 2000,
+                        "permute_bytes_per_chip": 300,
+                        "exposed_permute_bytes_per_chip": 300},
+            "modeled_overlap": {"exposed_permute_bytes_per_chip": 100},
+        }],
+    }
+
+
+def test_identical_payloads_pass():
+    regs, dropped, new = cr.compare(_payload(), _payload())
+    assert regs == [] and dropped == [] and new == []
+
+
+def test_growth_past_tolerance_fails_and_names_the_metric():
+    fresh = _payload()
+    fresh["sharded_results"][0]["modeled_overlap"][
+        "exposed_permute_bytes_per_chip"] = 160      # +60% > 2%
+    regs, _, _ = cr.compare(_payload(), fresh, tol=0.02)
+    assert len(regs) == 1
+    key, base, val = regs[0]
+    assert "exposed_overlap" in key and (base, val) == (100, 160)
+
+
+def test_growth_within_tolerance_passes():
+    fresh = _payload()
+    fresh["results"][0]["traffic"]["fused_bytes"] = 1009   # +0.9%
+    regs, _, _ = cr.compare(_payload(), fresh, tol=0.02)
+    assert regs == []
+
+
+def test_improvements_and_new_rows_are_free_dropped_rows_are_not():
+    fresh = _payload()
+    fresh["results"][0]["traffic"]["fused_bytes"] = 900    # improvement
+    fresh["rect_results"].append({"shape": "new", "d_in": 1, "d_out": 2,
+                                  "traffic": {"fused_bytes": 7}})
+    del fresh["sharded_results"][0]["modeled_overlap"]     # dropped metric
+    regs, dropped, new = cr.compare(_payload(), fresh)
+    assert regs == []
+    assert len(new) == 1 and len(dropped) == 1
+
+
+def test_cli_end_to_end(tmp_path):
+    base_p, fresh_p = tmp_path / "base.json", tmp_path / "fresh.json"
+    base_p.write_text(json.dumps(_payload()))
+    fresh = _payload()
+    fresh_p.write_text(json.dumps(fresh))
+    assert cr.main(["--baseline", str(base_p), "--fresh",
+                    str(fresh_p)]) == 0
+    fresh["sharded_results"][0]["modeled"]["hbm_bytes_per_chip"] = 9999
+    fresh_p.write_text(json.dumps(fresh))
+    assert cr.main(["--baseline", str(base_p), "--fresh",
+                    str(fresh_p)]) == 1
+    # scale mismatch is an error, never a vacuous pass
+    mism = copy.deepcopy(_payload())
+    mism["batch"] = 256
+    fresh_p.write_text(json.dumps(mism))
+    assert cr.main(["--baseline", str(base_p), "--fresh",
+                    str(fresh_p)]) == 2
+
+
+def test_gate_accepts_the_committed_baseline_against_itself():
+    with open(os.path.join(REPO, "BENCH_kernel.json")) as f:
+        bench = json.load(f)
+    regs, dropped, new = cr.compare(bench, bench)
+    assert regs == [] and dropped == [] and new == []
+    assert len(cr.gated_metrics(bench)) >= 10

@@ -25,6 +25,7 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 API_MODULES = [
     "repro.core.spm",
     "repro.core.linear",
+    "repro.core.eligibility",
     "repro.configs.base",
     "repro.parallel",
 ]

@@ -1,0 +1,134 @@
+"""Direct unit tests for the consolidated eligibility/fallback matrix
+(``core/eligibility.py``) — the single module the kernel path, the
+distributed executor, and the overlap schedule all resolve through — plus
+the back-compat re-export surface the older call sites still import.
+"""
+
+import pytest
+
+from repro.core.eligibility import (kernel_eligible, overlap_segments,
+                                    plan_steps, resolve_overlap,
+                                    resolve_rdma, resolve_shard_kernel,
+                                    sharded_eligible, use_fused_kernel)
+from repro.core.spm import SPMConfig
+
+
+def _cfg(**kw):
+    base = dict(n=64, n_stages=6, schedule="two_level", n_shards=4,
+                backward="custom")
+    base.update(kw)
+    return SPMConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# single-device kernel predicates
+# ---------------------------------------------------------------------------
+
+def test_kernel_eligible_matrix():
+    assert kernel_eligible(_cfg())
+    assert not kernel_eligible(_cfg(n=63, n_shards=1))          # odd n
+    assert not kernel_eligible(_cfg(schedule="random",
+                                    n_shards=1))        # permutation pairs
+    assert not kernel_eligible(_cfg(variant="rotation",
+                                    backward="custom_inverse"))
+    # n_shards > 1 alone is NOT an exclusion (routing happens upstream)
+    assert kernel_eligible(_cfg(n_shards=8, n_stages=8))
+
+
+def test_use_fused_kernel_tri_state(monkeypatch):
+    import jax
+    assert use_fused_kernel(_cfg(use_kernel=True))      # force: on anywhere
+    assert not use_fused_kernel(_cfg(use_kernel=False))
+    assert not use_fused_kernel(_cfg(use_kernel=True, n=63, n_shards=1))
+    # auto follows the backend
+    auto = _cfg(use_kernel=None)
+    monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
+    assert not use_fused_kernel(auto)
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    assert use_fused_kernel(auto)
+
+
+# ---------------------------------------------------------------------------
+# distributed-executor predicates
+# ---------------------------------------------------------------------------
+
+def test_sharded_eligible_matrix():
+    assert sharded_eligible(_cfg())
+    assert not sharded_eligible(_cfg(n_shards=1))
+    assert not sharded_eligible(_cfg(n=24, n_stages=4, n_shards=8))
+    assert not sharded_eligible(_cfg(variant="rotation",
+                                     backward="custom_inverse"))
+    assert not sharded_eligible(_cfg(schedule="random", n_stages=4))
+
+
+def test_resolve_shard_kernel():
+    steps = plan_steps(64, _cfg().pairing.strides(), 4)
+    assert resolve_shard_kernel(_cfg(use_kernel=True), steps, False)
+    assert not resolve_shard_kernel(_cfg(use_kernel=False), steps, True)
+    assert resolve_shard_kernel(_cfg(use_kernel=None), steps, True)
+    assert not resolve_shard_kernel(_cfg(use_kernel=None), steps, False)
+    # a schedule with no local steps has nothing to fuse
+    no_local = (("cross", 0, 1), ("cross", 1, 2))
+    assert not resolve_shard_kernel(_cfg(use_kernel=True), no_local, True)
+
+
+# ---------------------------------------------------------------------------
+# overlap schedule
+# ---------------------------------------------------------------------------
+
+def test_overlap_segments_pairs_local_with_following_cross():
+    local_a = ("local", 0, (1, 2, 4, 8))
+    cross_1 = ("cross", 4, 1)
+    cross_2 = ("cross", 5, 2)
+    local_b = ("local", 6, (1,))
+    segs = overlap_segments((local_a, cross_1, cross_2, local_b))
+    assert segs == (("pair", local_a, cross_1), ("one", cross_2),
+                    ("one", local_b))
+    # trailing local after a pair; consecutive pairs chain greedily
+    segs = overlap_segments((local_a, cross_1, local_b, cross_2))
+    assert segs == (("pair", local_a, cross_1), ("pair", local_b, cross_2))
+    assert overlap_segments((local_a,)) == (("one", local_a),)
+    assert overlap_segments(()) == ()
+
+
+def test_resolve_overlap_tri_state():
+    cfg = _cfg()
+    steps = plan_steps(64, cfg.pairing.strides(), 4)
+    assert any(s[0] == "cross" for s in steps)
+    # explicit off wins everywhere
+    assert not resolve_overlap(_cfg(overlap=False), steps, True)
+    # force engages off-TPU (the ppermute-transport proof path)
+    assert resolve_overlap(_cfg(overlap=True), steps, False)
+    # auto is TPU-only
+    assert resolve_overlap(_cfg(overlap=None), steps, True)
+    assert not resolve_overlap(_cfg(overlap=None), steps, False)
+    # a communication-free schedule has nothing to overlap, even forced
+    all_local = (("local", 0, (1, 2)),)
+    assert not resolve_overlap(_cfg(overlap=True), all_local, True)
+
+
+def test_resolve_rdma_requires_compiled_tpu_kernels():
+    assert resolve_rdma(True, True, False)
+    assert not resolve_rdma(False, True, False)   # no kernel path
+    assert not resolve_rdma(True, False, False)   # no TPU backend
+    assert not resolve_rdma(True, True, True)     # interpret mode
+
+
+# ---------------------------------------------------------------------------
+# back-compat re-exports
+# ---------------------------------------------------------------------------
+
+def test_reexports_are_the_same_objects():
+    from repro.core import spm as spm_mod
+    from repro.parallel import spm_shard
+    assert spm_mod.kernel_eligible is kernel_eligible
+    assert spm_mod.use_fused_kernel is use_fused_kernel
+    assert spm_shard.sharded_eligible is sharded_eligible
+    assert spm_shard.plan_steps is plan_steps
+
+
+def test_plan_steps_still_rejects_non_shardable_strides():
+    with pytest.raises(ValueError):
+        plan_steps(64, (3,), 4)
+    with pytest.raises(ValueError):
+        plan_steps(48, (8,), 8)

@@ -1,0 +1,99 @@
+"""VMEM-budget accounting tests: ``ops.pick_block_rows_for_plan`` and the
+overlap kernels' per-block send/recv buffer accounting
+(``spm_stack.overlap_vmem_bytes``).
+
+The contract under test: the row block every kernel run of a plan shares
+must keep EACH run's own working set — and, when the RDMA transport may
+engage, the double-buffered send/recv slots — inside the VMEM budget, for
+f32 and bf16 activation I/O and for degenerate tiny-row inputs (where the
+row cap, not the budget, binds).
+"""
+
+import pytest
+
+from repro.core.pairings import default_n_stages
+from repro.core.spm import SPMConfig
+from repro.kernels.ops import pick_block_rows_for_plan, plan_runs
+from repro.kernels.spm_stack import (overlap_vmem_bytes, pick_block_rows,
+                                     vmem_bytes)
+
+BUDGET = 12 * 2**20      # pick_block_rows' default
+
+
+def _plan(n, L=None):
+    L = L if L is not None else default_n_stages(n)
+    strides = SPMConfig(n=n, n_stages=L, variant="general").pairing.strides()
+    return plan_runs(n, tuple(strides))
+
+
+@pytest.mark.parametrize("dtype_bytes", [4, 2], ids=["f32", "bf16"])
+@pytest.mark.parametrize("n", [256, 2048, 4096])
+def test_plan_row_block_respects_every_runs_budget(n, dtype_bytes):
+    runs = _plan(n)
+    br = pick_block_rows_for_plan(runs, 1 << 20, dtype_bytes)
+    assert br >= 8
+    for run_strides, n_tile in runs:
+        assert vmem_bytes(br, n_tile, len(run_strides),
+                          dtype_bytes) <= BUDGET, (n_tile, br)
+
+
+def test_mixed_tile_plan_binds_on_its_largest_run():
+    # n = 4096 with the default butterfly plans to multiple runs whose
+    # tiles differ (the lcm of pair spans caps at MAX_TILE); the shared
+    # row block must be the min over runs, i.e. sized by the widest tile.
+    runs = _plan(4096)
+    assert len(runs) > 1
+    tiles = {tile for _, tile in runs}
+    assert len(tiles) > 1, "expected a mixed-tile plan"
+    br = pick_block_rows_for_plan(runs, 1 << 20, 4)
+    per_run = [pick_block_rows(tile, len(rs), dtype_bytes=4)
+               for rs, tile in runs]
+    assert br == min(min(per_run), 8 << 17) and br == min(per_run)
+
+
+@pytest.mark.parametrize("dtype_bytes", [4, 2], ids=["f32", "bf16"])
+def test_overlap_accounting_adds_send_recv_double_buffers(dtype_bytes):
+    rb, nt, L = 64, 512, 6
+    comm = 2 * 2 * 2 * rb * nt * dtype_bytes   # slots x tensors x ends
+    x_walk = rb * nt * dtype_bytes             # bwd's second x window
+    assert overlap_vmem_bytes(rb, nt, L, dtype_bytes) == \
+        vmem_bytes(rb, nt, L, dtype_bytes) + comm + x_walk
+
+
+@pytest.mark.parametrize("dtype_bytes", [4, 2], ids=["f32", "bf16"])
+@pytest.mark.parametrize("n", [256, 2048])
+def test_overlap_budget_ceiling_respected(n, dtype_bytes):
+    runs = _plan(n)
+    br = pick_block_rows_for_plan(runs, 1 << 20, dtype_bytes,
+                                  overlap_bufs=True)
+    assert br >= 8
+    for run_strides, n_tile in runs:
+        assert overlap_vmem_bytes(br, n_tile, len(run_strides),
+                                  dtype_bytes) <= BUDGET
+    # reserving the comm slots can only shrink the row block
+    assert br <= pick_block_rows_for_plan(runs, 1 << 20, dtype_bytes)
+
+
+def test_tiny_rows_cap_the_row_block_not_the_budget():
+    runs = _plan(256)
+    for rows in (1, 3, 8, 9):
+        br = pick_block_rows_for_plan(runs, rows, 4)
+        assert br == max(8, 1 << (rows - 1).bit_length())
+        # with the row cap binding, reserving the comm slots is a no-op
+        assert br == pick_block_rows_for_plan(runs, rows, 4,
+                                              overlap_bufs=True)
+
+
+def test_pick_row_blocks_partitions_rows_into_kernel_multiples():
+    from repro.parallel.spm_shard import pick_row_blocks
+    # padded slab: every block a block_rows multiple, sizes sum to rows
+    rb = pick_row_blocks(256, 16)
+    assert sum(rb) == 256 and len(rb) == 4
+    assert all(b % 16 == 0 for b in rb)
+    # fewer kernel row-blocks than the target -> fewer pipeline blocks
+    assert pick_row_blocks(32, 16) == (16, 16)
+    assert pick_row_blocks(16, 16) == (16,)
+    assert pick_row_blocks(8, 16) == (8,)      # degenerate: single block
+    # XLA path (block_rows=1): any split that sums to rows
+    rb = pick_row_blocks(37, 1)
+    assert sum(rb) == 37 and len(rb) == 4
