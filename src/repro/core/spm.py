@@ -65,6 +65,17 @@ class SPMConfig:
     init_mode: str = "orthogonal"     # "orthogonal" | "identity"
     init_scale: float = 0.05
     n_shards: int = 1                 # for schedule="two_level"
+    # Schedule granularity for "two_level", decoupled from the EXECUTION
+    # shard count.  The stride sequence (the operator's math) is built for
+    # ``schedule_shards`` blocks (default: ``n_shards``); ``n_shards`` only
+    # says how many shards EXECUTE it.  A schedule built for S shards is
+    # executable on any power-of-two divisor m of S (strides below n/m
+    # become shard-local runs, the rest stay k*(n/m) partner exchanges), so
+    # an elastic restart onto fewer chips keeps the SAME operator:
+    # ``dataclasses.replace(cfg, n_shards=m, schedule_shards=S)`` restores
+    # a checkpoint bit-for-bit onto the smaller mesh (train/checkpoint.py's
+    # topology-independent restore; proven by the chaos parity harness).
+    schedule_shards: Optional[int] = None
     seed: int = 0
     param_dtype: Any = jnp.float32
     # Fused full-operator Pallas kernel (kernels/ops.py): tri-state.
@@ -101,9 +112,11 @@ class SPMConfig:
 
     @functools.cached_property
     def pairing(self) -> Schedule:
+        """The operator's pairing schedule (built once; the two_level kind
+        uses ``schedule_shards`` — see that field — as its block split)."""
         return pairings.make_schedule(
             self.schedule, self.n, self.n_stages,
-            n_shards=self.n_shards, seed=self.seed)
+            n_shards=self.schedule_shards or self.n_shards, seed=self.seed)
 
     @property
     def n_pairs(self) -> int:

@@ -4,21 +4,32 @@ The global batch at step ``s`` is a pure function of (seed, s): each
 restart resumes bitwise-identically from the checkpointed step counter —
 no iterator state needs saving.  Per-host sharding slices the global
 batch by ``process_index`` so 1000-node runs read disjoint shards.
+
+``resume`` is defensive: a checkpoint written by an older trainer (no
+cursor extra, or a partial one) degrades to a fresh cursor with a logged
+warning instead of killing the restore — losing data-order continuity is
+recoverable, crashing the resume path is not.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import logging
 from typing import Callable, Optional
 
 import jax
 import numpy as np
+
+log = logging.getLogger("repro.data")
 
 __all__ = ["DataCursor", "DeterministicLoader"]
 
 
 @dataclasses.dataclass
 class DataCursor:
+    """Position in the deterministic stream: (seed, step) is the whole
+    state — the batch at any step is recomputable from it."""
+
     seed: int
     step: int = 0
 
@@ -43,6 +54,7 @@ class DeterministicLoader:
         self.host_id = host_id
 
     def batch_at(self, step: int):
+        """The (host-sharded) batch for ``step`` — pure in (seed, step)."""
         key = jax.random.fold_in(jax.random.PRNGKey(self.cursor.seed), step)
         batch = self.batch_fn(key, self.global_batch)
         if self.n_hosts > 1:
@@ -59,5 +71,26 @@ class DeterministicLoader:
     def __iter__(self):
         return self
 
-    def resume(self, cursor_state: dict) -> None:
-        self.cursor = DataCursor.from_state(cursor_state)
+    def state_dict(self) -> dict:
+        """Checkpointable cursor state (pass as the ``cursor`` extra)."""
+        return self.cursor.state_dict()
+
+    def resume(self, cursor_state: Optional[dict]) -> bool:
+        """Restore the cursor from checkpointed state.
+
+        Returns True on success.  ``None`` or a dict missing
+        ``seed``/``step`` (older checkpoint formats) keeps the current
+        fresh cursor and logs a warning — the restore path must not
+        crash over a missing data cursor."""
+        if cursor_state is None:
+            log.warning("no data cursor in checkpoint; keeping fresh "
+                        "cursor (seed=%d, step=%d)",
+                        self.cursor.seed, self.cursor.step)
+            return False
+        try:
+            self.cursor = DataCursor.from_state(cursor_state)
+        except (KeyError, TypeError, ValueError) as e:
+            log.warning("unusable data cursor %r in checkpoint (%s); "
+                        "keeping fresh cursor", cursor_state, e)
+            return False
+        return True

@@ -1,13 +1,22 @@
-"""End-to-end training driver.
+"""End-to-end training driver with recovery orchestration.
 
 CPU-scale by default (smoke configs); on a real cluster the same driver
 runs under ``jax.distributed.initialize()`` with the production mesh
 (see launch/README_MULTIHOST.md).  Features exercised here: deterministic
-resumable data, NaN-guarded steps, atomic keep-N checkpoints,
-resume-latest, fault-policy rollback.
+resumable data, NaN-guarded steps, atomic keep-N checkpoints with
+verified-integrity restore (corrupt checkpoints are quarantined and the
+restore walks back to the newest valid step), fault-policy rollback that
+coherently rewinds the loop counter / data cursor / LR schedule, and
+``run_with_recovery`` restarts with exponential backoff around the whole
+loop.  ``--chaos-spec`` arms deterministic fault injection
+(train/chaos.py) so every one of those paths can be exercised on demand:
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
-      --smoke --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/run1
+      --smoke --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/run1 \
+      --chaos-spec 'nan@13+5;corrupt@18:bitflip;preempt@19'
+
+Tests drive the same code through ``train(args)`` (no subprocess
+needed); it returns the final state for parity assertions.
 """
 
 from __future__ import annotations
@@ -15,6 +24,7 @@ from __future__ import annotations
 import argparse
 import os
 import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,9 +36,12 @@ from repro.data.loader import DeterministicLoader
 from repro.models import causal_lm as LM
 from repro.models import transformer as T
 from repro.optim.adamw import OptimizerConfig
-from repro.train import (FaultPolicy, latest_step, make_train_state,
-                         make_train_step, restore_checkpoint,
+from repro.train import (FaultEventLog, FaultPolicy, RESUME_LATEST,
+                         StragglerDetector, latest_valid_step,
+                         make_train_state, make_train_step,
+                         restore_checkpoint, run_with_recovery,
                          save_checkpoint)
+from repro.train.chaos import ChaosSchedule
 
 
 def make_batch_fn(cfg: T.ModelConfig, seq_len: int, corpus: np.ndarray):
@@ -58,7 +71,9 @@ def make_batch_fn(cfg: T.ModelConfig, seq_len: int, corpus: np.ndarray):
     return batch_fn
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
+    """CLI for the driver (shared with tests, which build an args
+    namespace via ``build_parser().parse_args([...])``)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3-1.7b")
     ap.add_argument("--smoke", action="store_true",
@@ -73,56 +88,152 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    ap.add_argument("--chaos-spec", default="",
+                    help="deterministic fault-injection plan, e.g. "
+                         "'nan@13+5;corrupt@18:bitflip;preempt@19' "
+                         "(see train/chaos.py)")
+    ap.add_argument("--chaos-seed", type=int, default=0)
+    ap.add_argument("--event-log", default="",
+                    help="fault-event JSONL path (default: "
+                         "<ckpt-dir>/events.jsonl when --ckpt-dir is set)")
+    ap.add_argument("--max-restarts", type=int, default=3,
+                    help="restart budget for run_with_recovery")
+    ap.add_argument("--backoff-base", type=float, default=0.5)
+    return ap
 
+
+def train(args: argparse.Namespace,
+          event_log: Optional[FaultEventLog] = None,
+          chaos: Optional[ChaosSchedule] = None) -> dict:
+    """Run the full training job described by ``args`` and return the
+    final train state.  Builds the recovery orchestration: the inner
+    ``loop(resume)`` holds all step/rollback logic, ``run_with_recovery``
+    restarts it on failure with exponential backoff and a restart budget.
+
+    ``event_log`` / ``chaos`` override the ones built from ``args``
+    (tests pass a shared ChaosSchedule so fire-once state survives a
+    simulated process death across two ``train`` calls)."""
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     if args.linear_impl:
         cfg = with_overrides(cfg, linear_impl=args.linear_impl)
     print(f"arch={cfg.name} impl={cfg.linear_impl} "
           f"steps={args.steps} B={args.batch} T={args.seq}")
 
-    corpus = build_corpus(200_000, seed=args.seed)
-    loader = DeterministicLoader(make_batch_fn(cfg, args.seq, corpus),
-                                 args.batch, seed=args.seed)
+    if event_log is None:
+        path = args.event_log or (os.path.join(args.ckpt_dir,
+                                               "events.jsonl")
+                                  if args.ckpt_dir else None)
+        event_log = FaultEventLog(path)
+    if chaos is None and args.chaos_spec:
+        chaos = ChaosSchedule.parse(args.chaos_spec, seed=args.chaos_seed)
 
-    params = T.init_model(jax.random.PRNGKey(args.seed), cfg)
-    state = make_train_state(params)
-    n_params = sum(x.size for x in jax.tree.leaves(params))
-    print(f"params: {n_params:,}")
+    corpus = build_corpus(200_000, seed=args.seed)
+
+    def fresh_loader() -> DeterministicLoader:
+        return DeterministicLoader(make_batch_fn(cfg, args.seq, corpus),
+                                   args.batch, seed=args.seed)
 
     opt_cfg = OptimizerConfig(lr=args.lr, total_steps=args.steps,
                               warmup_steps=max(args.steps // 20, 1))
+    # chaos_guard is always on: with poison=0 the step is bit-identical
+    # to a guard-free build, and the single compiled step serves healthy
+    # and poisoned iterations alike.
     step_fn = jax.jit(make_train_step(
         lambda p, b: LM.lm_loss(p, b, cfg), opt_cfg,
-        accum_steps=args.accum))
+        accum_steps=args.accum, chaos_guard=True))
 
-    start = 0
-    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
-        state, extra = restore_checkpoint(args.ckpt_dir, state)
-        start = int(extra.get("cursor", {}).get("step", 0))
-        loader.resume(extra["cursor"])
+    def init_state() -> dict:
+        params = T.init_model(jax.random.PRNGKey(args.seed), cfg)
+        state = make_train_state(params)
+        n_params = sum(x.size for x in jax.tree.leaves(params))
+        print(f"params: {n_params:,}")
+        return state
+
+    def try_restore(state: dict, loader: DeterministicLoader,
+                    required: bool):
+        """Restore the newest VALID checkpoint, or fall back to a fresh
+        start.  Returns (state, start_step, loader).  ``required`` marks
+        an explicit resume intent (rollback / restart): finding nothing
+        then is an event worth logging, not just a cold start."""
+        step = (latest_valid_step(args.ckpt_dir, event_log=event_log)
+                if args.ckpt_dir else None)
+        if step is None:
+            if required:
+                print("!! no valid checkpoint to resume from; "
+                      "restarting from scratch")
+                event_log.emit("resume_fallback_fresh")
+            return state, 0, loader
+        state, extra = restore_checkpoint(
+            args.ckpt_dir, state, step=step, event_log=event_log)
+        # LR schedule rewinds automatically: it is driven by opt.count
+        # inside the restored state.  The loop counter and data cursor
+        # rewind here.
+        if not loader.resume(extra.get("cursor")):
+            event_log.emit("cursor_missing", step=step)
+        start = int(extra.get("cursor", {}).get("step", step))
         print(f"resumed from step {start}")
+        return state, start, loader
 
-    policy = FaultPolicy()
-    t0 = time.time()
-    for s in range(start, args.steps):
-        batch = loader.batch_at(s)
-        state, metrics = step_fn(state, batch)
-        if policy.on_metrics(jax.device_get(metrics)):
-            print("!! rollback: too many consecutive skipped steps")
-            state, extra = restore_checkpoint(args.ckpt_dir, state)
-            policy.reset()
-        if (s + 1) % args.log_every == 0:
-            m = jax.device_get(metrics)
-            dt = (time.time() - t0) / (s + 1 - start)
-            print(f"step {s+1:5d} loss={float(m['loss']):.4f} "
-                  f"gnorm={float(m['grad_norm']):.3f} "
-                  f"lr={float(m['lr']):.2e} {dt*1e3:.0f} ms/step")
-        if args.ckpt_dir and (s + 1) % args.ckpt_every == 0:
-            save_checkpoint(args.ckpt_dir, s + 1, state,
-                            extra={"cursor": {"seed": args.seed,
-                                              "step": s + 1}})
-    print(f"done in {time.time()-t0:.1f}s")
+    def loop(resume: Optional[int]) -> dict:
+        """One attempt at the training loop.  ``resume=None`` cold-starts
+        (auto-resuming if checkpoints exist); ``RESUME_LATEST`` is
+        run_with_recovery's explicit restore instruction after a crash."""
+        loader = fresh_loader()
+        state, start, loader = try_restore(
+            init_state(), loader, required=resume == RESUME_LATEST)
+
+        policy = FaultPolicy()
+        straggler = StragglerDetector(event_log=event_log)
+        t0 = time.time()
+        s = start
+        while s < args.steps:
+            if chaos is not None:
+                chaos.pre_step(s)
+            batch = loader.batch_at(s)
+            poison = chaos.poison(s) if chaos is not None else 0.0
+            t_step = time.time()
+            state, metrics = step_fn(state, batch, poison)
+            metrics = jax.device_get(metrics)
+            straggler.observe(s, time.time() - t_step)
+            if metrics.get("skipped"):
+                event_log.emit("skip", step=s, cause="non-finite grads")
+            if policy.on_metrics(metrics):
+                # Coherent rollback: state, loop counter, and data
+                # cursor all rewind to the restored step (or to a fresh
+                # start when no checkpoint survives).
+                print("!! rollback: too many consecutive skipped steps")
+                event_log.emit("rollback", step=s,
+                               cause=f"{policy.consecutive_skips} "
+                                     "consecutive skips")
+                state, s, loader = try_restore(
+                    init_state(), fresh_loader(), required=True)
+                policy.reset()
+                continue
+            s += 1
+            if s % args.log_every == 0:
+                dt = (time.time() - t0) / max(s - start, 1)
+                print(f"step {s:5d} loss={float(metrics['loss']):.4f} "
+                      f"gnorm={float(metrics['grad_norm']):.3f} "
+                      f"lr={float(metrics['lr']):.2e} "
+                      f"{dt*1e3:.0f} ms/step")
+            if args.ckpt_dir and s % args.ckpt_every == 0:
+                save_checkpoint(args.ckpt_dir, s, state,
+                                extra={"cursor": {"seed": args.seed,
+                                                  "step": s}})
+            if chaos is not None:
+                chaos.post_step(s - 1, args.ckpt_dir or None,
+                                event_log=event_log)
+        print(f"done in {time.time()-t0:.1f}s "
+              f"(skips={policy.total_skips})")
+        return state
+
+    return run_with_recovery(loop, max_restarts=args.max_restarts,
+                             backoff_base=args.backoff_base,
+                             event_log=event_log)
+
+
+def main() -> None:
+    train(build_parser().parse_args())
 
 
 if __name__ == "__main__":

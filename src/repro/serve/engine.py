@@ -12,12 +12,21 @@ between steps), the per-step PRNG key is derived inside jit via
 calls after prefill (the old loop ran one extra decode whose logits were
 discarded).  ``temperature > 0`` without a key is an error, not a silent
 greedy fallback.
+
+Non-finite robustness: a NaN/inf logit row (overflowed checkpoint,
+corrupted KV cache) would send NaN through softmax and make
+``jax.random.categorical`` return garbage — possibly out-of-range token
+ids that crash downstream detokenizers.  ``_sample`` therefore guards
+per row: any row with a non-finite logit degrades to a deterministic
+in-range token (argmax over zeroed logits = token 0) instead of
+propagating the NaN, and ``generate(..., return_flags=True)`` reports
+which requests ever hit the guard so callers can flag/retry them.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -36,13 +45,23 @@ def serve_step(params: dict, cfg: T.ModelConfig, tokens: jax.Array,
 
 
 def _sample(logits: jax.Array, key: jax.Array, temperature: jax.Array,
-            greedy: bool) -> jax.Array:
-    """Traced sampling head.  ``greedy`` is static (two compiled variants);
-    ``temperature`` is traced so sweeping it never recompiles."""
+            greedy: bool) -> Tuple[jax.Array, jax.Array]:
+    """Traced sampling head; returns ``(tokens, bad)`` where ``bad`` is a
+    per-row bool flagging rows whose logits were non-finite (those rows
+    take a deterministic in-range fallback token instead of sampling from
+    NaN).  ``greedy`` is static (two compiled variants); ``temperature``
+    is traced so sweeping it never recompiles."""
+    bad = ~jnp.all(jnp.isfinite(logits), axis=-1)
+    # zero the whole row when any entry is non-finite: argmax/categorical
+    # over an all-zero row is token 0 — deterministic and always in-range
+    safe = jnp.where(bad[..., None], jnp.zeros_like(logits), logits)
     if greedy:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    return jax.random.categorical(
-        key, logits / temperature, axis=-1).astype(jnp.int32)
+        tok = jnp.argmax(safe, axis=-1).astype(jnp.int32)
+    else:
+        tok = jax.random.categorical(
+            key, safe / temperature, axis=-1).astype(jnp.int32)
+        tok = jnp.where(bad, jnp.zeros_like(tok), tok)
+    return tok, bad
 
 
 @dataclasses.dataclass
@@ -58,7 +77,8 @@ class ServeEngine:
             logits, cache = serve_step(params, self.cfg, tok, cache,
                                        prompt_len + step_idx)
             k = jax.random.fold_in(key, step_idx + 1)
-            return _sample(logits, k, temperature, greedy), cache
+            tok, bad = _sample(logits, k, temperature, greedy)
+            return tok, bad, cache
 
         # decode + sample in ONE compiled call per token
         self._step = jax.jit(step, static_argnames=("greedy",))
@@ -70,13 +90,23 @@ class ServeEngine:
 
     def generate(self, prompts: jax.Array, *, max_new_tokens: int = 32,
                  temperature: float = 0.0,
-                 key: Optional[jax.Array] = None) -> jax.Array:
-        """prompts: (B, T_prompt) int32 -> (B, max_new_tokens)."""
+                 key: Optional[jax.Array] = None,
+                 return_flags: bool = False,
+                 ) -> Union[jax.Array, Tuple[jax.Array, jax.Array]]:
+        """prompts: (B, T_prompt) int32 -> (B, max_new_tokens).
+
+        With ``return_flags=True`` returns ``(tokens, flags)`` where
+        ``flags`` is a (B,) bool marking requests that hit the non-finite
+        logits guard at ANY decode step (their tokens past that point are
+        fallback output and the request should be flagged or retried)."""
         greedy = temperature <= 0.0
         if not greedy and key is None:
             raise ValueError("temperature > 0 requires a PRNG key")
         if max_new_tokens <= 0:
-            return jnp.zeros((prompts.shape[0], 0), jnp.int32)
+            empty = jnp.zeros((prompts.shape[0], 0), jnp.int32)
+            if return_flags:
+                return empty, jnp.zeros((prompts.shape[0],), bool)
+            return empty
         if key is None:
             key = jax.random.PRNGKey(0)  # unused: greedy takes no samples
         logits, cache = LM.prefill(self.params, self.cfg,
@@ -84,13 +114,17 @@ class ServeEngine:
                                    cache_dtype=self.cache_dtype)
         idx = jnp.asarray(prompts.shape[1], jnp.int32)
         temp = jnp.asarray(temperature, jnp.float32)
-        tok = self._sample_first(logits, key, temp, greedy=greedy)
+        tok, flags = self._sample_first(logits, key, temp, greedy=greedy)
         out = [tok]
         # the token sampled from step t's logits is decoded at step t+1;
         # the LAST sampled token is returned without a trailing decode
         for t in range(max_new_tokens - 1):
-            tok, cache = self._step(self.params, tok, cache, idx, key,
-                                    jnp.asarray(t, jnp.int32), temp,
-                                    greedy=greedy)
+            tok, bad, cache = self._step(self.params, tok, cache, idx,
+                                         key, jnp.asarray(t, jnp.int32),
+                                         temp, greedy=greedy)
+            flags = flags | bad
             out.append(tok)
-        return jnp.stack(out, axis=1)
+        tokens = jnp.stack(out, axis=1)
+        if return_flags:
+            return tokens, flags
+        return tokens

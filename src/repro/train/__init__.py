@@ -1,8 +1,19 @@
-"""Training substrate: state, step factories, checkpointing, fault policy."""
+"""Training substrate: state, step factories, verified-integrity
+checkpointing, fault policy / recovery orchestration, chaos injection."""
 
-from repro.train.state import make_train_state, param_count  # noqa: F401
+from repro.train.state import (  # noqa: F401
+    make_train_state, param_count, tree_signature,
+)
 from repro.train.step import make_train_step, make_eval_step  # noqa: F401
 from repro.train.checkpoint import (  # noqa: F401
-    save_checkpoint, restore_checkpoint, latest_step, list_checkpoints,
+    CheckpointCorruptError, latest_step, latest_valid_step,
+    list_checkpoints, quarantine_checkpoint, restore_checkpoint,
+    save_checkpoint, verify_checkpoint,
 )
-from repro.train.fault import FaultPolicy, run_with_recovery  # noqa: F401
+from repro.train.fault import (  # noqa: F401
+    RESUME_LATEST, FaultEventLog, FaultPolicy, StragglerDetector,
+    run_with_recovery,
+)
+from repro.train.chaos import (  # noqa: F401
+    ChaosPreemption, ChaosSchedule, corrupt_checkpoint,
+)

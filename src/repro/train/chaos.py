@@ -1,0 +1,248 @@
+"""Deterministic fault injection ("chaos engineering") for the trainer.
+
+A seeded :class:`ChaosSchedule` injects planned faults at planned steps so
+every recovery path in the trainer is exercised on demand instead of
+waiting for production to exercise it.  The proof of correct recovery is
+*parity*: a chaos run must finish bitwise-identical to the fault-free run
+(tests/test_chaos.py, tests/test_chaos_distributed.py).
+
+Spec grammar (``launch/train.py --chaos-spec``), events ``;``-separated::
+
+    nan@S          poison gradients with NaN at step S (in-graph, via the
+    nan@S+K        train step's traced ``poison`` flag — the jitted step
+                   stays compiled); ``+K`` poisons K consecutive steps
+                   (a burst long enough to trip FaultPolicy's rollback)
+    preempt@S      raise ChaosPreemption AFTER step S completes —
+                   simulates preemption / device loss; run_with_recovery
+                   restores the newest valid checkpoint and resumes
+    corrupt@S:M    corrupt the NEWEST published checkpoint after step S.
+                   Modes M: ``bitflip`` (default; flip one seeded byte of
+                   arrays.npz), ``truncate`` (cut arrays.npz in half),
+                   ``delmeta`` (delete meta.json), ``orphan`` (plant a
+                   partial tmp.* staging dir, as a crashed save would)
+    slow@S:SEC     sleep SEC seconds before step S (straggler injection;
+                   the driver's StragglerDetector must flag it)
+
+Every event fires ONCE per process: after a rollback or in-process
+restart replays the same step numbers, a fired event stays fired —
+otherwise a ``preempt`` would re-kill every replay and the run could
+never converge on the fault-free trajectory.  Corruption byte positions
+come from the schedule's seeded RNG, so a chaos run is reproducible end
+to end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import os
+import re
+import time
+from typing import Any, List, Optional, Tuple
+
+import numpy as np
+
+log = logging.getLogger("repro.chaos")
+
+__all__ = ["ChaosEvent", "ChaosSchedule", "ChaosPreemption",
+           "CORRUPTION_MODES", "corrupt_checkpoint"]
+
+CORRUPTION_MODES = ("bitflip", "truncate", "delmeta", "orphan")
+
+_EVENT_RE = re.compile(
+    r"^(?P<kind>nan|preempt|corrupt|slow)@(?P<step>\d+)"
+    r"(?:\+(?P<count>\d+))?(?::(?P<arg>[^;]+))?$")
+
+
+class ChaosPreemption(RuntimeError):
+    """Injected preemption/device-loss: the training loop dies here and
+    the recovery orchestration (run_with_recovery, or a scheduler-level
+    re-launch resuming from the checkpoint dir) must bring it back."""
+
+
+@dataclasses.dataclass
+class ChaosEvent:
+    """One planned fault: ``kind`` at ``step`` with an optional ``arg``
+    (corruption mode / slow-step seconds).  ``fired`` makes injection
+    once-per-process so post-recovery replays run clean."""
+
+    kind: str
+    step: int
+    arg: Optional[str] = None
+    fired: bool = False
+
+
+def _flip_byte(path: str, rng: np.random.Generator) -> int:
+    """Flip one random byte of ``path`` in place; returns the offset."""
+    size = os.path.getsize(path)
+    off = int(rng.integers(0, size))
+    with open(path, "r+b") as f:
+        f.seek(off)
+        byte = f.read(1)[0]
+        f.seek(off)
+        f.write(bytes([byte ^ 0xFF]))
+    return off
+
+
+def corrupt_checkpoint(ckpt_dir: str, mode: str,
+                       rng: Optional[np.random.Generator] = None,
+                       step: Optional[int] = None) -> Optional[int]:
+    """Corrupt one published checkpoint in ``ckpt_dir`` (the newest, or
+    ``step``) the way real storage faults do.  Returns the corrupted step
+    number, or None when there was nothing to corrupt.
+
+    Modes: ``bitflip`` — XOR one seeded byte of ``arrays.npz`` (caught by
+    the sha256 manifest); ``truncate`` — cut ``arrays.npz`` to half size
+    (unreadable container); ``delmeta`` — delete ``meta.json`` (incomplete
+    payload); ``orphan`` — plant a partial ``tmp.<step>.<nonce>`` staging
+    dir next to the published steps, as a save crashed mid-write would
+    (must be GC'd, never republished)."""
+    if mode not in CORRUPTION_MODES:
+        raise ValueError(f"unknown corruption mode {mode!r}; "
+                         f"expected one of {CORRUPTION_MODES}")
+    # local import: chaos must stay importable without the checkpoint
+    # machinery fully initialized (and vice versa — no cycle at import)
+    from repro.train.checkpoint import list_checkpoints
+    steps = list_checkpoints(ckpt_dir)
+    if step is None:
+        step = steps[-1] if steps else None
+    if step is None:
+        log.warning("chaos corrupt(%s): no published checkpoint in %s",
+                    mode, ckpt_dir)
+        return None
+    rng = rng or np.random.default_rng(0)
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    if mode == "bitflip":
+        off = _flip_byte(os.path.join(d, "arrays.npz"), rng)
+        log.warning("chaos: flipped byte %d of step %d arrays.npz",
+                    off, step)
+    elif mode == "truncate":
+        path = os.path.join(d, "arrays.npz")
+        size = os.path.getsize(path)
+        with open(path, "r+b") as f:
+            f.truncate(size // 2)
+        log.warning("chaos: truncated step %d arrays.npz %d -> %d bytes",
+                    step, size, size // 2)
+    elif mode == "delmeta":
+        os.remove(os.path.join(d, "meta.json"))
+        log.warning("chaos: deleted step %d meta.json", step)
+    elif mode == "orphan":
+        nonce = "".join(rng.choice(list("0123456789abcdef"), 8))
+        tmp = os.path.join(ckpt_dir, f"tmp.{step}.{nonce}")
+        os.makedirs(tmp, exist_ok=True)
+        with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+            f.write(b"partial write, crashed mid-save")
+        log.warning("chaos: planted orphan staging dir %s",
+                    os.path.basename(tmp))
+    return step
+
+
+class ChaosSchedule:
+    """A seeded plan of fault injections, driven by the training loop.
+
+    Hooks, in loop order (see launch/train.py):
+
+    * ``poison(step)`` — before the jitted step: 1.0 when a ``nan`` event
+      covers this step (consumed), else 0.0.  Fed to the train step's
+      traced ``poison`` flag.
+    * ``pre_step(step)`` — straggler injection: sleeps any pending
+      ``slow`` event's delay and returns it (0.0 otherwise).
+    * ``post_step(step, ckpt_dir, event_log=None)`` — after the step's
+      save point: applies pending ``corrupt`` events against ``ckpt_dir``,
+      then raises :class:`ChaosPreemption` for a pending ``preempt``
+      (corruption-before-preemption means one step can stage the classic
+      "preempted AND the newest checkpoint is bad" double fault).
+    """
+
+    def __init__(self, events: List[ChaosEvent], seed: int = 0):
+        self.events = list(events)
+        self.seed = seed
+        self.rng = np.random.default_rng(seed)
+
+    @classmethod
+    def parse(cls, spec: str, seed: int = 0) -> "ChaosSchedule":
+        """Parse the ``--chaos-spec`` grammar (module docstring) into a
+        schedule; raises ValueError on malformed specs."""
+        events: List[ChaosEvent] = []
+        for part in spec.split(";"):
+            part = part.strip()
+            if not part:
+                continue
+            m = _EVENT_RE.match(part)
+            if not m:
+                raise ValueError(
+                    f"bad chaos event {part!r}; expected "
+                    "kind@step[+count][:arg] with kind in "
+                    "nan|preempt|corrupt|slow")
+            kind = m.group("kind")
+            step = int(m.group("step"))
+            count = int(m.group("count") or 1)
+            arg = m.group("arg")
+            if count > 1 and kind != "nan":
+                raise ValueError(f"{part!r}: only nan events take a "
+                                 "+count burst length")
+            if kind == "corrupt":
+                arg = arg or "bitflip"
+                if arg not in CORRUPTION_MODES:
+                    raise ValueError(f"{part!r}: corruption mode must be "
+                                     f"one of {CORRUPTION_MODES}")
+            if kind == "slow":
+                arg = arg or "0.05"
+                float(arg)            # validates
+            if kind in ("preempt",) and arg is not None:
+                raise ValueError(f"{part!r}: {kind} takes no argument")
+            for i in range(count):
+                events.append(ChaosEvent(kind=kind, step=step + i, arg=arg))
+        events.sort(key=lambda e: e.step)
+        return cls(events, seed=seed)
+
+    def _pending(self, kind: str, step: int) -> List[ChaosEvent]:
+        return [e for e in self.events
+                if e.kind == kind and e.step == step and not e.fired]
+
+    def poison(self, step: int) -> float:
+        """1.0 when a not-yet-fired ``nan`` event covers ``step`` (the
+        event is consumed), else 0.0."""
+        out = 0.0
+        for e in self._pending("nan", step):
+            e.fired = True
+            out = 1.0
+            log.warning("chaos: poisoning gradients at step %d", step)
+        return out
+
+    def pre_step(self, step: int) -> float:
+        """Sleep and return any pending ``slow`` event's delay (seconds)
+        for ``step``; 0.0 otherwise."""
+        delay = 0.0
+        for e in self._pending("slow", step):
+            e.fired = True
+            delay += float(e.arg)
+        if delay > 0:
+            log.warning("chaos: straggling step %d by %.3fs", step, delay)
+            time.sleep(delay)
+        return delay
+
+    def post_step(self, step: int, ckpt_dir: Optional[str],
+                  event_log: Any = None) -> None:
+        """Fire pending ``corrupt`` then ``preempt`` events for ``step``
+        (see class docstring for why in that order)."""
+        for e in self._pending("corrupt", step):
+            e.fired = True
+            if not ckpt_dir:
+                log.warning("chaos: corrupt event at step %d has no "
+                            "ckpt dir; skipped", step)
+                continue
+            victim = corrupt_checkpoint(ckpt_dir, e.arg, rng=self.rng)
+            if event_log is not None:
+                event_log.emit("chaos_corrupt", step=step, cause=e.arg,
+                               victim_step=victim)
+        for e in self._pending("preempt", step):
+            e.fired = True
+            if event_log is not None:
+                event_log.emit("chaos_preempt", step=step)
+            raise ChaosPreemption(f"injected preemption after step {step}")
+
+    def remaining(self) -> Tuple[ChaosEvent, ...]:
+        """Events that have not fired yet (a finished chaos run should
+        have none — asserting this catches specs aimed past the horizon)."""
+        return tuple(e for e in self.events if not e.fired)

@@ -1,4 +1,4 @@
-"""Topology-independent checkpointing: atomic npz + treedef JSON.
+"""Verified-integrity, topology-independent checkpointing.
 
 * **Atomic**: write to a uniquely-named ``<dir>/tmp.<step>.<nonce>`` then
   ``os.replace`` into ``step_<step>`` — nothing already published is
@@ -9,33 +9,60 @@
   REPUBLISHES any complete payload a crash left unpublished in staging,
   then garbage-collects the remaining stale ``tmp.*`` dirs.  One writer
   per ``ckpt_dir`` is assumed (as everywhere in this trainer).
-* **Keep-N**: old checkpoints garbage-collected.
+* **Verified integrity**: ``meta.json`` carries a per-array manifest
+  (sha256 of the raw array bytes, shape, dtype) plus the treedef string.
+  ``verify_checkpoint`` is the public probe — it re-hashes every array and
+  reports every discrepancy; ``restore_checkpoint`` verifies before
+  deserializing, compares the saved treedef against the caller's ``like``
+  structure, and **quarantines** a corrupt or incomplete step (renamed
+  ``corrupt.<step>.<nonce>``, kept on disk for forensics, never counted as
+  the newest step again) while walking back to the newest step that DOES
+  verify.  A flipped bit, a truncated ``arrays.npz``, or a deleted
+  ``meta.json`` therefore costs one checkpoint interval, not a silently
+  wrong resume.
+* **Keep-N**: old checkpoints garbage-collected; quarantined dirs are
+  exempt from the sweep.
 * **Topology-independent**: arrays are saved as host numpy (fully
   addressable gather); on restore the caller re-applies whatever
   shardings the CURRENT mesh dictates — a run checkpointed on 256 chips
   restarts on 512 or 64 (elastic re-shard), because nothing about the
-  mesh is serialized.
+  mesh is serialized.  Proven end-to-end by the chaos parity harness
+  (tests/test_chaos_distributed.py): a preempted sharded run resumes onto
+  a different shard count bitwise-identically.
 * The data-loader cursor and the step counter ride along, so restarts
   are bitwise-reproducible.
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
+import logging
 import os
 import re
 import shutil
 import uuid
-from typing import Any, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "list_checkpoints"]
+           "latest_valid_step", "list_checkpoints", "verify_checkpoint",
+           "quarantine_checkpoint", "CheckpointCorruptError"]
+
+log = logging.getLogger("repro.checkpoint")
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
 _TMP_RE = re.compile(r"^tmp\.(\d+)\.[0-9a-f]+(\.displaced)?$")
+_CORRUPT_RE = re.compile(r"^corrupt\.(\d+)\.[0-9a-f]+$")
+
+MANIFEST_VERSION = 2
+
+
+class CheckpointCorruptError(RuntimeError):
+    """An explicitly requested checkpoint failed integrity verification
+    (hash/shape/dtype mismatch, truncated payload, or missing metadata)."""
 
 
 def _recover_staging(ckpt_dir: str) -> None:
@@ -78,9 +105,38 @@ def _flatten_with_names(tree: Any):
     return flat, treedef
 
 
+def _array_digest(arr: np.ndarray) -> str:
+    """sha256 over the raw C-contiguous bytes of ``arr`` — the content
+    address the manifest records and ``verify_checkpoint`` re-derives."""
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()
+
+
+def _file_digest(path: str) -> str:
+    """sha256 of a file's raw bytes (chunked).  The whole-file digest of
+    ``arrays.npz`` catches flips in zip slack/padding bytes that the
+    per-array digests cannot see (np.load tolerates them)."""
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def _meta_digest(meta: dict) -> str:
+    """sha256 of the canonical (sorted-keys) JSON of ``meta`` minus the
+    digest field itself — the whole-metadata self-check."""
+    core = {k: v for k, v in meta.items() if k != "meta_sha256"}
+    return hashlib.sha256(
+        json.dumps(core, sort_keys=True).encode()).hexdigest()
+
+
 def save_checkpoint(ckpt_dir: str, step: int, state: Any,
                     extra: Optional[dict] = None, keep: int = 3) -> str:
-    """Save pytree ``state`` (+ JSON-serializable ``extra``) at ``step``."""
+    """Save pytree ``state`` (+ JSON-serializable ``extra``) at ``step``.
+
+    ``meta.json`` records a per-array integrity manifest (sha256, shape,
+    dtype) and the treedef string; ``restore_checkpoint`` /
+    ``verify_checkpoint`` check both.  Returns the published path."""
     os.makedirs(ckpt_dir, exist_ok=True)
     # First, promote any complete-but-unpublished payload a crashed save
     # left behind — the sweep at the end deletes whatever staging remains.
@@ -95,10 +151,21 @@ def save_checkpoint(ckpt_dir: str, step: int, state: Any,
     arrays = {f"a{i}": np.asarray(jax.device_get(x))
               for i, x in enumerate(flat)}
     np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {name: {"sha256": _array_digest(a),
+                       "shape": list(a.shape),
+                       "dtype": str(a.dtype)}
+                for name, a in arrays.items()}
     meta = {"n_arrays": len(flat),
             "treedef": str(treedef),
             "step": step,
+            "format": MANIFEST_VERSION,
+            "manifest": manifest,
+            "npz_sha256": _file_digest(os.path.join(tmp, "arrays.npz")),
             "extra": extra or {}}
+    # Self-digest over the canonical form of everything above: a flipped
+    # byte anywhere in meta.json (cursor, treedef, manifest, or the digest
+    # itself) fails verification, not just flips inside arrays.npz.
+    meta["meta_sha256"] = _meta_digest(meta)
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump(meta, f)
 
@@ -118,6 +185,7 @@ def save_checkpoint(ckpt_dir: str, step: int, state: Any,
 
     # keep-N garbage collection + stale staging dirs from crashed saves
     # (ours was renamed away above, so every remaining tmp.* is stale).
+    # Quarantined ``corrupt.*`` dirs match neither pattern: never swept.
     steps = sorted(list_checkpoints(ckpt_dir))
     for s in steps[:-keep]:
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)
@@ -128,17 +196,24 @@ def save_checkpoint(ckpt_dir: str, step: int, state: Any,
 
 
 def list_checkpoints(ckpt_dir: str):
+    """Published step numbers (ascending) whose payload files are present.
+    Quarantined ``corrupt.*`` dirs and staging ``tmp.*`` dirs are not
+    checkpoints and never appear here."""
     if not os.path.isdir(ckpt_dir):
         return []
     out = []
     for name in os.listdir(ckpt_dir):
         m = _STEP_RE.match(name)
-        if m and os.path.exists(os.path.join(ckpt_dir, name, "meta.json")):
+        if (m and os.path.exists(os.path.join(ckpt_dir, name, "meta.json"))
+                and os.path.exists(
+                    os.path.join(ckpt_dir, name, "arrays.npz"))):
             out.append(int(m.group(1)))
     return sorted(out)
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Newest published step (no integrity verification — see
+    ``latest_valid_step`` for the verified walk)."""
     # a resuming process must see a step whose publish was interrupted,
     # not silently fall back to an older one
     if os.path.isdir(ckpt_dir):
@@ -147,24 +222,173 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def verify_checkpoint(ckpt_dir: str, step: int) -> List[str]:
+    """Integrity probe for one published step.  Returns a list of
+    human-readable problems — empty means the checkpoint verifies.
+
+    Checks: payload files present, ``meta.json`` parses, carries the
+    integrity manifest, and matches its own self-digest (a flip in the
+    cursor/extra bytes is as fatal as one in an array), ``arrays.npz``
+    loads, the array set matches the manifest exactly, and every array's
+    sha256/shape/dtype matches its manifest entry — so corrupting ANY
+    byte of the payload is caught."""
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    if not os.path.isdir(d):
+        return [f"step_{step}: directory missing"]
+    problems = []
+    meta_path = os.path.join(d, "meta.json")
+    npz_path = os.path.join(d, "arrays.npz")
+    if not os.path.exists(meta_path):
+        return [f"step_{step}: meta.json missing"]
+    if not os.path.exists(npz_path):
+        return [f"step_{step}: arrays.npz missing"]
+    try:
+        with open(meta_path) as f:
+            meta = json.load(f)
+    except (ValueError, OSError) as e:
+        # ValueError covers JSONDecodeError AND UnicodeDecodeError — a
+        # flipped byte can make the file invalid UTF-8 before invalid JSON
+        return [f"step_{step}: meta.json unreadable ({e})"]
+    manifest = meta.get("manifest")
+    if not isinstance(manifest, dict):
+        return [f"step_{step}: no integrity manifest in meta.json "
+                f"(format={meta.get('format')})"]
+    if meta.get("meta_sha256") != _meta_digest(meta):
+        return [f"step_{step}: meta.json self-digest mismatch"]
+    if meta.get("npz_sha256") != _file_digest(npz_path):
+        return [f"step_{step}: arrays.npz whole-file sha256 mismatch"]
+    try:
+        npz = np.load(npz_path)
+    except Exception as e:  # truncated/garbled zip container
+        return [f"step_{step}: arrays.npz unreadable ({e})"]
+    try:
+        names = set(npz.files)
+        expect = set(manifest)
+        if names != expect:
+            problems.append(
+                f"step_{step}: array set mismatch "
+                f"(missing={sorted(expect - names)}, "
+                f"unexpected={sorted(names - expect)})")
+        if meta.get("n_arrays") != len(manifest):
+            problems.append(f"step_{step}: n_arrays={meta.get('n_arrays')} "
+                            f"!= manifest size {len(manifest)}")
+        for name in sorted(expect & names):
+            ent = manifest[name]
+            try:
+                arr = npz[name]
+            except Exception as e:  # per-member decompression/CRC failure
+                problems.append(f"step_{step}: array {name} unreadable "
+                                f"({e})")
+                continue
+            if list(arr.shape) != list(ent["shape"]):
+                problems.append(f"step_{step}: {name} shape {list(arr.shape)}"
+                                f" != manifest {ent['shape']}")
+            elif str(arr.dtype) != ent["dtype"]:
+                problems.append(f"step_{step}: {name} dtype {arr.dtype} "
+                                f"!= manifest {ent['dtype']}")
+            elif _array_digest(arr) != ent["sha256"]:
+                problems.append(f"step_{step}: {name} sha256 mismatch")
+    finally:
+        npz.close()
+    return problems
+
+
+def quarantine_checkpoint(ckpt_dir: str, step: int, reason: str,
+                          event_log: Any = None) -> Optional[str]:
+    """Move a corrupt/incomplete ``step_<step>`` aside as
+    ``corrupt.<step>.<nonce>`` so it is never again selected as the newest
+    step (and never GC'd by the keep-N sweep — kept for forensics).
+    Returns the quarantine path, or None if the step dir vanished."""
+    src = os.path.join(ckpt_dir, f"step_{step}")
+    if not os.path.isdir(src):
+        return None
+    dst = os.path.join(ckpt_dir, f"corrupt.{step}.{uuid.uuid4().hex[:8]}")
+    os.replace(src, dst)
+    log.warning("quarantined corrupt checkpoint step %d -> %s (%s)",
+                step, os.path.basename(dst), reason)
+    if event_log is not None:
+        event_log.emit("quarantine", step=step, cause=reason,
+                       path=os.path.basename(dst))
+    return dst
+
+
+def latest_valid_step(ckpt_dir: str, event_log: Any = None) -> Optional[int]:
+    """Newest step that passes ``verify_checkpoint``, quarantining every
+    newer step that does not — including step dirs whose payload files are
+    missing outright (e.g. a deleted ``meta.json``), which
+    ``list_checkpoints`` cannot even list.  Returns None when nothing
+    verifies."""
+    if not os.path.isdir(ckpt_dir):
+        return None
+    _recover_staging(ckpt_dir)
+    listed = set(list_checkpoints(ckpt_dir))
+    all_steps = sorted(int(m.group(1)) for name in os.listdir(ckpt_dir)
+                       if (m := _STEP_RE.match(name)))
+    for step in reversed(all_steps):
+        problems = ([f"step_{step}: incomplete payload"]
+                    if step not in listed
+                    else verify_checkpoint(ckpt_dir, step))
+        if not problems:
+            return step
+        quarantine_checkpoint(ckpt_dir, step, "; ".join(problems),
+                              event_log=event_log)
+    return None
+
+
 def restore_checkpoint(ckpt_dir: str, like: Any,
                        step: Optional[int] = None,
-                       shardings: Any = None) -> Tuple[Any, dict]:
-    """Restore into the structure of ``like``.  If ``shardings`` (a pytree
-    of NamedSharding matching ``like``) is given, arrays are placed
-    sharded — this is the elastic re-shard path."""
+                       shardings: Any = None,
+                       verify: bool = True,
+                       event_log: Any = None) -> Tuple[Any, dict]:
+    """Restore into the structure of ``like``.
+
+    With ``step=None`` the newest checkpoint that passes integrity
+    verification is selected: corrupt or incomplete newer steps are
+    quarantined (``corrupt.<step>.<nonce>``) and the walk continues to the
+    previous step — ``FileNotFoundError`` only when NOTHING verifies.  An
+    explicitly requested ``step`` that fails verification raises
+    ``CheckpointCorruptError`` (after quarantining it).  The saved treedef
+    is compared against ``like``'s — a mismatch raises ``ValueError``
+    rather than scattering arrays into the wrong slots.
+
+    If ``shardings`` (a pytree of NamedSharding matching ``like``) is
+    given, arrays are placed sharded — this is the elastic re-shard path.
+    ``verify=False`` skips hashing (trusted local reads); the structural
+    checks still run.
+    """
     if os.path.isdir(ckpt_dir):
         _recover_staging(ckpt_dir)
     if step is None:
-        step = latest_step(ckpt_dir)
+        if verify:
+            step = latest_valid_step(ckpt_dir, event_log=event_log)
+        else:
+            step = latest_step(ckpt_dir)
         if step is None:
-            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+            raise FileNotFoundError(f"no valid checkpoints in {ckpt_dir}")
+    elif verify:
+        problems = verify_checkpoint(ckpt_dir, step)
+        if problems:
+            quarantine_checkpoint(ckpt_dir, step, "; ".join(problems),
+                                  event_log=event_log)
+            raise CheckpointCorruptError(
+                f"checkpoint step {step} failed verification: "
+                + "; ".join(problems))
     d = os.path.join(ckpt_dir, f"step_{step}")
     with open(os.path.join(d, "meta.json")) as f:
         meta = json.load(f)
     npz = np.load(os.path.join(d, "arrays.npz"))
     flat_like, treedef = jax.tree_util.tree_flatten(like)
-    assert meta["n_arrays"] == len(flat_like), "structure mismatch"
+    if meta["n_arrays"] != len(flat_like):
+        raise ValueError(
+            f"structure mismatch: checkpoint step {step} holds "
+            f"{meta['n_arrays']} arrays, caller structure has "
+            f"{len(flat_like)}")
+    saved_treedef = meta.get("treedef")
+    if saved_treedef is not None and saved_treedef != str(treedef):
+        raise ValueError(
+            f"structure mismatch: checkpoint step {step} treedef\n  "
+            f"{saved_treedef}\ndoes not match caller structure\n  "
+            f"{treedef}")
     flat = [npz[f"a{i}"] for i in range(len(flat_like))]
     if shardings is not None:
         flat_sh = jax.tree_util.tree_flatten(shardings)[0]

@@ -1,4 +1,5 @@
-"""Fault tolerance: NaN-skip accounting, auto-restore, straggler notes.
+"""Fault tolerance: NaN-skip accounting, recovery orchestration, the
+structured fault-event log, and straggler detection.
 
 In-step NaN/inf guarding lives in the jitted train step (train/step.py);
 this module is the host-side policy around it:
@@ -7,36 +8,64 @@ this module is the host-side policy around it:
   ``max_skips`` in a row, roll back to the latest checkpoint (loss-scale
   blowups, corrupt batches).
 * ``run_with_recovery``: wraps the training loop; on ANY exception
-  (device loss, preemption signal) it restores the latest checkpoint and
-  resumes — on a real cluster the scheduler restarts the binary and
-  ``resume-latest`` in launch/train.py covers the process-death case.
-* **Straggler mitigation** (documented policy, host-side): the launcher
-  monitors per-step wall time across hosts; a host exceeding p99 x 1.5
-  for ``k`` consecutive steps is cold-swapped — its replacement restores
-  from the latest checkpoint (topology-independent restore makes this a
-  plain resume).  With single-controller JAX this is a scheduler-level
-  action, not in-graph.
+  (device loss, preemption signal) it sleeps an exponential backoff, then
+  re-invokes the loop with ``RESUME_LATEST`` so the driver restores the
+  newest VALID checkpoint and rewinds its loop/loader/schedule state
+  coherently (launch/train.py).  Restarts are budgeted over a sliding
+  window — a crash loop exhausts the budget and re-raises instead of
+  spinning hot.  On a real cluster the scheduler restarts the binary and
+  the driver's automatic resume covers the process-death case (the chaos
+  harness exercises that path too, including onto a different shard
+  count).
+* ``FaultEventLog``: append-only JSONL observability surface — every
+  skip / rollback / restart / quarantine / slow-step event lands here
+  with step, cause, and wall time (docs/fault.md documents the schema).
+* ``StragglerDetector``: per-step wall-time watchdog.  A step exceeding
+  ``factor`` x the rolling median for ``k`` consecutive steps emits a
+  ``slow_step`` event.  Remediation stays a scheduler-level action
+  (cold-swap + topology-independent restore, train/checkpoint.py) — with
+  single-controller JAX it cannot be in-graph — but the detection and
+  the event trail are implemented here, not just documented.
+
+The deterministic fault INJECTION side (what makes all of this testable)
+lives in train/chaos.py.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import json
 import logging
-from typing import Any, Callable, Optional
+import os
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, List, Optional
 
 log = logging.getLogger("repro.fault")
 
-__all__ = ["FaultPolicy", "run_with_recovery"]
+__all__ = ["FaultPolicy", "run_with_recovery", "RESUME_LATEST",
+           "FaultEventLog", "StragglerDetector"]
+
+# Resume-intent sentinel run_with_recovery passes to the training loop
+# after a failure: "restore the newest valid checkpoint" (as opposed to
+# ``None`` — a cold start that may still auto-resume if the driver finds
+# checkpoints on disk).  Exported so drivers compare against the named
+# constant instead of a magic ``-1``.
+RESUME_LATEST = -1
 
 
 @dataclasses.dataclass
 class FaultPolicy:
+    """Host-side skip accounting around the train step's NaN guard."""
+
     max_consecutive_skips: int = 5
     consecutive_skips: int = 0
     total_skips: int = 0
 
     def on_metrics(self, metrics: dict) -> bool:
-        """Returns True when a rollback should happen."""
+        """Feed one step's metrics; returns True when a rollback should
+        happen (``max_consecutive_skips`` skipped steps in a row)."""
         skipped = bool(metrics.get("skipped", 0.0))
         if skipped:
             self.consecutive_skips += 1
@@ -48,22 +77,144 @@ class FaultPolicy:
         return self.consecutive_skips >= self.max_consecutive_skips
 
     def reset(self) -> None:
+        """Clear the consecutive-skip counter after a recovery action
+        (rollback or restart); lifetime ``total_skips`` is kept."""
         self.consecutive_skips = 0
 
 
+class FaultEventLog:
+    """Append-only JSONL fault-event log (the observability surface).
+
+    Each ``emit`` appends one JSON object: ``{"t": <wall time>,
+    "kind": ..., "step": ..., "cause": ..., **fields}``.  Events are also
+    kept in ``self.events`` for in-process inspection (tests, summaries).
+    ``path=None`` keeps the log memory-only.  Thread-safe; writes are
+    line-buffered appends so a crash loses at most the current line.
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.events: List[dict] = []
+        self._lock = threading.Lock()
+        if path:
+            os.makedirs(os.path.dirname(os.path.abspath(path)),
+                        exist_ok=True)
+
+    def emit(self, kind: str, step: Optional[int] = None,
+             cause: Optional[str] = None, **fields: Any) -> dict:
+        """Record one fault event; returns the event dict."""
+        ev = {"t": time.time(), "kind": kind}
+        if step is not None:
+            ev["step"] = int(step)
+        if cause is not None:
+            ev["cause"] = cause
+        ev.update(fields)
+        with self._lock:
+            self.events.append(ev)
+            if self.path:
+                with open(self.path, "a") as f:
+                    f.write(json.dumps(ev) + "\n")
+        return ev
+
+    def kinds(self) -> List[str]:
+        """The kinds of all events emitted so far, in order."""
+        return [ev["kind"] for ev in self.events]
+
+
+class StragglerDetector:
+    """Rolling-median slow-step watchdog.
+
+    ``observe(step, dt)`` returns True (and emits a ``slow_step`` event)
+    when ``dt`` exceeds ``factor`` x the rolling median of the last
+    ``window`` step times for ``patience`` consecutive steps.  The first
+    ``min_samples`` observations only warm the window up — compile-time
+    spikes on step 0 never trip it.
+    """
+
+    def __init__(self, factor: float = 1.5, window: int = 50,
+                 patience: int = 1, min_samples: int = 5,
+                 event_log: Optional[FaultEventLog] = None):
+        self.factor = factor
+        self.patience = patience
+        self.min_samples = min_samples
+        self.event_log = event_log
+        self._times: deque = deque(maxlen=window)
+        self._consecutive = 0
+
+    def observe(self, step: int, dt: float) -> bool:
+        """Feed one step's wall time; True when the straggler threshold
+        has been met for ``patience`` consecutive steps."""
+        times = sorted(self._times)
+        median = times[len(times) // 2] if times else None
+        self._times.append(dt)
+        if median is None or len(times) < self.min_samples:
+            return False
+        if dt > self.factor * median:
+            self._consecutive += 1
+            if self._consecutive >= self.patience:
+                log.warning("slow step %d: %.3fs > %.1fx median %.3fs",
+                            step, dt, self.factor, median)
+                if self.event_log is not None:
+                    self.event_log.emit("slow_step", step=step,
+                                        cause=f"{dt:.4f}s vs median "
+                                              f"{median:.4f}s",
+                                        dt=dt, median=median)
+                return True
+        else:
+            self._consecutive = 0
+        return False
+
+
 def run_with_recovery(train_loop: Callable[[Optional[int]], Any],
-                      max_restarts: int = 3) -> Any:
-    """Run ``train_loop(resume_step)``; on exception, retry from the
-    latest checkpoint up to ``max_restarts`` times."""
-    restarts = 0
+                      max_restarts: int = 3,
+                      backoff_base: float = 0.5,
+                      backoff_max: float = 30.0,
+                      restart_window: float = 600.0,
+                      event_log: Optional[FaultEventLog] = None,
+                      sleep: Callable[[float], None] = time.sleep) -> Any:
+    """Run ``train_loop(resume)`` to completion, restarting on failure.
+
+    The first invocation passes ``resume=None`` (cold start); every
+    restart passes ``RESUME_LATEST``, the explicit instruction to restore
+    the newest valid checkpoint.  Between restarts an exponential backoff
+    (``backoff_base * 2**(attempt-1)``, capped at ``backoff_max``) is
+    slept via the injectable ``sleep`` — no hot retry loop.  Restarts are
+    budgeted over a sliding ``restart_window`` seconds: more than
+    ``max_restarts`` failures inside the window re-raises the last
+    exception (a crash loop must surface, not burn the cluster), while
+    occasional faults spread over a long run never exhaust the budget.
+    ``KeyboardInterrupt`` always propagates.  Emits ``restart`` /
+    ``restart_budget_exhausted`` events to ``event_log``."""
+    recent: deque = deque()
+    attempt = 0
+    resume: Optional[int] = None
     while True:
         try:
-            return train_loop(None if restarts == 0 else -1)
+            return train_loop(resume)
         except KeyboardInterrupt:
             raise
         except Exception as e:          # noqa: BLE001 — any device fault
-            restarts += 1
-            if restarts > max_restarts:
+            now = time.monotonic()
+            recent.append(now)
+            while recent and now - recent[0] > restart_window:
+                recent.popleft()
+            attempt += 1
+            if len(recent) > max_restarts:
+                log.error("restart budget exhausted: %d failures within "
+                          "%.0fs window", len(recent), restart_window)
+                if event_log is not None:
+                    event_log.emit("restart_budget_exhausted",
+                                   cause=repr(e),
+                                   failures_in_window=len(recent))
                 raise
-            log.error("training loop failed (%s); restart %d/%d from "
-                      "latest checkpoint", e, restarts, max_restarts)
+            backoff = min(backoff_base * (2.0 ** (attempt - 1)),
+                          backoff_max)
+            log.error("training loop failed (%s); restart %d (%d/%d in "
+                      "window) from latest checkpoint after %.2fs backoff",
+                      e, attempt, len(recent), max_restarts, backoff)
+            if event_log is not None:
+                event_log.emit("restart", cause=repr(e), attempt=attempt,
+                               backoff_s=backoff)
+            if backoff > 0:
+                sleep(backoff)
+            resume = RESUME_LATEST

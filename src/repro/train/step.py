@@ -10,7 +10,13 @@
   * a NaN/inf GUARD: if the gradient global-norm is non-finite the update
     is skipped entirely (params and opt state pass through) and
     ``metrics["skipped"]`` flags it — the fault-tolerance layer counts
-    these (train/fault.py).
+    these (train/fault.py),
+  * an optional chaos port (``chaos_guard=True``): the step takes a third
+    traced ``poison`` scalar and multiplies the gradients by NaN whenever
+    it is nonzero — an in-graph fault injection that exercises the guard
+    without recompiling (train/chaos.py plans WHEN it fires).  With
+    ``poison == 0`` the factor is exactly 1.0, so the arithmetic is
+    bit-identical to a chaos-free step.
 """
 
 from __future__ import annotations
@@ -35,8 +41,19 @@ def _split_microbatches(batch: Any, accum_steps: int) -> Any:
 
 def make_train_step(loss_fn: Callable, opt_cfg: OptimizerConfig, *,
                     accum_steps: int = 1,
-                    nan_guard: bool = True) -> Callable:
-    """loss_fn(params, batch) -> (loss, metrics)."""
+                    nan_guard: bool = True,
+                    chaos_guard: bool = False) -> Callable:
+    """loss_fn(params, batch) -> (loss, metrics).
+
+    With ``chaos_guard=True`` the returned step is
+    ``step(state, batch, poison)`` where ``poison`` is a traced scalar:
+    nonzero poisons the gradients with NaN IN-GRAPH (the jitted step stays
+    compiled across healthy and poisoned steps), zero multiplies by an
+    exact 1.0 — the fault-injection port of train/chaos.py.  Requires
+    ``nan_guard`` so the poisoned update is skipped, not applied."""
+    if chaos_guard and not nan_guard:
+        raise ValueError("chaos_guard requires nan_guard (a poisoned "
+                         "update must be skipped, not applied)")
 
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
@@ -60,8 +77,20 @@ def make_train_step(loss_fn: Callable, opt_cfg: OptimizerConfig, *,
         metrics = jax.tree.map(lambda m: m[-1], metrics)
         return loss_sum * scale, metrics, grads
 
-    def step(state: dict, batch: Any):
+    def step(state: dict, batch: Any, poison: Any = None):
         loss, metrics, grads = compute_grads(state["params"], batch)
+        if chaos_guard:
+            if poison is None:
+                raise TypeError("chaos_guard step requires the poison "
+                                "argument: step(state, batch, poison)")
+            # nonzero poison -> NaN factor -> non-finite grad norm -> the
+            # nan_guard below skips the update; zero poison multiplies by
+            # an EXACT 1.0 so healthy steps are bit-identical to a
+            # chaos-free build of the same step.
+            factor = jnp.where(jnp.asarray(poison) != 0,
+                               jnp.float32(jnp.nan), jnp.float32(1.0))
+            grads = jax.tree.map(lambda g: g * factor.astype(g.dtype),
+                                 grads)
         new_params, new_opt, info = adamw_update(
             state["params"], grads, state["opt"], opt_cfg)
         metrics = dict(metrics)

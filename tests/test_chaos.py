@@ -1,0 +1,375 @@
+"""Chaos-engineering harness: deterministic fault injection, verified
+checkpoint integrity, quarantine + walk-back, recovery orchestration —
+capped by the single-device parity test: a run that suffers a NaN burst,
+a corrupted checkpoint, AND a preemption must finish bitwise-identical
+to the fault-free run."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.data import DeterministicLoader, TeacherConfig, make_teacher, \
+    teacher_batch
+from repro.launch.train import build_parser, train
+from repro.models import MLPConfig, init_mlp, mlp_loss
+from repro.models import transformer as T
+from repro.optim import OptimizerConfig
+from repro.serve import ServeEngine
+from repro.train import (CheckpointCorruptError, FaultEventLog,
+                         FaultPolicy, RESUME_LATEST, StragglerDetector,
+                         latest_step, latest_valid_step, list_checkpoints,
+                         make_train_state, make_train_step,
+                         restore_checkpoint, run_with_recovery,
+                         save_checkpoint, verify_checkpoint)
+from repro.train.chaos import (CORRUPTION_MODES, ChaosPreemption,
+                               ChaosSchedule, corrupt_checkpoint)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# chaos spec parsing + fire-once semantics
+# ---------------------------------------------------------------------------
+
+def test_chaos_spec_parsing():
+    sched = ChaosSchedule.parse(
+        "nan@13+5; corrupt@18:truncate; preempt@19; slow@3:0.01")
+    kinds = [(e.kind, e.step, e.arg) for e in sched.events]
+    assert ("preempt", 19, None) in kinds
+    assert ("corrupt", 18, "truncate") in kinds
+    assert ("slow", 3, "0.01") in kinds
+    assert [s for k, s, _ in kinds if k == "nan"] == [13, 14, 15, 16, 17]
+
+
+def test_chaos_spec_defaults_and_errors():
+    sched = ChaosSchedule.parse("corrupt@5;slow@2")
+    by_kind = {e.kind: e for e in sched.events}
+    assert by_kind["corrupt"].arg == "bitflip"
+    assert float(by_kind["slow"].arg) > 0
+    for bad in ("explode@3", "nan@x", "corrupt@5:gamma",
+                "preempt@5:arg", "corrupt@5+3", "nan@"):
+        with pytest.raises(ValueError):
+            ChaosSchedule.parse(bad)
+    assert ChaosSchedule.parse("").events == []
+
+
+def test_chaos_events_fire_once():
+    """A fired event stays fired across replayed step numbers — otherwise
+    recovery would re-trigger the same fault forever."""
+    sched = ChaosSchedule.parse("nan@3;preempt@5")
+    assert sched.poison(2) == 0.0
+    assert sched.poison(3) == 1.0
+    assert sched.poison(3) == 0.0            # consumed
+    with pytest.raises(ChaosPreemption):
+        sched.post_step(5, None)
+    sched.post_step(5, None)                 # replay: no second preemption
+    assert sched.remaining() == ()
+
+
+def test_chaos_slow_step_injection_and_detection():
+    log = FaultEventLog()
+    det = StragglerDetector(factor=1.5, min_samples=3, event_log=log)
+    sched = ChaosSchedule.parse("slow@6:0.05")
+    for s in range(8):
+        delay = sched.pre_step(s)
+        flagged = det.observe(s, 0.001 + delay)
+        assert flagged == (s == 6), s
+    assert log.kinds() == ["slow_step"]
+    assert log.events[0]["step"] == 6
+
+
+# ---------------------------------------------------------------------------
+# in-graph poison port
+# ---------------------------------------------------------------------------
+
+def _mlp_setup(width=32):
+    cfg = MLPConfig(n_features=width, n_classes=10)
+    tc = TeacherConfig(width=width)
+    teacher = make_teacher(tc)
+    loader = DeterministicLoader(
+        lambda k, n: teacher_batch(teacher, tc, k, n), 64, seed=1)
+    return cfg, loader
+
+
+def test_chaos_guard_poison_skips_and_healthy_is_bit_identical():
+    cfg, loader = _mlp_setup()
+    ocfg = OptimizerConfig(lr=1e-2, total_steps=10)
+    plain = jax.jit(make_train_step(
+        lambda p, b: mlp_loss(p, b, cfg), ocfg))
+    guarded = jax.jit(make_train_step(
+        lambda p, b: mlp_loss(p, b, cfg), ocfg, chaos_guard=True))
+    state = make_train_state(init_mlp(KEY, cfg))
+    batch = loader.batch_at(0)
+
+    # poison=0: the chaos-guard build is BITWISE the plain build
+    s_plain, _ = plain(state, batch)
+    s_clean, m = guarded(state, batch, 0.0)
+    assert float(m["skipped"]) == 0.0
+    for a, b in zip(jax.tree.leaves(s_plain), jax.tree.leaves(s_clean)):
+        np.testing.assert_array_equal(a, b)
+
+    # poison=1: update skipped, params/opt pass through, step advances
+    s_bad, m = guarded(state, batch, 1.0)
+    assert float(m["skipped"]) == 1.0
+    for a, b in zip(jax.tree.leaves(state["params"]),
+                    jax.tree.leaves(s_bad["params"])):
+        np.testing.assert_array_equal(a, b)
+    assert int(s_bad["step"]) == 1
+
+    with pytest.raises(TypeError, match="poison"):
+        guarded(state, batch)
+    with pytest.raises(ValueError, match="nan_guard"):
+        make_train_step(lambda p, b: mlp_loss(p, b, cfg), ocfg,
+                        chaos_guard=True, nan_guard=False)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integrity: manifest, verify, quarantine, walk-back
+# ---------------------------------------------------------------------------
+
+def _saved_state(d, steps=(10, 20)):
+    cfg, _ = _mlp_setup()
+    state = make_train_state(init_mlp(KEY, cfg))
+    for s in steps:
+        save_checkpoint(d, s, state,
+                        extra={"cursor": {"seed": 1, "step": s}})
+    return state
+
+
+def test_verify_checkpoint_clean_pass_and_manifest(tmp_path):
+    d = str(tmp_path)
+    _saved_state(d)
+    assert verify_checkpoint(d, 20) == []
+    with open(os.path.join(d, "step_20", "meta.json")) as f:
+        meta = json.load(f)
+    assert meta["format"] >= 2 and meta["meta_sha256"]
+    assert set(meta["manifest"]) == {f"a{i}"
+                                     for i in range(meta["n_arrays"])}
+    for ent in meta["manifest"].values():
+        assert set(ent) == {"sha256", "shape", "dtype"}
+
+
+@pytest.mark.parametrize("mode", CORRUPTION_MODES)
+def test_each_corruption_mode_is_caught(tmp_path, mode):
+    d = str(tmp_path)
+    state = _saved_state(d)
+    corrupt_checkpoint(d, mode)
+    if mode == "orphan":
+        # staging debris is not a corruption of step_20 itself: the step
+        # still verifies, the tmp dir must never be (re)published or
+        # picked as a step, and the next save sweeps it
+        assert verify_checkpoint(d, 20) == []
+        assert latest_valid_step(d) == 20
+        save_checkpoint(d, 30, state)
+        assert not [f for f in os.listdir(d) if f.startswith("tmp.")]
+        return
+    assert verify_checkpoint(d, 20) != []
+    # walk-back: 20 quarantined, 10 selected
+    assert latest_valid_step(d) == 10
+    assert any(f.startswith("corrupt.20.") for f in os.listdir(d))
+    restored, extra = restore_checkpoint(d, state)
+    assert extra["cursor"]["step"] == 10
+
+
+def test_any_byte_flip_fails_verification(tmp_path):
+    """Acceptance: corrupting ANY byte of the checkpoint payload makes
+    verify_checkpoint fail — sampled across both files at spread offsets."""
+    d = str(tmp_path)
+    _saved_state(d, steps=(20,))
+    step_dir = os.path.join(d, "step_20")
+    for fname in ("arrays.npz", "meta.json"):
+        path = os.path.join(step_dir, fname)
+        orig = open(path, "rb").read()
+        size = len(orig)
+        for off in {0, 1, size // 3, size // 2, (2 * size) // 3, size - 1}:
+            with open(path, "r+b") as f:
+                f.seek(off)
+                f.write(bytes([orig[off] ^ 0xFF]))
+            assert verify_checkpoint(d, 20) != [], (fname, off)
+            with open(path, "wb") as f:
+                f.write(orig)
+        assert verify_checkpoint(d, 20) == [], fname
+
+
+def test_explicit_restore_of_corrupt_step_raises_and_quarantines(tmp_path):
+    d = str(tmp_path)
+    state = _saved_state(d)
+    corrupt_checkpoint(d, "bitflip", step=20)
+    with pytest.raises(CheckpointCorruptError):
+        restore_checkpoint(d, state, step=20)
+    assert any(f.startswith("corrupt.20.") for f in os.listdir(d))
+    # and quarantined steps never reappear via the unverified lister
+    assert latest_step(d) == 10
+
+
+def test_quarantined_dirs_survive_keep_n_gc(tmp_path):
+    d = str(tmp_path)
+    state = _saved_state(d, steps=(10,))
+    corrupt_checkpoint(d, "bitflip", step=10)
+    assert latest_valid_step(d) is None        # quarantined, nothing valid
+    for s in (20, 30, 40, 50):
+        save_checkpoint(d, s, state, keep=3)
+    assert list_checkpoints(d) == [30, 40, 50]
+    assert any(f.startswith("corrupt.10.") for f in os.listdir(d))
+
+
+def test_treedef_mismatch_refuses_restore(tmp_path):
+    d = str(tmp_path)
+    cfg, _ = _mlp_setup()
+    state = make_train_state(init_mlp(KEY, cfg))
+    save_checkpoint(d, 5, state)
+    flat = jax.tree_util.tree_flatten(state)[0]
+    wrong = {f"k{i}": x for i, x in enumerate(flat)}  # same leaf count
+    with pytest.raises(ValueError, match="treedef"):
+        restore_checkpoint(d, wrong, step=5)
+
+
+# ---------------------------------------------------------------------------
+# recovery orchestration
+# ---------------------------------------------------------------------------
+
+def test_run_with_recovery_backoff_and_resume_intent():
+    calls, slept = [], []
+
+    def loop(resume):
+        calls.append(resume)
+        if len(calls) < 3:
+            raise ChaosPreemption("boom")
+        return "done"
+
+    log = FaultEventLog()
+    assert run_with_recovery(loop, max_restarts=3, backoff_base=0.5,
+                             event_log=log, sleep=slept.append) == "done"
+    assert calls == [None, RESUME_LATEST, RESUME_LATEST]
+    assert slept == [0.5, 1.0]                 # exponential backoff
+    assert log.kinds() == ["restart", "restart"]
+
+
+def test_run_with_recovery_budget_exhaustion_reraises():
+    def loop(resume):
+        raise RuntimeError("hard fault")
+
+    log = FaultEventLog()
+    with pytest.raises(RuntimeError, match="hard fault"):
+        run_with_recovery(loop, max_restarts=2, event_log=log,
+                          sleep=lambda s: None)
+    assert log.kinds() == ["restart", "restart",
+                           "restart_budget_exhausted"]
+
+    def interrupted(resume):
+        raise KeyboardInterrupt
+
+    with pytest.raises(KeyboardInterrupt):     # never swallowed
+        run_with_recovery(interrupted, sleep=lambda s: None)
+
+
+def test_fault_event_log_jsonl(tmp_path):
+    path = str(tmp_path / "sub" / "events.jsonl")
+    log = FaultEventLog(path)
+    log.emit("skip", step=3, cause="non-finite grads")
+    log.emit("restart", attempt=1, backoff_s=0.5)
+    lines = [json.loads(l) for l in open(path)]
+    assert [e["kind"] for e in lines] == ["skip", "restart"]
+    assert lines[0]["step"] == 3 and lines[0]["t"] > 0
+    assert lines[1]["backoff_s"] == 0.5
+
+
+def test_loader_resume_hardening():
+    cfg, loader = _mlp_setup()
+    assert loader.resume({"seed": 7, "step": 42})
+    assert loader.cursor.seed == 7 and loader.cursor.step == 42
+    # old/partial checkpoint formats degrade to a fresh cursor, no crash
+    assert not loader.resume(None)
+    assert not loader.resume({"step": 5})      # missing seed
+    assert not loader.resume("garbage")
+    assert loader.cursor.seed == 7             # kept the last good cursor
+    assert loader.state_dict() == loader.cursor.state_dict()
+
+
+# ---------------------------------------------------------------------------
+# serve engine: non-finite logits guard
+# ---------------------------------------------------------------------------
+
+def test_serve_guards_non_finite_logits():
+    cfg = get_smoke("qwen3-1.7b")
+    params = T.init_model(KEY, cfg)
+    eng = ServeEngine(cfg=cfg, params=params, max_len=16,
+                      cache_dtype=jnp.float32)
+    prompts = jax.random.randint(KEY, (2, 4), 0, cfg.vocab_size)
+    out, flags = eng.generate(prompts, max_new_tokens=4, return_flags=True)
+    assert not bool(flags.any())               # healthy model: no flags
+
+    # poison the params: every logit row goes NaN
+    bad_params = jax.tree.map(lambda x: x * jnp.nan, params)
+    beng = ServeEngine(cfg=cfg, params=bad_params, max_len=16,
+                       cache_dtype=jnp.float32)
+    out, flags = beng.generate(prompts, max_new_tokens=4,
+                               return_flags=True)
+    assert bool(flags.all())                   # every request flagged
+    np.testing.assert_array_equal(out, 0)      # deterministic fallback
+    # sampling path too: in-range fallback instead of NaN categoricals
+    out, flags = beng.generate(prompts, max_new_tokens=4, temperature=0.8,
+                               key=KEY, return_flags=True)
+    assert bool(flags.all())
+    assert bool(((out >= 0) & (out < cfg.vocab_size)).all())
+
+
+# ---------------------------------------------------------------------------
+# end-to-end single-device chaos parity (the acceptance test)
+# ---------------------------------------------------------------------------
+
+def _driver_args(ckpt_dir, extra=()):
+    return build_parser().parse_args(
+        ["--smoke", "--steps", "24", "--batch", "4", "--seq", "16",
+         "--ckpt-every", "6", "--log-every", "6", "--backoff-base", "0.0",
+         "--ckpt-dir", ckpt_dir, *extra])
+
+
+def test_single_device_chaos_parity(tmp_path):
+    """One run suffers a 5-step NaN burst (→ fault-policy rollback), a
+    bit-flipped newest checkpoint (→ quarantine + walk-back on restore),
+    and an injected preemption (→ run_with_recovery restart) — and must
+    finish BITWISE-identical to the fault-free run."""
+    clean = train(_driver_args(str(tmp_path / "clean")))
+
+    chaos = ChaosSchedule.parse("nan@13+5;corrupt@17:bitflip;preempt@18")
+    chaos_dir = str(tmp_path / "chaos")
+    state = train(_driver_args(chaos_dir), chaos=chaos)
+
+    for a, b in zip(jax.tree.leaves(clean), jax.tree.leaves(state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    assert chaos.remaining() == ()             # every fault actually fired
+    names = os.listdir(chaos_dir)
+    assert any(n.startswith("corrupt.18.") for n in names)  # quarantined
+    assert verify_checkpoint(chaos_dir, 24) == []
+    kinds = [json.loads(l)["kind"]
+             for l in open(os.path.join(chaos_dir, "events.jsonl"))]
+    assert kinds.count("skip") == 5            # the NaN burst
+    assert "rollback" in kinds                 # fault-policy rewind
+    assert "quarantine" in kinds               # corrupt ckpt walked past
+    assert "restart" in kinds                  # recovery orchestration
+    assert kinds.index("rollback") < kinds.index("restart")
+
+
+def test_rollback_without_any_checkpoint_restarts_fresh(tmp_path):
+    """The old driver crashed with FileNotFoundError when the fault
+    policy tripped before the first save (or with no --ckpt-dir at all);
+    now it restarts the loop from scratch and still finishes."""
+    # burst of 5 at steps 2..6, first save would be at step 6
+    chaos = ChaosSchedule.parse("nan@2+5")
+    state = train(_driver_args(str(tmp_path / "ck"),
+                               extra=["--steps", "8", "--ckpt-every",
+                                      "100"]), chaos=chaos)
+    assert int(state["step"]) == 8
+    # no checkpoint dir at all exercises the same guard
+    args = build_parser().parse_args(
+        ["--smoke", "--steps", "8", "--batch", "4", "--seq", "16",
+         "--backoff-base", "0.0"])
+    state = train(args, chaos=ChaosSchedule.parse("nan@2+5"))
+    assert int(state["step"]) == 8

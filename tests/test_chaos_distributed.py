@@ -1,0 +1,280 @@
+"""Chaos parity under the forced-8-device SHARDED executor, with a
+shard-count change across the restart (the elastic-restart acceptance).
+
+Like tests/test_distributed.py, the multi-device half runs out of
+process: the parent test re-execs pytest on this file with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` and a worker env
+marker (conftest forbids forcing devices globally).
+
+Worker scenario — one training job, three lives:
+
+  1. 8-way sharded run hit by a 2-step NaN burst (fault-policy rollback
+     to the last checkpoint), then a truncated newest checkpoint, then an
+     injected preemption with a zero restart budget — the process "dies"
+     (ChaosPreemption propagates, as a real preemption kills the binary).
+  2. The re-launch resumes on a **4-way** mesh (the elastic restart:
+     ``schedule_shards=8`` pins the two_level schedule, ``n_shards=4``
+     re-executes it on half the devices).  The restore quarantines the
+     truncated step and walks back to the newest valid one.
+  3. A fault-free 8-way run of the same job in a separate directory.
+
+Lives 1+2 must end BITWISE-identical to life 3.  This works at n=256
+because every row-reduction the executor and the XLA fallback perform
+has minor width >= 16 (n_local in {32, 64}, pair width in {16, 32}), the
+regime where XLA CPU reductions are bitwise stage-order independent —
+the same analysis behind the elastic-executor parity suite.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+WORKER_ENV = "SPM_CHAOS_WORKER"
+N_DEV = 8
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _in_worker() -> bool:
+    return os.environ.get(WORKER_ENV) == "1"
+
+
+# ---------------------------------------------------------------------------
+# device-free: the elastic schedule itself (both processes)
+# ---------------------------------------------------------------------------
+
+def test_schedule_shards_pins_the_operator_across_executor_widths():
+    """``schedule_shards`` decouples WHAT the operator computes (the
+    two_level schedule, built for S shards) from HOW it executes
+    (``n_shards`` devices): every pow2 divisor executes the same stride
+    sequence, so checkpoints restart onto any such mesh.  At pow2 ``n``
+    the two_level cycle happens to coincide across shard counts; odd
+    local factors (n=96) are where the pin is load-bearing."""
+    import dataclasses
+
+    from repro.core.spm import SPMConfig
+
+    base = SPMConfig(n=96, n_stages=8, schedule="two_level", n_shards=8)
+    strides = base.pairing.strides()
+    for m in (4, 2, 1):
+        elastic = dataclasses.replace(base, n_shards=m, schedule_shards=8)
+        assert elastic.pairing.strides() == strides, m
+    # without the pin, shard count changes the schedule (the old coupling)
+    assert SPMConfig(n=96, n_stages=8, schedule="two_level",
+                     n_shards=4).pairing.strides() != strides
+    # the parity harness below rides the pow2 coincidence AND the pin
+    p256 = SPMConfig(n=256, n_stages=12, schedule="two_level",
+                     n_shards=8).pairing.strides()
+    assert dataclasses.replace(
+        SPMConfig(n=256, n_stages=12, schedule="two_level", n_shards=4),
+        schedule_shards=8).pairing.strides() == p256
+
+
+def test_elastic_schedule_stays_executor_eligible():
+    import dataclasses
+
+    from repro.core.spm import SPMConfig
+    from repro.parallel.spm_shard import sharded_eligible
+
+    base = SPMConfig(n=256, n_stages=12, schedule="two_level", n_shards=8,
+                     backward="custom")
+    for m in (8, 4, 2):
+        cfg = dataclasses.replace(base, n_shards=m, schedule_shards=8)
+        assert sharded_eligible(cfg), m
+
+
+# ---------------------------------------------------------------------------
+# parent: re-exec under forced device count
+# ---------------------------------------------------------------------------
+
+if not _in_worker():
+
+    def test_chaos_distributed_suite_in_subprocess():
+        env = dict(os.environ)
+        env[WORKER_ENV] = "1"
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + f" --xla_force_host_platform_device_count="
+                              f"{N_DEV}")
+        env["PYTHONPATH"] = (os.path.join(REPO, "src") + os.pathsep
+                             + env.get("PYTHONPATH", ""))
+        r = subprocess.run(
+            [sys.executable, "-m", "pytest", "-q", "-p", "no:cacheprovider",
+             os.path.abspath(__file__)],
+            capture_output=True, text=True, timeout=1500, cwd=REPO, env=env)
+        assert r.returncode == 0, (
+            f"chaos multi-device worker failed (rc={r.returncode}):\n"
+            f"--- stdout ---\n{r.stdout[-6000:]}\n"
+            f"--- stderr ---\n{r.stderr[-2000:]}")
+        assert "passed" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# worker: sharded training with injected faults + elastic restart
+# ---------------------------------------------------------------------------
+
+else:
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    from repro.core.spm import SPMConfig, init_spm, spm_apply
+    from repro.optim import OptimizerConfig
+    from repro.parallel.ctx import activation_sharding
+    from repro.train import (FaultEventLog, FaultPolicy, latest_valid_step,
+                             make_train_state, make_train_step,
+                             restore_checkpoint, run_with_recovery,
+                             save_checkpoint, verify_checkpoint)
+    from repro.train.chaos import ChaosPreemption, ChaosSchedule
+
+    KEY = jax.random.PRNGKey(0)
+    N, L, BATCH, STEPS, CKPT_EVERY = 256, 12, 8, 12, 3
+
+    def test_worker_sees_forced_devices():
+        assert jax.device_count() == N_DEV
+
+    def _mesh(shards: int) -> Mesh:
+        return Mesh(np.asarray(jax.devices()[:shards]).reshape(shards),
+                    ("model",))
+
+    def _cfg(exec_shards: int) -> SPMConfig:
+        # schedule pinned to 8 shards; executed on exec_shards devices
+        return SPMConfig(n=N, n_stages=L, schedule="two_level",
+                         n_shards=exec_shards, schedule_shards=8,
+                         backward="custom", use_kernel=False)
+
+    def _batch_at(step: int) -> dict:
+        k = jax.random.fold_in(KEY, step)
+        kx, ky = jax.random.split(k)
+        return {"x": jax.random.normal(kx, (BATCH, N)),
+                "y": jax.random.normal(ky, (BATCH, N))}
+
+    def _run(ckpt_dir, exec_shards, chaos=None, event_log=None,
+             max_restarts=0):
+        """The training job: SPM regression under the sharded executor,
+        with the same rollback / verified-restore / recovery wiring as
+        launch/train.py (which owns the single-mesh case — the elastic
+        re-shard across process death is what this loop adds)."""
+        cfg = _cfg(exec_shards)
+        mesh = _mesh(exec_shards)
+        event_log = event_log or FaultEventLog()
+
+        def loss_fn(p, batch):
+            yp = spm_apply(p, batch["x"], cfg)
+            # pull the prediction replicated BEFORE the reduction: the
+            # loss/grad reductions then run at identical widths on every
+            # mesh, keeping the math bitwise mesh-independent
+            yp = jax.lax.with_sharding_constraint(
+                yp, NamedSharding(mesh, P(None, None)))
+            loss = jnp.mean((yp - batch["y"]) ** 2)
+            return loss, {"loss": loss}
+
+        step_fn = jax.jit(make_train_step(
+            loss_fn, OptimizerConfig(lr=1e-2, total_steps=STEPS),
+            chaos_guard=True))
+
+        def try_restore():
+            state = make_train_state(init_spm(KEY, _cfg(8)))
+            step = latest_valid_step(ckpt_dir, event_log=event_log)
+            if step is None:
+                return state, 0
+            state, extra = restore_checkpoint(ckpt_dir, state, step=step,
+                                              event_log=event_log)
+            return state, int(extra["cursor"]["step"])
+
+        def loop(resume):
+            state, s = try_restore()
+            policy = FaultPolicy(max_consecutive_skips=2)
+            with activation_sharding(mesh, shard_feature=True):
+                while s < STEPS:
+                    poison = chaos.poison(s) if chaos else 0.0
+                    state, metrics = step_fn(state, _batch_at(s), poison)
+                    metrics = jax.device_get(metrics)
+                    if policy.on_metrics(metrics):
+                        event_log.emit("rollback", step=s)
+                        state, s = try_restore()
+                        policy.reset()
+                        continue
+                    s += 1
+                    if s % CKPT_EVERY == 0:
+                        save_checkpoint(
+                            ckpt_dir, s, state,
+                            extra={"cursor": {"seed": 0, "step": s}})
+                    if chaos:
+                        chaos.post_step(s - 1, ckpt_dir,
+                                        event_log=event_log)
+            return state
+
+        return run_with_recovery(loop, max_restarts=max_restarts,
+                                 event_log=event_log,
+                                 sleep=lambda _: None)
+
+    def test_sharded_chaos_parity_with_elastic_restart(tmp_path):
+        clean_dir, chaos_dir = str(tmp_path / "c0"), str(tmp_path / "c1")
+
+        # life 3 first: the fault-free 8-way reference
+        ref = _run(clean_dir, exec_shards=8)
+
+        # life 1: 8-way, NaN burst at 4-5 (rollback to step_3), newest
+        # checkpoint truncated after step 8 (= step_9 on disk), preempted
+        # after step 9 with a zero restart budget -> the "process" dies
+        log = FaultEventLog(os.path.join(chaos_dir, "events.jsonl"))
+        chaos = ChaosSchedule.parse(
+            "nan@4+2;corrupt@8:truncate;preempt@9")
+        with pytest.raises(ChaosPreemption):
+            _run(chaos_dir, exec_shards=8, chaos=chaos, event_log=log)
+        assert chaos.remaining() == ()
+
+        # life 2: elastic re-launch on a 4-WAY mesh resumes the same
+        # schedule; the truncated step_9 is quarantined, the restore
+        # walks back to step_6, and the job runs to completion
+        state = _run(chaos_dir, exec_shards=4, event_log=log)
+
+        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+        names = os.listdir(chaos_dir)
+        assert any(n.startswith("corrupt.9.") for n in names)
+        assert verify_checkpoint(chaos_dir, STEPS) == []
+        kinds = [json.loads(l)["kind"]
+                 for l in open(os.path.join(chaos_dir, "events.jsonl"))]
+        assert "rollback" in kinds
+        assert "quarantine" in kinds
+        assert "restart_budget_exhausted" in kinds
+
+    def test_elastic_execution_is_bitwise_across_mesh_widths(tmp_path):
+        """The foundation under the parity test, isolated: the SAME
+        checkpointed state stepped once on an 8-way, 4-way, and 2-way
+        mesh produces bitwise-identical updates (schedule pinned via
+        ``schedule_shards=8``)."""
+        d = str(tmp_path / "ck")
+        state0 = make_train_state(init_spm(KEY, _cfg(8)))
+        save_checkpoint(d, 0, state0, extra={"cursor": {"seed": 0,
+                                                        "step": 0}})
+        outs = []
+        for shards in (8, 4, 2):
+            cfg = _cfg(shards)
+            mesh = _mesh(shards)
+
+            def loss_fn(p, batch, cfg=cfg, mesh=mesh):
+                yp = spm_apply(p, batch["x"], cfg)
+                yp = jax.lax.with_sharding_constraint(
+                    yp, NamedSharding(mesh, P(None, None)))
+                loss = jnp.mean((yp - batch["y"]) ** 2)
+                return loss, {"loss": loss}
+
+            step_fn = jax.jit(make_train_step(
+                loss_fn, OptimizerConfig(lr=1e-2, total_steps=STEPS)))
+            state, _ = restore_checkpoint(d, state0, step=0)
+            with activation_sharding(mesh, shard_feature=True):
+                for s in range(2):
+                    state, _ = step_fn(state, _batch_at(s))
+            outs.append(jax.device_get(state))
+        for other in outs[1:]:
+            for a, b in zip(jax.tree.leaves(outs[0]),
+                            jax.tree.leaves(other)):
+                np.testing.assert_array_equal(a, b)

@@ -128,6 +128,46 @@ def test_fault_policy_rollback_threshold():
     assert pol.total_skips == 3
 
 
+def test_fault_policy_counts_consecutive_not_total():
+    """A clean step resets the consecutive counter: sporadic skips never
+    trip the rollback, only an unbroken run of them does — and a recovery
+    reset() clears the streak while keeping lifetime accounting."""
+    pol = FaultPolicy(max_consecutive_skips=3)
+    for _ in range(5):                            # alternating skip/clean
+        assert not pol.on_metrics({"skipped": 1.0})
+        assert not pol.on_metrics({"skipped": 0.0})
+    assert pol.total_skips == 5 and pol.consecutive_skips == 0
+    assert not pol.on_metrics({"skipped": 1.0})
+    assert not pol.on_metrics({"skipped": 1.0})
+    pol.reset()                                   # recovery mid-streak
+    assert not pol.on_metrics({"skipped": 1.0})   # streak restarts at 1
+    assert pol.total_skips == 8
+
+
+def test_nan_guard_skips_under_accumulation():
+    """One poisoned microbatch inside an accumulated step must skip the
+    WHOLE update (the non-finite term contaminates the summed grads) —
+    the skipped metric and pass-through hold at accum_steps > 1."""
+    cfg, loader = _mlp_setup(width=32)
+    state = make_train_state(init_mlp(KEY, cfg))
+    step = jax.jit(make_train_step(lambda p, b: mlp_loss(p, b, cfg),
+                                   OptimizerConfig(total_steps=10),
+                                   accum_steps=4))
+    good = loader.batch_at(0)
+    x = np.asarray(good["x"]).copy()
+    x[2] = np.nan                    # one row -> one bad microbatch
+    bad = {"x": jnp.asarray(x), "y": good["y"]}
+    state2, m = step(state, bad)
+    assert float(m["skipped"]) == 1.0
+    for a, b in zip(jax.tree.leaves(state["params"]),
+                    jax.tree.leaves(state2["params"])):
+        np.testing.assert_array_equal(a, b)
+    assert int(state2["opt"]["count"]) == 0       # schedule did not advance
+    state3, m = step(state, good)
+    assert float(m["skipped"]) == 0.0
+    assert int(state3["opt"]["count"]) == 1
+
+
 # ---------------------------------------------------------------------------
 # checkpointing
 # ---------------------------------------------------------------------------
