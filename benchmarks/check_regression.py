@@ -15,10 +15,19 @@ committed smoke baseline): records are matched on their identity keys
 including the batch sizes, and a top-level batch mismatch is an error
 rather than a vacuous pass.
 
+The gate can ALSO consume the compile-contract report
+(``python -m repro.analysis check`` -> ``ANALYSIS_contracts.json``): any
+contract failure fails the gate, and a cell present in the committed
+contract baseline but missing from the fresh report fails too — a config
+silently dropping off the kernel path is a regression even when the
+modeled bytes of the remaining cells look fine.
+
 Usage:
   PYTHONPATH=src:. python benchmarks/kernel_bench.py --smoke --out fresh.json
   PYTHONPATH=src:. python benchmarks/check_regression.py \
-      --baseline BENCH_kernel.json --fresh fresh.json [--tol 0.02]
+      --baseline BENCH_kernel.json --fresh fresh.json [--tol 0.02] \
+      [--contract-report fresh_contracts.json \
+       --contract-baseline ANALYSIS_contracts.json]
 """
 
 from __future__ import annotations
@@ -81,6 +90,30 @@ def compare(baseline: dict, fresh: dict,
     return regressions, dropped, new
 
 
+def compare_contracts(fresh: dict, baseline: dict = None
+                      ) -> Tuple[list, list]:
+    """(failures, dropped_cells) over contract reports.
+
+    ``failures`` are the fresh report's own contract failures.  With a
+    baseline, ``dropped_cells`` lists cell ids the baseline proved that
+    the fresh report no longer even checks, PLUS baseline kernel-path
+    cells whose fresh twin fell off the kernel path — both are how a
+    fast-path regression would hide from a failures-only gate."""
+    failures = list(fresh.get("failures", []))
+    dropped = []
+    if baseline:
+        bcells = baseline.get("cells", {})
+        fcells = fresh.get("cells", {})
+        for cid, bc in sorted(bcells.items()):
+            fc = fcells.get(cid)
+            if fc is None:
+                dropped.append(f"{cid}: cell missing from fresh report")
+            elif bc.get("kernel_path") and not fc.get("kernel_path"):
+                dropped.append(f"{cid}: fell off the kernel path "
+                               "(baseline proved it engaged)")
+    return failures, dropped
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="BENCH_kernel.json")
@@ -89,6 +122,11 @@ def main(argv=None) -> int:
                     help="relative headroom before a grown metric fails")
     ap.add_argument("--allow-dropped", action="store_true",
                     help="do not fail when a baseline row disappears")
+    ap.add_argument("--contract-report", default=None,
+                    help="fresh ANALYSIS_contracts.json to gate on")
+    ap.add_argument("--contract-baseline", default=None,
+                    help="committed contract report; fresh must cover "
+                         "every baseline cell")
     args = ap.parse_args(argv)
     with open(args.baseline) as fh:
         baseline = json.load(fh)
@@ -110,12 +148,33 @@ def main(argv=None) -> int:
     for key, bv, fv in regressions:
         print(f"FAIL: {key}: {bv:,} -> {fv:,} "
               f"(+{(fv / bv - 1) * 100:.1f}% > tol {args.tol * 100:.0f}%)")
-    if regressions or (dropped and not args.allow_dropped):
+    c_failures, c_dropped = [], []
+    if args.contract_report:
+        with open(args.contract_report) as fh:
+            c_fresh = json.load(fh)
+        c_base = None
+        if args.contract_baseline:
+            with open(args.contract_baseline) as fh:
+                c_base = json.load(fh)
+        c_failures, c_dropped = compare_contracts(c_fresh, c_base)
+        for f_ in c_failures:
+            print(f"FAIL: contract: {f_}")
+        for d in c_dropped:
+            print(f"FAIL: contract coverage: {d}")
+    if regressions or (dropped and not args.allow_dropped) \
+            or c_failures or c_dropped:
         print(f"bench regression gate FAILED "
-              f"({len(regressions)} regressions, {len(dropped)} dropped)")
+              f"({len(regressions)} regressions, {len(dropped)} dropped, "
+              f"{len(c_failures)} contract failures, "
+              f"{len(c_dropped)} contract coverage losses)")
         return 1
+    n_contract = ""
+    if args.contract_report:
+        n_contract = (f", {c_fresh['counts']['contract_checks']} "
+                      "contract checks")
     print(f"bench regression gate passed "
-          f"({len(gated_metrics(fresh))} metrics, {len(new)} new)")
+          f"({len(gated_metrics(fresh))} metrics, {len(new)} new"
+          f"{n_contract})")
     return 0
 
 

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_step
+from repro.analysis.recompile import assert_compiles
 from repro.core import SPMConfig, init_spm, spm_apply
 from repro.core.linear import LinearConfig, init_linear, linear_apply
 from repro.core.pairings import default_n_stages, two_level_schedule
@@ -55,14 +56,15 @@ def bench_width(n: int, batch: int = 256):
 
     spm_f = jax.jit(lambda x: spm_apply(p, x, cfg))
     dense_f = jax.jit(lambda x: x @ w)
-    t_spm = time_step(spm_f, x)
-    t_dense = time_step(dense_f, x)
-
     # fwd+bwd (training step shape)
     spm_g = jax.jit(jax.grad(lambda x: jnp.sum(spm_apply(p, x, cfg) ** 2)))
     dense_g = jax.jit(jax.grad(lambda x: jnp.sum((x @ w) ** 2)))
-    tg_spm = time_step(spm_g, x)
-    tg_dense = time_step(dense_g, x)
+    with assert_compiles(1, spm_f=spm_f, dense_f=dense_f,
+                         spm_g=spm_g, dense_g=dense_g):
+        t_spm = time_step(spm_f, x)
+        t_dense = time_step(dense_f, x)
+        tg_spm = time_step(spm_g, x)
+        tg_dense = time_step(dense_g, x)
     return {"L": L, "fwd_spm_us": t_spm * 1e6, "fwd_dense_us": t_dense * 1e6,
             "bwd_spm_us": tg_spm * 1e6, "bwd_dense_us": tg_dense * 1e6}
 
@@ -95,8 +97,11 @@ def bench_linear_rect(d_in: int, d_out: int, batch: int = 64):
         f = jax.jit(lambda x, cfg=cfg: linear_apply(p, x, cfg))
         g = jax.jit(jax.grad(
             lambda p, x, cfg=cfg: jnp.sum(linear_apply(p, x, cfg) ** 2)))
-        res[f"linear_fwd_{tag}_us"] = time_step(f, x) * 1e6
-        res[f"linear_fwdbwd_{tag}_us"] = time_step(g, p, x) * 1e6
+        # the sentinel turns a silent mid-loop retrace (which would time
+        # compiles, not steps) into a hard failure of the bench run
+        with assert_compiles(1, fwd=f, bwd=g):
+            res[f"linear_fwd_{tag}_us"] = time_step(f, x) * 1e6
+            res[f"linear_fwdbwd_{tag}_us"] = time_step(g, p, x) * 1e6
     return res
 
 

@@ -1,0 +1,37 @@
+"""Static-analysis subsystem: compile contracts, spmlint, retrace sentinel.
+
+Three tools that prove the repo's kernel-path invariants hold over the
+WHOLE config zoo instead of the handful of shapes the tests happen to
+build (docs/analysis.md):
+
+* ``repro.analysis.contracts`` + ``driver`` — declarative compile
+  contracts checked against the jaxpr/HLO lowering of every registry
+  config x executor variant (``python -m repro.analysis check``), built
+  on the shared walker libraries ``jaxpr_walk`` / ``hlo_match``.
+* ``repro.analysis.lint`` — spmlint, AST rules for repo-specific hazards
+  (``python -m repro.analysis lint``).
+* ``repro.analysis.recompile`` — the jit-cache-miss sentinel
+  (``assert_compiles``), wired into tests and the kernel bench.
+
+Submodules are imported lazily: ``lint`` stays importable (and fast)
+without initializing jax.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+_SUBMODULES = ("jaxpr_walk", "hlo_match", "contracts", "driver", "lint",
+               "recompile")
+
+__all__ = list(_SUBMODULES)
+
+
+def __getattr__(name: str):
+    if name in _SUBMODULES:
+        return importlib.import_module(f"repro.analysis.{name}")
+    raise AttributeError(f"module 'repro.analysis' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_SUBMODULES))

@@ -1,0 +1,47 @@
+"""CLI dispatch: ``python -m repro.analysis {check,lint}``.
+
+``check`` forces 8 virtual host devices via XLA_FLAGS **before** jax
+initializes (this entry point is a fresh process, so the flag is safe to
+set here — unlike inside pytest, where conftest forbids it), then runs
+the contract driver.  ``lint`` runs spmlint and never imports jax.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+_USAGE = """usage: python -m repro.analysis <command> [args]
+
+commands:
+  check   lower every registry config x executor variant on CPU and run
+          the compile-contract registry (repro.analysis.driver)
+  lint    spmlint: repo-specific AST rules (repro.analysis.lint)
+
+run a command with --help for its options."""
+
+_DEVICE_FLAG = "--xla_force_host_platform_device_count"
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if not argv or argv[0] in ("-h", "--help"):
+        print(_USAGE)
+        return 0
+    cmd, rest = argv[0], argv[1:]
+    if cmd == "lint":
+        from repro.analysis.lint import main as lint_main
+        return lint_main(rest)
+    if cmd == "check":
+        if "jax" not in sys.modules and _DEVICE_FLAG not in os.environ.get(
+                "XLA_FLAGS", ""):
+            os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                                       + f" {_DEVICE_FLAG}=8").strip()
+        from repro.analysis.driver import main as check_main
+        return check_main(rest)
+    print(f"unknown command {cmd!r}\n\n{_USAGE}", file=sys.stderr)
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

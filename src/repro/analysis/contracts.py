@@ -1,0 +1,442 @@
+"""Declarative compile contracts over the SPM kernel path.
+
+Each contract states one lowering invariant the repo's perf story rests
+on — "the fused rectangular path emits no XLA pad", "sharded
+communication is collective-permute only", "the pallas_call count equals
+the run plan" — as a named, registered check over the jaxpr/HLO
+artifacts of one operator *cell* (a ``(d_in, d_out, schedule, variant)``
+point of the config zoo).  ``python -m repro.analysis check``
+(``repro.analysis.driver``) enumerates every registry architecture's
+linear operators, builds the artifacts once per cell, and runs every
+applicable contract, so an invariant proven today on the handful of
+shapes a test happens to build is proven on the WHOLE zoo tomorrow.
+
+The walkers live in ``repro.analysis.jaxpr_walk`` / ``hlo_match`` — the
+same libraries ``tests/test_kernels.py`` and ``tests/test_distributed.py``
+assert with, so a contract failure here and a test failure there are the
+same fact observed twice.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import jaxpr_walk
+from repro.analysis.hlo_match import (bwd_gather_bound_violations,
+                                      permute_only_violations)
+from repro.core import eligibility
+from repro.core.linear import LinearConfig, init_linear, linear_apply
+from repro.kernels.ops import plan_runs
+
+__all__ = ["Cell", "Artifacts", "Contract", "CONTRACTS", "contract",
+           "run_cell", "VARIANTS"]
+
+VARIANTS = ("unfused", "fused", "shard_serial", "shard_overlap")
+
+_KEY = jax.random.PRNGKey(0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    """One operator x executor-variant point of the config zoo."""
+
+    cell_id: str
+    d_in: int
+    d_out: int
+    variant: str                      # one of VARIANTS
+    n_stages: Optional[int] = None    # None -> default_n_stages(n)
+    schedule: str = "butterfly"
+    backward: str = "custom"
+    rows: int = 8
+    n_shards: int = 1                 # > 1 for shard_* variants
+    compile_hlo: bool = False         # build compiled-HLO artifacts too
+    archs: Tuple[str, ...] = ()       # registry archs using this operator
+    roles: Tuple[str, ...] = ()       # e.g. ("attn_q", "ffn_up")
+
+    @property
+    def sharded(self) -> bool:
+        return self.variant in ("shard_serial", "shard_overlap")
+
+    def linear_config(self) -> LinearConfig:
+        return LinearConfig(
+            d_in=self.d_in, d_out=self.d_out, impl="spm_general",
+            n_stages=self.n_stages, schedule=self.schedule,
+            backward=self.backward,
+            n_shards=self.n_shards if self.sharded else 1,
+            use_kernel=(self.variant != "unfused"),
+            overlap=(self.variant == "shard_overlap"))
+
+
+class Artifacts:
+    """Lazily-built lowering artifacts of one cell.
+
+    jaxpr artifacts are traces (``jax.make_jaxpr``, cheap even at full
+    registry widths); HLO artifacts actually compile the cell
+    (``jax.jit(...).lower(...).compile()``) and are only built for cells
+    flagged ``compile_hlo``.  Sharded cells build under an
+    ``activation_sharding`` mesh context over the first ``n_shards`` host
+    devices — the driver process forces 8 via XLA_FLAGS.
+    """
+
+    def __init__(self, cell: Cell):
+        self.cell = cell
+        self.lc = cell.linear_config()
+        self.scfg = self.lc.spm_config()
+
+    # -- inputs ----------------------------------------------------------
+
+    @functools.cached_property
+    def params(self):
+        return init_linear(_KEY, self.lc)
+
+    @functools.cached_property
+    def x(self):
+        return jax.random.normal(_KEY, (self.cell.rows, self.cell.d_in),
+                                 jnp.float32)
+
+    def _fwd_fn(self) -> Callable:
+        lc = self.lc
+        return lambda p, x: linear_apply(p, x, lc)
+
+    def _loss_fn(self) -> Callable:
+        fwd = self._fwd_fn()
+        return jax.grad(lambda p, x: jnp.sum(fwd(p, x) ** 2),
+                        argnums=(0, 1))
+
+    def _mesh_ctx(self):
+        if not self.cell.sharded:
+            return contextlib.nullcontext()
+        import numpy as np
+        from jax.sharding import Mesh
+
+        from repro.parallel.ctx import activation_sharding
+        k = self.cell.n_shards
+        devs = jax.devices()
+        if len(devs) < k:
+            raise RuntimeError(
+                f"cell {self.cell.cell_id} needs {k} devices, have "
+                f"{len(devs)} (run via `python -m repro.analysis check`, "
+                "which forces 8 host devices)")
+        mesh = Mesh(np.asarray(devs[:k]).reshape(k), ("model",))
+        return activation_sharding(mesh, shard_feature=True)
+
+    # -- plan facts ------------------------------------------------------
+
+    @property
+    def n(self) -> int:
+        return self.lc.n
+
+    @functools.cached_property
+    def strides(self) -> Tuple[int, ...]:
+        return tuple(self.scfg.pairing.strides())
+
+    @functools.cached_property
+    def runs(self):
+        """Unsharded fused-kernel run plan."""
+        return plan_runs(self.n, self.strides)
+
+    @functools.cached_property
+    def steps(self):
+        """Sharded schedule steps (raises ValueError if not shardable)."""
+        return eligibility.plan_steps(self.n, self.strides,
+                                      self.cell.n_shards)
+
+    @functools.cached_property
+    def param_bytes(self) -> int:
+        """Replicated O(nL) parameter bytes (f32 coeffs + diag/bias)."""
+        return (self.scfg.n_stages * (self.n // 2) * 4 + 3 * self.n) * 4
+
+    # -- jaxpr artifacts -------------------------------------------------
+
+    @functools.cached_property
+    def jaxpr_fwd(self):
+        with self._mesh_ctx():
+            return jax.make_jaxpr(self._fwd_fn())(self.params, self.x)
+
+    @functools.cached_property
+    def jaxpr_bwd(self):
+        with self._mesh_ctx():
+            return jax.make_jaxpr(self._loss_fn())(self.params, self.x)
+
+    # -- HLO artifacts (compiled; compile_hlo cells only) ----------------
+
+    @functools.cached_property
+    def hlo_fwd(self) -> str:
+        with self._mesh_ctx():
+            return jax.jit(self._fwd_fn()).lower(
+                self.params, self.x).compile().as_text()
+
+    @functools.cached_property
+    def hlo_bwd(self) -> str:
+        with self._mesh_ctx():
+            return jax.jit(self._loss_fn()).lower(
+                self.params, self.x).compile().as_text()
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Contract:
+    name: str
+    doc: str
+    applies: Callable[[Cell], bool]
+    check: Callable[[Cell, Artifacts], List[str]]
+
+
+CONTRACTS: Dict[str, Contract] = {}
+
+
+def contract(name: str, *, applies: Callable[[Cell], bool]):
+    """Register a contract: ``check(cell, artifacts) -> [violation, ...]``
+    (empty list = pass).  ``applies`` gates which cells it runs on."""
+    def deco(fn):
+        CONTRACTS[name] = Contract(name=name, doc=(fn.__doc__ or "").strip(),
+                                   applies=applies, check=fn)
+        return fn
+    return deco
+
+
+def run_cell(cell: Cell, art: Optional[Artifacts] = None) -> Dict[str, str]:
+    """Run every applicable contract; return {name: "pass" | "fail: ..."}.
+
+    A contract that raises is reported as ``error:`` — an artifact that
+    cannot even build is itself a finding, not a skip.
+    """
+    art = art or Artifacts(cell)
+    out: Dict[str, str] = {}
+    for name, c in CONTRACTS.items():
+        if not c.applies(cell):
+            continue
+        try:
+            bad = c.check(cell, art)
+        except Exception as e:  # noqa: BLE001 — reported, never swallowed
+            out[name] = f"error: {type(e).__name__}: {e}"
+            continue
+        out[name] = "pass" if not bad else "fail: " + "; ".join(bad)
+    return out
+
+
+def _kernel_variant(cell: Cell) -> bool:
+    return cell.variant != "unfused"
+
+
+def _hlo_sharded(cell: Cell) -> bool:
+    return cell.sharded and cell.compile_hlo
+
+
+# ---------------------------------------------------------------------------
+# contracts
+# ---------------------------------------------------------------------------
+
+@contract("kernel-path-no-pad", applies=_kernel_variant)
+def _c_no_pad(cell: Cell, art: Artifacts) -> List[str]:
+    """The kernel-path forward lowers with NO XLA ``pad`` and no
+    activation gather: rectangular zero-fill happens in VMEM inside the
+    boundary runs (tests/test_kernels.py proves it for one shape; this
+    proves it per zoo cell)."""
+    bad = []
+    pads = [we for we in jaxpr_walk.iter_eqns(art.jaxpr_fwd)
+            if we.name == "pad"]
+    if pads:
+        shapes = [tuple(we.eqn.outvars[0].aval.shape) for we in pads]
+        bad.append(f"XLA pad survived on the forward path: {shapes}")
+    rows = cell.rows
+    for we in jaxpr_walk.iter_eqns(art.jaxpr_fwd):
+        if we.name == "gather":
+            shape = we.eqn.outvars[0].aval.shape
+            if len(shape) == 2 and shape[0] == rows:
+                bad.append(f"activation gather on the kernel path: {shape}")
+    return bad
+
+
+@contract("kernel-path-single-output-slice", applies=_kernel_variant)
+def _c_single_slice(cell: Cell, art: Artifacts) -> List[str]:
+    """Feature-axis activation slices on the forward path: none for the
+    unsharded fused kernel (the last run stores only d_out columns); for
+    the sharded executor exactly ONE — the local (rows, n) ->
+    (rows, d_out) output extraction — and only when d_out < n."""
+    slices = jaxpr_walk.feature_axis_slices(art.jaxpr_fwd, rows=cell.rows)
+    rect_out = cell.d_out < art.n
+    if cell.sharded:
+        expect = [((cell.rows, art.n), (cell.rows, cell.d_out))] \
+            if rect_out else []
+    else:
+        expect = []
+    if slices != expect:
+        return [f"feature-axis slices {slices} != expected {expect}"]
+    return []
+
+
+@contract("bwd-single-cotangent-pad", applies=_kernel_variant)
+def _c_bwd_pad(cell: Cell, art: Artifacts) -> List[str]:
+    """Activation-shaped pads on the backward path: none unsharded; for
+    the sharded rectangular executor exactly one — the even-slab
+    cotangent transport (rows, d_out) -> (rows, n), the output slice's
+    transpose (fused into the slab reshard)."""
+    pads = jaxpr_walk.activation_pads(art.jaxpr_bwd, rows=cell.rows)
+    rect_out = cell.d_out < art.n
+    if cell.sharded and rect_out:
+        expect = [((cell.rows, cell.d_out), (cell.rows, art.n))]
+    else:
+        expect = []
+    if pads != expect:
+        return [f"activation pads {pads} != expected {expect}"]
+    return []
+
+
+@contract("kernel-path-engaged", applies=lambda cell: True)
+def _c_engaged(cell: Cell, art: Artifacts) -> List[str]:
+    """The eligibility resolution and the lowered jaxpr agree: a cell
+    declared on the kernel path actually contains pallas_call equations
+    (inside the shard_map body for sharded variants), an unfused cell
+    contains none, and a sharded cell's cross stages lower to ppermute.
+    This is THE "silently fell off the fast path" detector ("Compute
+    Better Spent": structured wins evaporate off the fast path)."""
+    bad = []
+    inside, outside = jaxpr_walk.split_shard_map(art.jaxpr_fwd)
+    n_pallas_in = sum(1 for e in inside if e.primitive.name == "pallas_call")
+    n_pallas_out = sum(1 for e in outside
+                       if e.primitive.name == "pallas_call")
+    if cell.variant == "unfused":
+        if n_pallas_in or n_pallas_out:
+            bad.append("unfused cell lowered pallas_call equations")
+        return bad
+    if cell.variant == "fused":
+        if not eligibility.use_fused_kernel(art.scfg):
+            bad.append("use_fused_kernel resolved False for a fused cell")
+        elif n_pallas_out + n_pallas_in == 0:
+            bad.append("fused cell lowered ZERO pallas_call equations "
+                       "(silent XLA fallback)")
+        return bad
+    # sharded variants
+    if not eligibility.sharded_eligible(art.scfg):
+        bad.append("sharded_eligible resolved False for a sharded cell")
+        return bad
+    if n_pallas_in == 0:
+        bad.append("sharded cell lowered ZERO pallas_call equations inside "
+                   "shard_map (silent fallback)")
+    n_cross = sum(1 for s in art.steps if s[0] == "cross")
+    n_ppermute = sum(1 for e in inside
+                     if e.primitive.name == "ppermute")
+    if n_cross and not n_ppermute:
+        bad.append(f"{n_cross} cross stages planned but no ppermute lowered")
+    if not n_cross and n_ppermute:
+        bad.append("ppermute lowered on an all-local schedule")
+    return bad
+
+
+@contract("no-collectives-unsharded",
+          applies=lambda cell: not cell.sharded)
+def _c_no_coll(cell: Cell, art: Artifacts) -> List[str]:
+    """An unsharded cell traces no collective primitives at all — the
+    single-device operator must not silently grow mesh dependencies."""
+    colls = [we.name for we in jaxpr_walk.iter_eqns(art.jaxpr_fwd)
+             if we.name in ("ppermute", "psum", "all_gather",
+                            "all_to_all", "reduce_scatter")]
+    return [f"collective primitives in unsharded cell: {colls}"] \
+        if colls else []
+
+
+@contract("pallas-call-count-matches-plan",
+          applies=lambda cell: cell.variant == "fused")
+def _c_pallas_count(cell: Cell, art: Artifacts) -> List[str]:
+    """The fused forward lowers exactly ``len(plan_runs(n, strides))``
+    pallas_call equations — one per kernel run, the 1-HBM-round-trip-per-
+    run property stated structurally (an extra call is an extra activation
+    round-trip; a missing one means a run fell back)."""
+    got = sum(1 for we in jaxpr_walk.iter_eqns(art.jaxpr_fwd)
+              if we.name == "pallas_call")
+    want = len(art.runs)
+    if got != want:
+        return [f"forward pallas_call count {got} != plan runs {want}"]
+    return []
+
+
+@contract("shard-pallas-calls-match-schedule", applies=Cell.sharded.fget)
+def _c_shard_pallas_count(cell: Cell, art: Artifacts) -> List[str]:
+    """The sharded forward's pallas_call count matches the planned
+    schedule: one call per shard-local kernel run for the step-serial
+    executor, times the row-block pipeline depth under overlap (each
+    block walks every segment once — the overlap executor's
+    one-pallas_call-per-(segment, block) shape, checked on the CPU
+    lowering where the per-block transport is ppermute)."""
+    from repro.parallel.spm_shard import pick_row_blocks
+    n_local = art.n // cell.n_shards
+    local_calls = sum(len(plan_runs(n_local, rs))
+                      for kind, _, rs in [s for s in art.steps
+                                          if s[0] == "local"])
+    if cell.variant == "shard_overlap" and any(
+            s[0] == "cross" for s in art.steps):
+        from repro.kernels.ops import pick_block_rows_for_plan
+        runs = [(rs, tile) for kind, _, rs in art.steps if kind == "local"
+                for rs, tile in plan_runs(n_local, rs)]
+        br = pick_block_rows_for_plan(runs, cell.rows, 4,
+                                      overlap_bufs=False) if runs else 8
+        padded = -(-cell.rows // br) * br
+        n_blocks = len(pick_row_blocks(padded, br))
+        want = local_calls * n_blocks
+    else:
+        want = local_calls
+    inside, _ = jaxpr_walk.split_shard_map(art.jaxpr_fwd)
+    got = sum(1 for e in inside if e.primitive.name == "pallas_call")
+    if got != want:
+        return [f"shard-body pallas_call count {got} != planned {want}"]
+    return []
+
+
+@contract("dead-tile-grid-matches-plan",
+          applies=lambda cell: cell.variant == "fused"
+          and cell.d_out < LinearConfig(d_in=cell.d_in, d_out=cell.d_out,
+                                        impl="spm_general").n)
+def _c_dead_tile(cell: Cell, art: Artifacts) -> List[str]:
+    """The rectangular backward grid visits only ceil(d_out / n_tile)
+    feature tiles of the last run — dead output tiles are never launched
+    (the dead-tile-free grid of the PR 4 backward).  Checked via the
+    lowered pallas_call grids: when the plan leaves dead tiles
+    (vis < full), some backward grid must carry the pruned tile count and
+    none may carry the full count for that run width."""
+    nt_last = art.runs[-1][1]
+    full = -(-art.n // nt_last)
+    vis = -(-cell.d_out // nt_last)
+    if vis == full:
+        return []                      # no dead tiles to prune at this shape
+    grids = []
+    for we in jaxpr_walk.iter_eqns(art.jaxpr_bwd):
+        if we.name == "pallas_call":
+            gm = we.eqn.params.get("grid_mapping")
+            if gm is not None:
+                grids.append(tuple(gm.grid))
+    if not any(vis in g for g in grids):
+        return [f"no backward pallas grid shows the pruned feature-tile "
+                f"count {vis} (grids: {grids})"]
+    return []
+
+
+@contract("sharded-permute-only", applies=_hlo_sharded)
+def _c_permute_only(cell: Cell, art: Artifacts) -> List[str]:
+    """The compiled sharded forward communicates via collective-permute
+    ONLY: zero all-gather / all-reduce / reduce-scatter / all-to-all
+    bytes, and a permute actually present whenever the schedule has cross
+    stages (no vacuous pass)."""
+    has_cross = any(s[0] == "cross" for s in art.steps)
+    return permute_only_violations(art.hlo_fwd, require_permute=has_cross)
+
+
+@contract("bwd-gather-bounded-by-param-bytes", applies=_hlo_sharded)
+def _c_bwd_gather(cell: Cell, art: Artifacts) -> List[str]:
+    """The compiled sharded backward has NO all-reduce and its all-gather
+    stays bounded by the replicated O(nL) parameter-grad assembly plus the
+    inherent jit-boundary replication of the g_x output."""
+    gx_gather = cell.rows * (-(-cell.d_in // cell.n_shards)
+                             * cell.n_shards) * 4
+    return bwd_gather_bound_violations(art.hlo_bwd,
+                                       param_bytes=art.param_bytes,
+                                       extra_gather_bytes=gx_gather)

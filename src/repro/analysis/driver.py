@@ -1,0 +1,292 @@
+"""``python -m repro.analysis check`` — contracts over the whole config zoo.
+
+Enumerates every registry architecture's SPM linear operators (attention
+q/kv/o, FFN up/gate/down, MoE expert/shared FFNs, Mamba2 in/out
+projections, the zamba2 shared block) at BOTH scales (full ``CONFIG`` and
+``SMOKE``), plus the kernel-bench rectangular hot shapes; dedupes them
+into operator cells; and runs the full contract registry
+(``repro.analysis.contracts``) on each cell x executor variant:
+
+* ``unfused`` / ``fused``          — jaxpr-level contracts (trace only,
+  cheap even at full registry widths),
+* ``shard_serial`` / ``shard_overlap`` — the distributed executor over a
+  4-way "model" mesh of forced host devices; cells up to ``--hlo-cap``
+  also compile and run the HLO contracts (permute-only, bounded backward
+  gather).
+
+Emits a machine-readable JSON report; ``benchmarks/check_regression.py
+--contract-report`` gates CI on it (a config dropping off the kernel path
+is a regression even when modeled bytes look fine).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import jax
+
+from repro.analysis.contracts import Artifacts, Cell, run_cell
+from repro.core import eligibility
+from repro.core.linear import LinearConfig
+
+__all__ = ["enumerate_operators", "build_cells", "run_check", "main"]
+
+N_SHARDS = 4          # mesh width for sharded variants (8 forced devices
+                      # leave headroom; matches tests/test_distributed.py)
+HLO_N_CAP = 512       # compile sharded HLO only for n <= cap: XLA compile
+                      # time scales hard with width, and the invariant is
+                      # schedule-shaped, not width-shaped
+
+
+def _model_linears(mc) -> Iterator[Tuple[str, LinearConfig]]:
+    """(role, LinearConfig) for every distinct projection of one model."""
+    seen = []
+    for spec in mc.group_specs:
+        if spec in seen:
+            continue
+        seen.append(spec)
+        if spec.mixer == "attn":
+            ac = mc.attn_cfg(spec)
+            yield "attn_q", ac.q_proj
+            yield "attn_kv", ac.kv_proj
+            yield "attn_o", ac.o_proj
+        elif spec.mixer == "mamba":
+            sc = mc.mamba_cfg()
+            yield "mamba_in", sc.in_proj
+            yield "mamba_out", sc.out_proj
+        if spec.mlp == "dense":
+            fc = mc.ffn_cfg()
+            yield "ffn_up", fc.up
+            yield "ffn_gate", fc.gate
+            yield "ffn_down", fc.down
+        elif spec.mlp == "moe":
+            moe = mc.moe_cfg()
+            ec = moe.expert_ffn
+            yield "moe_expert_up", ec.up
+            yield "moe_expert_down", ec.down
+            if mc.shared_d_ff:
+                sc = moe.shared_ffn
+                yield "moe_shared_up", sc.up
+                yield "moe_shared_down", sc.down
+    if mc.has_shared_block:
+        ac = mc.shared_attn_cfg()
+        yield "shared_attn_q", ac.q_proj
+        yield "shared_attn_o", ac.o_proj
+        if mc.shared_attn_d_ff:
+            fc = mc.shared_ffn_cfg()
+            yield "shared_ffn_up", fc.up
+            yield "shared_ffn_down", fc.down
+
+
+def enumerate_operators(archs: Optional[List[str]] = None, *,
+                        scales: Tuple[str, ...] = ("smoke", "full"),
+                        include_bench_shapes: bool = True) -> Dict:
+    """Dedupe the zoo into operator specs.
+
+    Returns {op_key: {"d_in", "d_out", "n_stages", "schedule", "backward",
+    "archs": set, "roles": set}} where op_key is the shape/schedule tuple.
+    """
+    from repro.configs import registry
+    archs = list(archs) if archs else list(registry.ARCH_IDS)
+    ops: Dict[tuple, dict] = {}
+
+    def add(arch: str, role: str, lc: LinearConfig):
+        if not lc.is_spm:
+            return
+        key = (lc.d_in, lc.d_out, lc.n_stages, lc.schedule, lc.backward)
+        rec = ops.setdefault(key, {
+            "d_in": lc.d_in, "d_out": lc.d_out, "n_stages": lc.n_stages,
+            "schedule": lc.schedule, "backward": lc.backward,
+            "archs": set(), "roles": set()})
+        rec["archs"].add(arch)
+        rec["roles"].add(role)
+
+    for arch in archs:
+        for scale in scales:
+            mc = (registry.get_smoke(arch) if scale == "smoke"
+                  else registry.get_config(arch))
+            for role, lc in _model_linears(mc):
+                add(f"{arch}[{scale}]", role, lc)
+    if include_bench_shapes:
+        _add_bench_shapes(ops)
+    return ops
+
+
+# The kernel-bench rectangular hot shapes, duplicated here as data (the
+# benchmarks/ tree is not an importable package from src/): kept in sync
+# by tests/test_analysis.py::test_bench_rect_shapes_in_driver.
+BENCH_RECT_SHAPES = [
+    ("qkv_fused", 256, 768),
+    ("ffn_up", 256, 1024),
+    ("ffn_down", 1024, 256),
+    ("lm_head", 384, 2048),
+]
+
+
+def _add_bench_shapes(ops: Dict) -> None:
+    for tag, d_in, d_out in BENCH_RECT_SHAPES:
+        lc = LinearConfig(d_in=d_in, d_out=d_out, impl="spm_general",
+                          backward="custom")
+        key = (lc.d_in, lc.d_out, lc.n_stages, lc.schedule, lc.backward)
+        rec = ops.setdefault(key, {
+            "d_in": lc.d_in, "d_out": lc.d_out, "n_stages": lc.n_stages,
+            "schedule": lc.schedule, "backward": lc.backward,
+            "archs": set(), "roles": set()})
+        rec["archs"].add("kernel_bench")
+        rec["roles"].add(f"rect_{tag}")
+
+
+def build_cells(ops: Dict, *, n_shards: int = N_SHARDS,
+                hlo_cap: int = HLO_N_CAP,
+                device_count: Optional[int] = None
+                ) -> Tuple[List[Cell], List[dict]]:
+    """Expand operator specs into per-variant cells + skip records."""
+    device_count = (jax.device_count() if device_count is None
+                    else device_count)
+    cells: List[Cell] = []
+    skipped: List[dict] = []
+    for key in sorted(ops):
+        rec = ops[key]
+        d_in, d_out = rec["d_in"], rec["d_out"]
+        base = dict(d_in=d_in, d_out=d_out, n_stages=rec["n_stages"],
+                    schedule=rec["schedule"], backward=rec["backward"],
+                    archs=tuple(sorted(rec["archs"])),
+                    roles=tuple(sorted(rec["roles"])))
+        lc = LinearConfig(d_in=d_in, d_out=d_out, impl="spm_general",
+                          n_stages=rec["n_stages"], schedule=rec["schedule"],
+                          backward=rec["backward"])
+        n = lc.n
+        stem = (f"{d_in}x{d_out}"
+                + (f"-L{rec['n_stages']}" if rec["n_stages"] else "")
+                + f"-{rec['schedule']}")
+        for variant in ("unfused", "fused"):
+            cells.append(Cell(cell_id=f"{stem}/{variant}", variant=variant,
+                              **base))
+        # sharded variants: structural eligibility first, devices second
+        scfg = LinearConfig(**{**base_kwargs(base), "n_shards": n_shards,
+                               "use_kernel": True}).spm_config()
+        if not eligibility.sharded_eligible(scfg):
+            reason = (f"n={n} not divisible by {n_shards}"
+                      if n % n_shards else "schedule not shard-executable")
+            skipped.append({"op": stem, "variants": "shard_*",
+                            "reason": reason})
+        elif device_count < n_shards:
+            skipped.append({"op": stem, "variants": "shard_*",
+                            "reason": f"{device_count} devices < {n_shards}"})
+        else:
+            hlo = n <= hlo_cap
+            for variant in ("shard_serial", "shard_overlap"):
+                cells.append(Cell(cell_id=f"{stem}/{variant}",
+                                  variant=variant, n_shards=n_shards,
+                                  compile_hlo=hlo, **base))
+            if not hlo:
+                skipped.append({"op": stem, "variants": "shard_* hlo",
+                                "reason": f"n={n} > hlo_cap={hlo_cap} "
+                                          "(jaxpr contracts only)"})
+    return cells, skipped
+
+
+def base_kwargs(base: dict) -> dict:
+    return dict(d_in=base["d_in"], d_out=base["d_out"], impl="spm_general",
+                n_stages=base["n_stages"], schedule=base["schedule"],
+                backward=base["backward"])
+
+
+def run_check(archs: Optional[List[str]] = None, *,
+              scales: Tuple[str, ...] = ("smoke", "full"),
+              n_shards: int = N_SHARDS, hlo_cap: int = HLO_N_CAP,
+              include_bench_shapes: bool = True,
+              verbose: bool = True) -> Dict:
+    """Run the full contract matrix; return the report dict."""
+    ops = enumerate_operators(archs, scales=scales,
+                              include_bench_shapes=include_bench_shapes)
+    cells, skipped = build_cells(ops, n_shards=n_shards, hlo_cap=hlo_cap)
+    report_cells: Dict[str, dict] = {}
+    failures: List[str] = []
+    for cell in cells:
+        art = Artifacts(cell)
+        results = run_cell(cell, art)
+        ok = all(v == "pass" for v in results.values())
+        for cname, v in results.items():
+            if v != "pass":
+                failures.append(f"{cell.cell_id}/{cname}: {v}")
+        engaged = results.get("kernel-path-engaged", "n/a")
+        report_cells[cell.cell_id] = {
+            "archs": list(cell.archs), "roles": list(cell.roles),
+            "d_in": cell.d_in, "d_out": cell.d_out, "n": art.n,
+            "n_stages": art.scfg.n_stages, "schedule": cell.schedule,
+            "variant": cell.variant, "n_shards": cell.n_shards,
+            "rows": cell.rows, "hlo": cell.compile_hlo,
+            "kernel_path": (cell.variant != "unfused"
+                            and engaged == "pass"),
+            "contracts": results,
+        }
+        if verbose:
+            status = "ok " if ok else "FAIL"
+            print(f"[{status}] {cell.cell_id}  "
+                  f"({len(results)} contracts)", flush=True)
+    report = {
+        "schema": 1,
+        "generated_by": "repro.analysis.driver",
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "n_shards": n_shards,
+        "hlo_cap": hlo_cap,
+        "counts": {
+            "operators": len(ops),
+            "cells": len(cells),
+            "contract_checks": sum(len(c["contracts"])
+                                   for c in report_cells.values()),
+            "failures": len(failures),
+            "skipped_variants": len(skipped),
+        },
+        "cells": report_cells,
+        "skipped": skipped,
+        "failures": failures,
+    }
+    return report
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis check",
+        description="lower every registry config x executor variant on "
+                    "CPU and check the compile-contract registry")
+    ap.add_argument("--archs", default=None,
+                    help="comma-separated arch ids (default: all)")
+    ap.add_argument("--scales", default="smoke,full",
+                    help="config scales to enumerate (smoke,full)")
+    ap.add_argument("--n-shards", type=int, default=N_SHARDS)
+    ap.add_argument("--hlo-cap", type=int, default=HLO_N_CAP,
+                    help="compile sharded HLO only for n <= cap")
+    ap.add_argument("--no-bench-shapes", action="store_true",
+                    help="skip the kernel-bench rectangular hot shapes")
+    ap.add_argument("--report", default="ANALYSIS_contracts.json",
+                    help="JSON report path ('' to skip)")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+    archs = args.archs.split(",") if args.archs else None
+    scales = tuple(s for s in args.scales.split(",") if s)
+    report = run_check(archs, scales=scales, n_shards=args.n_shards,
+                       hlo_cap=args.hlo_cap,
+                       include_bench_shapes=not args.no_bench_shapes,
+                       verbose=not args.quiet)
+    if args.report:
+        with open(args.report, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"wrote {args.report}")
+    c = report["counts"]
+    print(f"contract check: {c['cells']} cells / {c['operators']} operators, "
+          f"{c['contract_checks']} checks, {c['failures']} failures, "
+          f"{c['skipped_variants']} skipped variant groups "
+          f"(devices={report['device_count']})")
+    for f_ in report["failures"]:
+        print(f"  FAIL {f_}", file=sys.stderr)
+    return 1 if report["failures"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,125 @@
+"""Structured matchers over post-optimization HLO text.
+
+``launch.hlo_analysis`` owns the low-level regexes (shape-bytes parsing,
+per-kind collective byte totals); this module layers the *assertions*
+the sharded executor's acceptance story is made of — "communication is
+collective-permute only", "backward gathers stay bounded by the O(nL)
+parameter bytes" — so tests and the contract driver state the invariant
+once instead of re-deriving it from raw byte dicts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+from repro.launch.hlo_analysis import (_COLL_OPS, _LINE_RE, collective_bytes,
+                                       parse_shape_bytes)
+
+__all__ = [
+    "CollectiveOp",
+    "list_collectives",
+    "permute_only_violations",
+    "assert_permute_only",
+    "bwd_gather_bound_violations",
+    "assert_bwd_gather_bounded",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveOp:
+    """One collective instruction (async -start/-done pairs collapse to a
+    single entry at the -start line)."""
+
+    kind: str          # e.g. "collective-permute"
+    bytes: int         # result-shape bytes
+    line_no: int       # 1-based line in the HLO text
+    is_async: bool     # written as <kind>-start(...)
+    text: str          # the stripped instruction line
+
+
+_ASYNC_START_RE = re.compile(
+    r"(" + "|".join(_COLL_OPS) + r")-start\(")
+
+
+def list_collectives(hlo_text: str) -> List[CollectiveOp]:
+    """Every collective in the module, counted once, in program order."""
+    out: List[CollectiveOp] = []
+    for i, line in enumerate(hlo_text.splitlines(), start=1):
+        m = _LINE_RE.search(line)
+        if not m or "-done(" in line:
+            continue
+        out.append(CollectiveOp(kind=m.group(2),
+                                bytes=parse_shape_bytes(m.group(1)),
+                                line_no=i,
+                                is_async=bool(_ASYNC_START_RE.search(line)),
+                                text=line.strip()))
+    return out
+
+
+def permute_only_violations(hlo_text: str, *,
+                            require_permute: bool = True,
+                            allow: Optional[Dict[str, int]] = None
+                            ) -> List[str]:
+    """Check the "collective-permute-only" invariant; return violations.
+
+    Every non-permute collective kind must move zero bytes, except kinds
+    listed in ``allow`` (kind -> byte budget, e.g. the backward's bounded
+    all-gather).  With ``require_permute`` the module must actually
+    contain a permute (guards against the vacuous pass where the whole
+    sharded path was constant-folded or never engaged).
+    """
+    cb = collective_bytes(hlo_text)
+    allow = allow or {}
+    bad: List[str] = []
+    if require_permute and cb["collective-permute"] == 0:
+        bad.append("no collective-permute found (sharded path not engaged?)")
+    for kind in _COLL_OPS:
+        if kind == "collective-permute":
+            continue
+        budget = allow.get(kind, 0)
+        if cb[kind] > budget:
+            bad.append(f"{kind} moves {cb[kind]} bytes "
+                       f"(budget {budget})")
+    return bad
+
+
+def assert_permute_only(hlo_text: str, *, require_permute: bool = True,
+                        allow: Optional[Dict[str, int]] = None) -> None:
+    """AssertionError form of :func:`permute_only_violations`."""
+    bad = permute_only_violations(hlo_text, require_permute=require_permute,
+                                  allow=allow)
+    assert not bad, "; ".join(bad)
+
+
+def bwd_gather_bound_violations(hlo_text: str, *, param_bytes: int,
+                                extra_gather_bytes: int = 0) -> List[str]:
+    """Check the backward-pass collective budget; return violations.
+
+    The sharded custom_vjp assembles replicated O(nL) parameter grads, so
+    its all-gather may move up to ``2 * param_bytes`` plus the inherent
+    jit-boundary replication allowances in ``extra_gather_bytes`` (e.g.
+    an indivisible-width g_x output).  all-reduce must be absent: a
+    feature-axis all-reduce is exactly the dense-transport regression the
+    executor exists to avoid.
+    """
+    cb = collective_bytes(hlo_text)
+    bad: List[str] = []
+    if cb["all-reduce"] != 0:
+        bad.append(f"all-reduce moves {cb['all-reduce']} bytes "
+                   "(feature-axis reduction on the backward path)")
+    budget = 2 * param_bytes + extra_gather_bytes
+    if cb["all-gather"] > budget:
+        bad.append(f"all-gather moves {cb['all-gather']} bytes "
+                   f"> bound {budget} (2*param_bytes={2 * param_bytes} "
+                   f"+ allowed {extra_gather_bytes})")
+    return bad
+
+
+def assert_bwd_gather_bounded(hlo_text: str, *, param_bytes: int,
+                              extra_gather_bytes: int = 0) -> None:
+    """AssertionError form of :func:`bwd_gather_bound_violations`."""
+    bad = bwd_gather_bound_violations(hlo_text, param_bytes=param_bytes,
+                                      extra_gather_bytes=extra_gather_bytes)
+    assert not bad, "; ".join(bad)

@@ -1,0 +1,157 @@
+"""Shared jaxpr traversal for compile contracts and tests.
+
+Every kernel-path invariant the repo proves at the jaxpr level — no XLA
+pad on the fused path, a single output slice on the sharded rectangular
+path, pallas_call counts matching the run plan — needs the same
+traversal: walk every equation of every inner jaxpr **except** the
+bodies of ``pallas_call`` equations (the whole point of the kernels is
+that masking/padding lives inside them), and remember whether an
+equation sits inside a ``shard_map`` body (per-shard ops) or outside it
+(replicated glue).
+
+Before this module, that traversal existed as ad-hoc closures in
+``tests/test_kernels.py`` and ``tests/test_distributed.py``; both now
+import from here, as do the declarative contracts in
+``repro.analysis.contracts``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterator, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "WalkedEqn",
+    "iter_eqns",
+    "collect_eqns",
+    "split_shard_map",
+    "primitive_names",
+    "count_primitive",
+    "feature_axis_slices",
+    "activation_pads",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class WalkedEqn:
+    """One equation plus where the walk found it.
+
+    ``in_shard_map`` is True for equations inside a ``shard_map`` body
+    (i.e. per-shard program), False for the outer replicated program.
+    ``depth`` counts enclosing sub-jaxprs (0 = top level).
+    """
+
+    eqn: Any
+    in_shard_map: bool
+    depth: int
+
+    @property
+    def name(self) -> str:
+        return self.eqn.primitive.name
+
+
+def _sub_jaxprs(eqn: Any) -> Iterator[Any]:
+    """Yield the inner jaxprs referenced by an equation's params.
+
+    Handles both ClosedJaxpr-valued params (``v.jaxpr.eqns``) and raw
+    Jaxpr-valued params (``v.eqns``), plus lists/tuples of either (e.g.
+    ``cond``'s ``branches``).
+    """
+    for v in eqn.params.values():
+        vs = v if isinstance(v, (list, tuple)) else (v,)
+        for u in vs:
+            if hasattr(u, "jaxpr") and hasattr(u.jaxpr, "eqns"):
+                yield u.jaxpr
+            elif hasattr(u, "eqns"):
+                yield u
+
+
+def iter_eqns(jaxpr: Any, *, in_shard_map: bool = False,
+              depth: int = 0) -> Iterator[WalkedEqn]:
+    """Depth-first walk over every equation of ``jaxpr`` and its inner
+    jaxprs, **never descending into pallas_call bodies** (in-kernel ops
+    are exactly what the contracts must not see).
+
+    Accepts a Jaxpr or ClosedJaxpr.
+    """
+    if hasattr(jaxpr, "jaxpr"):        # ClosedJaxpr
+        jaxpr = jaxpr.jaxpr
+    for eqn in jaxpr.eqns:
+        yield WalkedEqn(eqn, in_shard_map, depth)
+        if eqn.primitive.name == "pallas_call":
+            continue
+        sub_shard = in_shard_map or eqn.primitive.name == "shard_map"
+        for sub in _sub_jaxprs(eqn):
+            yield from iter_eqns(sub, in_shard_map=sub_shard,
+                                 depth=depth + 1)
+
+
+def collect_eqns(jaxpr: Any) -> List[WalkedEqn]:
+    """List form of :func:`iter_eqns`."""
+    return list(iter_eqns(jaxpr))
+
+
+def split_shard_map(jaxpr: Any) -> Tuple[List[Any], List[Any]]:
+    """(inside, outside): raw equations inside shard_map bodies vs not.
+
+    Drop-in replacement for the old ``_walk_eqns`` helper in
+    ``tests/test_distributed.py``.
+    """
+    inside: List[Any] = []
+    outside: List[Any] = []
+    for we in iter_eqns(jaxpr):
+        (inside if we.in_shard_map else outside).append(we.eqn)
+    return inside, outside
+
+
+def primitive_names(jaxpr: Any) -> List[str]:
+    """All primitive names reached by the walk (duplicates kept)."""
+    return [we.name for we in iter_eqns(jaxpr)]
+
+
+def count_primitive(jaxpr: Any, name: str,
+                    pred: Optional[Callable[[WalkedEqn], bool]] = None) -> int:
+    """Number of equations named ``name`` (optionally filtered)."""
+    return sum(1 for we in iter_eqns(jaxpr)
+               if we.name == name and (pred is None or pred(we)))
+
+
+def feature_axis_slices(jaxpr: Any, *,
+                        rows: Optional[int] = None) -> List[Tuple[tuple, tuple]]:
+    """(in_shape, out_shape) of every ``slice`` narrowing the last axis
+    of a rank-2 array.  With ``rows``, only activation-shaped slices
+    (leading dim == rows) are reported.
+
+    The rectangular kernel path is allowed exactly ONE of these (the
+    sharded (rows, n) -> (rows, out_width) output extraction) and the
+    unsharded path none at all.
+    """
+    out = []
+    for we in iter_eqns(jaxpr):
+        if we.name != "slice":
+            continue
+        iv = we.eqn.invars[0].aval
+        ov = we.eqn.outvars[0].aval
+        if len(iv.shape) != 2 or iv.shape[-1] == ov.shape[-1]:
+            continue
+        if rows is not None and iv.shape[0] != rows:
+            continue
+        out.append((tuple(iv.shape), tuple(ov.shape)))
+    return out
+
+
+def activation_pads(jaxpr: Any, *, rows: int) -> List[Tuple[tuple, tuple]]:
+    """(in_shape, out_shape) of every ``pad`` whose output is an
+    activation-shaped rank-2 array (leading dim == rows).
+
+    The sharded backward is allowed exactly one — the even-slab
+    cotangent transport (rows, out_width) -> (rows, n)."""
+    out = []
+    for we in iter_eqns(jaxpr):
+        if we.name != "pad":
+            continue
+        ov = we.eqn.outvars[0].aval
+        if len(ov.shape) == 2 and ov.shape[0] == rows:
+            out.append((tuple(we.eqn.invars[0].aval.shape),
+                        tuple(ov.shape)))
+    return out

@@ -1,0 +1,401 @@
+"""spmlint — AST-level rules for repo-specific hazards.
+
+Generic style is ruff's job (pyproject.toml); these rules encode things
+that have already bitten or regressed once in THIS codebase and that no
+generic linter knows about:
+
+=======  ==================================================================
+rule     invariant
+=======  ==================================================================
+SPM001   eligibility predicates are DEFINED only in ``core/eligibility.py``
+         (the PR 5 consolidation must not silently re-grow inline copies
+         in ``spm.py`` / ``spm_shard.py``); importing them is fine.
+SPM002   no ``jnp.pad`` / ``lax.dynamic_slice`` in kernel-path modules
+         (``core/spm.py``, ``kernels/``, ``parallel/spm_shard.py``) — the
+         rectangular story is in-VMEM masking, not XLA ops.  The four
+         legitimate sites (the XLA fallback, row padding, the cotangent
+         transport) carry ``# spmlint: allow[SPM002]`` pragmas.
+SPM003   no pallas / pltpu imports or usage outside ``kernels/`` — the
+         kernel boundary is an API boundary.
+SPM004   no Python ``if``/``while`` on a traced ``jnp.``/``lax.`` call
+         result inside ``src/repro`` — that's a retrace (or a
+         ConcretizationError) waiting to happen; use ``jnp.where`` /
+         ``lax.cond``.
+SPM005   no wall-clock or unseeded-global-RNG nondeterminism in chaos /
+         bench code (``train/chaos.py``, ``benchmarks/``): chaos schedules
+         and modeled bench numbers must be bit-reproducible.
+         (``time.perf_counter`` timing and ``np.random.default_rng(seed)``
+         are fine; ``time.time`` / ``datetime.now`` / bare ``random.*`` /
+         ``np.random.*`` module-state calls are not.)
+SPM006   every ``__all__`` name is actually bound at module top level, and
+         every public module has a docstring.
+=======  ==================================================================
+
+Suppress a finding with a line pragma: ``# spmlint: allow[SPM002]``
+(comma-separate several rule ids; add a reason after the bracket).
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import re
+import sys
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set
+
+__all__ = ["Violation", "RULES", "lint_file", "lint_paths", "main"]
+
+RULES = {
+    "SPM001": "eligibility predicate defined outside core/eligibility.py",
+    "SPM002": "XLA pad/dynamic_slice in a kernel-path module",
+    "SPM003": "pallas/pltpu usage outside kernels/",
+    "SPM004": "Python branch on a traced jnp/lax expression",
+    "SPM005": "wall-clock / global-RNG nondeterminism in chaos or bench code",
+    "SPM006": "__all__ name unbound at module top level, or missing docstring",
+}
+
+# names whose definitions must live in core/eligibility.py only
+ELIGIBILITY_NAMES = frozenset({
+    "kernel_eligible", "use_fused_kernel", "sharded_eligible",
+    "resolve_shard_kernel", "resolve_overlap", "resolve_rdma",
+    "plan_steps", "overlap_segments",
+})
+
+# SPM002 scope: the modules whose perf story is "no XLA pad/slice"
+_KERNEL_PATH_PARTS = ("core/spm.py", "parallel/spm_shard.py")
+_KERNEL_PATH_DIRS = ("kernels/",)
+
+# SPM002 forbidden dotted-call suffixes
+_PAD_SLICE_CALLS = ("jnp.pad", "np.pad", "numpy.pad", "jax.numpy.pad",
+                    "lax.dynamic_slice", "lax.dynamic_slice_in_dim",
+                    "jax.lax.dynamic_slice", "jax.lax.dynamic_slice_in_dim")
+
+# SPM004: static (trace-time) jnp/lax attributes that are safe in a branch
+_STATIC_SAFE_ATTRS = frozenset({"issubdtype", "dtype", "result_type",
+                                "iinfo", "finfo", "ndim", "shape"})
+
+# SPM005 scope + verdicts
+_NONDET_CALLS = ("time.time", "datetime.now", "datetime.utcnow",
+                 "datetime.datetime.now", "datetime.datetime.utcnow")
+_ALLOWED_RANDOM = ("np.random.default_rng", "numpy.random.default_rng",
+                   "np.random.Generator", "numpy.random.Generator",
+                   "random.Random")
+
+_PRAGMA_RE = re.compile(r"#\s*spmlint:\s*allow\[([A-Z0-9,\s]+)\]")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    path: str
+    line: int
+    rule: str
+    msg: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.msg}"
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for an Attribute/Name chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _pragmas(source: str) -> Dict[int, Set[str]]:
+    out: Dict[int, Set[str]] = {}
+    for i, line in enumerate(source.splitlines(), start=1):
+        m = _PRAGMA_RE.search(line)
+        if m:
+            out[i] = {r.strip() for r in m.group(1).split(",") if r.strip()}
+    return out
+
+
+def _posix(path: Path) -> str:
+    return path.as_posix()
+
+
+def _in_kernel_path(rel: str) -> bool:
+    if any(rel.endswith(p) for p in _KERNEL_PATH_PARTS):
+        return True
+    return any(f"/{d}" in rel or rel.startswith(d)
+               for d in _KERNEL_PATH_DIRS)
+
+
+def _in_kernels_dir(rel: str) -> bool:
+    return "/kernels/" in rel or rel.startswith("kernels/")
+
+
+def _in_chaos_or_bench(rel: str) -> bool:
+    return rel.endswith("train/chaos.py") or "benchmarks/" in rel \
+        or rel.startswith("benchmarks")
+
+
+def _in_src_repro(rel: str) -> bool:
+    return "src/repro/" in rel or rel.startswith("repro/")
+
+
+class _Checker(ast.NodeVisitor):
+    def __init__(self, rel: str, pragmas: Dict[int, Set[str]]):
+        self.rel = rel
+        self.pragmas = pragmas
+        self.found: List[Violation] = []
+
+    def _emit(self, rule: str, node: ast.AST, msg: str) -> None:
+        # a pragma suppresses findings on its own line or the line below
+        # (comment-above style for statements that don't fit one line)
+        line = getattr(node, "lineno", 0)
+        if rule in self.pragmas.get(line, ()) \
+                or rule in self.pragmas.get(line - 1, ()):
+            return
+        self.found.append(Violation(self.rel, line, rule, msg))
+
+    # -- SPM001: inline eligibility predicate definitions ----------------
+
+    def _check_def_name(self, node: ast.AST, name: str) -> None:
+        if (name in ELIGIBILITY_NAMES
+                and _in_src_repro(self.rel)
+                and not self.rel.endswith("core/eligibility.py")):
+            self._emit("SPM001", node,
+                       f"definition of eligibility predicate {name!r} "
+                       "outside core/eligibility.py (import it instead)")
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._check_def_name(node, node.name)
+        self.generic_visit(node)
+
+    def visit_AsyncFunctionDef(self, node: ast.AsyncFunctionDef) -> None:
+        self._check_def_name(node, node.name)
+        self.generic_visit(node)
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        if isinstance(node.value, ast.Lambda):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    self._check_def_name(node, t.id)
+        self.generic_visit(node)
+
+    # -- SPM002 / SPM005: forbidden dotted calls -------------------------
+
+    def visit_Call(self, node: ast.Call) -> None:
+        dotted = _dotted(node.func)
+        if dotted:
+            if _in_kernel_path(self.rel) and any(
+                    dotted == c or dotted.endswith("." + c)
+                    for c in _PAD_SLICE_CALLS):
+                self._emit("SPM002", node,
+                           f"{dotted}(...) on the kernel path (in-VMEM "
+                           "masking, not XLA pad/slice; pragma if this is "
+                           "a documented fallback site)")
+            if _in_chaos_or_bench(self.rel):
+                if any(dotted == c or dotted.endswith("." + c)
+                       for c in _NONDET_CALLS):
+                    self._emit("SPM005", node,
+                               f"{dotted}(...) is wall-clock state in "
+                               "chaos/bench logic (use a seeded schedule "
+                               "or time.perf_counter for pure timing)")
+                elif (dotted.startswith(("random.", "np.random.",
+                                         "numpy.random."))
+                      and dotted not in _ALLOWED_RANDOM):
+                    self._emit("SPM005", node,
+                               f"{dotted}(...) uses global RNG state in "
+                               "chaos/bench logic (use "
+                               "np.random.default_rng(seed))")
+        self.generic_visit(node)
+
+    # -- SPM003: pallas outside kernels/ ---------------------------------
+
+    def visit_Import(self, node: ast.Import) -> None:
+        if not _in_kernels_dir(self.rel) and _in_src_repro(self.rel):
+            for alias in node.names:
+                if ".pallas" in alias.name:
+                    self._emit("SPM003", node,
+                               f"import {alias.name} outside kernels/")
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        mod = node.module or ""
+        if not _in_kernels_dir(self.rel) and _in_src_repro(self.rel):
+            if ".pallas" in mod or mod.endswith("pallas"):
+                self._emit("SPM003", node,
+                           f"from {mod} import ... outside kernels/")
+            else:
+                for alias in node.names:
+                    if alias.name == "pallas" or alias.name == "pltpu":
+                        self._emit("SPM003", node,
+                                   f"from {mod} import {alias.name} "
+                                   "outside kernels/")
+        self.generic_visit(node)
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        if (not _in_kernels_dir(self.rel) and _in_src_repro(self.rel)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "pltpu"):
+            self._emit("SPM003", node,
+                       f"pltpu.{node.attr} outside kernels/")
+        self.generic_visit(node)
+
+    # -- SPM004: Python branch on traced expressions ---------------------
+
+    def _check_branch(self, node) -> None:
+        if not _in_src_repro(self.rel):
+            return
+        for sub in ast.walk(node.test):
+            if isinstance(sub, ast.Call):
+                dotted = _dotted(sub.func) or ""
+                root, _, attr = dotted.partition(".")
+                if root in ("jnp", "lax") or dotted.startswith(
+                        ("jax.numpy.", "jax.lax.")):
+                    leaf = dotted.rsplit(".", 1)[-1]
+                    if leaf not in _STATIC_SAFE_ATTRS:
+                        self._emit("SPM004", node,
+                                   f"branching on {dotted}(...): a traced "
+                                   "value in Python control flow retraces "
+                                   "or raises under jit (use jnp.where / "
+                                   "lax.cond)")
+
+    def visit_If(self, node: ast.If) -> None:
+        self._check_branch(node)
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        self._check_branch(node)
+        self.generic_visit(node)
+
+
+def _check_all_consistency(rel: str, tree: ast.Module,
+                           pragmas: Dict[int, Set[str]]) -> List[Violation]:
+    """SPM006 over one parsed module."""
+    out: List[Violation] = []
+    if not _in_src_repro(rel):
+        return out
+    if (ast.get_docstring(tree) is None
+            and Path(rel).name != "__init__.py"):
+        v = Violation(rel, 1, "SPM006", "module has no docstring")
+        if "SPM006" not in pragmas.get(1, ()):
+            out.append(v)
+    bound: Set[str] = set()
+    all_node = None
+    all_names: List[str] = []
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            bound.add(node.name)
+        elif isinstance(node, ast.Import):
+            for alias in node.names:
+                bound.add((alias.asname or alias.name).split(".")[0])
+        elif isinstance(node, ast.ImportFrom):
+            for alias in node.names:
+                bound.add(alias.asname or alias.name)
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                for sub in ast.walk(t):
+                    if isinstance(sub, ast.Name):
+                        bound.add(sub.id)
+            if (len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                    and node.targets[0].id == "__all__"
+                    and isinstance(node.value, (ast.List, ast.Tuple))):
+                all_node = node
+                for elt in node.value.elts:
+                    if isinstance(elt, ast.Constant) \
+                            and isinstance(elt.value, str):
+                        all_names.append(elt.value)
+        elif isinstance(node, ast.AnnAssign) \
+                and isinstance(node.target, ast.Name):
+            bound.add(node.target.id)
+        elif isinstance(node, (ast.If, ast.Try)):
+            # conditional defs (TYPE_CHECKING / fallback imports) bind too
+            for sub in ast.walk(node):
+                if isinstance(sub, (ast.FunctionDef, ast.ClassDef)):
+                    bound.add(sub.name)
+                elif isinstance(sub, ast.Import):
+                    for alias in sub.names:
+                        bound.add((alias.asname or alias.name).split(".")[0])
+                elif isinstance(sub, ast.ImportFrom):
+                    for alias in sub.names:
+                        bound.add(alias.asname or alias.name)
+                elif isinstance(sub, ast.Assign):
+                    for t in sub.targets:
+                        if isinstance(t, ast.Name):
+                            bound.add(t.id)
+    if all_node is not None:
+        line = all_node.lineno
+        for name in all_names:
+            if name not in bound and "SPM006" not in pragmas.get(line, ()):
+                out.append(Violation(rel, line, "SPM006",
+                                     f"__all__ lists unbound name {name!r}"))
+    return out
+
+
+def lint_file(path: Path, root: Optional[Path] = None) -> List[Violation]:
+    """Run every rule over one file."""
+    rel = _posix(path if root is None else path.relative_to(root))
+    source = path.read_text()
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Violation(rel, e.lineno or 0, "SPM000",
+                          f"syntax error: {e.msg}")]
+    pragmas = _pragmas(source)
+    checker = _Checker(rel, pragmas)
+    checker.visit(tree)
+    return checker.found + _check_all_consistency(rel, tree, pragmas)
+
+
+def _repo_root() -> Path:
+    # src/repro/analysis/lint.py -> repo root three levels above src/
+    return Path(__file__).resolve().parents[3]
+
+
+def lint_paths(paths: Optional[Sequence[str]] = None) -> List[Violation]:
+    """Lint the given files/dirs (default: src/repro + benchmarks)."""
+    root = _repo_root()
+    if not paths:
+        paths = [p for p in (root / "src" / "repro", root / "benchmarks")
+                 if Path(p).exists()]
+    found: List[Violation] = []
+    for p in paths:
+        p = Path(p)
+        files: Iterable[Path] = (sorted(p.rglob("*.py")) if p.is_dir()
+                                 else [p])
+        for f in files:
+            try:
+                rel_root = root if f.resolve().is_relative_to(root) else None
+            except AttributeError:            # py<3.9 — not our floor
+                rel_root = None
+            found.extend(lint_file(f.resolve(), rel_root))
+    return found
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis lint",
+        description="spmlint: repo-specific AST rules "
+                    "(SPM001..SPM006; see repro/analysis/lint.py)")
+    ap.add_argument("paths", nargs="*",
+                    help="files or directories (default: src/repro, "
+                         "benchmarks)")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+    if args.list_rules:
+        for rule, desc in RULES.items():
+            print(f"{rule}  {desc}")
+        return 0
+    violations = lint_paths(args.paths)
+    for v in violations:
+        print(v)
+    n = len(violations)
+    print(f"spmlint: {n} violation(s)" if n else "spmlint: clean")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

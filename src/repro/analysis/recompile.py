@@ -1,0 +1,104 @@
+"""Recompilation sentinel: jit-cache-miss tracking as a hard assertion.
+
+A silent retrace is the repo's most expensive invisible bug class: the
+train step, the decode step, and the bench timing loops are all designed
+so their variants (chaos poison on/off, per-request sampling params,
+elastic restarts) ride TRACED operands of one compiled function — if a
+refactor turns one of those into a Python-level branch or an unstable
+static argument, everything still returns the right numbers, just 10-100x
+slower and with a compile stall in the serving tick.
+
+``CompileTracker`` watches the executable caches of specific
+``jax.jit``-wrapped callables (their ``_cache_size()``), so the count is
+exact and per-function — unlike global backend-compile event counts,
+which include XLA-internal jits.  ``assert_compiles(n, name=fn)`` is the
+assertion form wired into tests and ``benchmarks/kernel_bench.py``.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Callable, Dict, Iterator
+
+__all__ = ["RetraceError", "CompileTracker", "assert_compiles",
+           "assert_no_recompile"]
+
+
+class RetraceError(AssertionError):
+    """A watched jitted callable compiled a different number of times than
+    the sentinel's contract allows."""
+
+
+def _cache_size(fn: Callable) -> int:
+    size = getattr(fn, "_cache_size", None)
+    if size is None:
+        raise TypeError(
+            f"{fn!r} exposes no _cache_size(); pass the jax.jit-wrapped "
+            "callable itself (not a plain function or its __wrapped__)")
+    return size()
+
+
+class CompileTracker:
+    """Track new executable-cache entries of named jitted callables.
+
+    >>> step = jax.jit(f)
+    >>> with CompileTracker(step=step) as t:
+    ...     step(a); step(b)
+    >>> t.new_compiles()          # {"step": 1} if b hit a's executable
+    """
+
+    def __init__(self, **fns: Callable):
+        if not fns:
+            raise ValueError("CompileTracker needs at least one fn to watch")
+        self._fns: Dict[str, Callable] = dict(fns)
+        self._start: Dict[str, int] = {}
+
+    def __enter__(self) -> "CompileTracker":
+        self._start = {k: _cache_size(f) for k, f in self._fns.items()}
+        return self
+
+    def __exit__(self, *exc) -> None:
+        return None
+
+    def new_compiles(self) -> Dict[str, int]:
+        """Cache entries added per watched fn since ``__enter__``."""
+        if not self._start:
+            raise RuntimeError("tracker not entered")
+        return {k: _cache_size(f) - self._start[k]
+                for k, f in self._fns.items()}
+
+
+@contextlib.contextmanager
+def assert_compiles(expected: int, **fns: Callable) -> Iterator[CompileTracker]:
+    """Assert each watched jitted callable adds EXACTLY ``expected`` cache
+    entries inside the block (0 compile errors tolerated: fewer means the
+    call never ran or was already cached when the contract said fresh,
+    more means a retrace).
+
+    >>> with assert_compiles(1, train=jstep):
+    ...     jstep(state, batch, poison=0.0)
+    ...     jstep(state, batch, poison=1.0)   # traced operand: same exe
+    """
+    tracker = CompileTracker(**fns)
+    with tracker:
+        yield tracker
+    got = tracker.new_compiles()
+    bad = {k: v for k, v in got.items() if v != expected}
+    if bad:
+        detail = ", ".join(f"{k}={v}" for k, v in sorted(bad.items()))
+        hint = (" — a traced-operand variant is retracing (unstable static "
+                "argument / Python branch on a traced value?)"
+                if any(v > expected for v in bad.values()) else
+                " — the call never ran, or was already cached when the "
+                "contract said fresh")
+        raise RetraceError(
+            f"expected exactly {expected} compile(s) per watched fn, "
+            f"got {detail}{hint}")
+
+
+@contextlib.contextmanager
+def assert_no_recompile(**fns: Callable) -> Iterator[CompileTracker]:
+    """Assert the block adds ZERO cache entries — the steady-state form
+    (everything already warmed up before entering)."""
+    with assert_compiles(0, **fns) as tracker:
+        yield tracker

@@ -476,7 +476,7 @@ def spm_apply(params: dict, x: jax.Array, cfg: SPMConfig, *,
             in_width=in_width, out_width=out_width)
     if in_width is not None:
         pad = [(0, 0)] * (x.ndim - 1) + [(0, n - in_width)]
-        x = jnp.pad(x, pad)
+        x = jnp.pad(x, pad)  # spmlint: allow[SPM002] XLA fallback path
     coeffs = stage_coeffs(params, cfg).astype(x.dtype)
     res_scales = params.get("res_scale")
     if res_scales is None:

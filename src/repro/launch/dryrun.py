@@ -1,7 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count=512")
-
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
 For each cell:
@@ -19,6 +15,12 @@ Usage:
   python -m repro.launch.dryrun --all --linear-impl dense   # baseline
 Results land in results/dryrun/<mesh>/<arch>__<shape>[__<impl>].json.
 """
+
+import os
+
+# the 512 virtual host devices must be requested before jax initializes
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
 
 import argparse
 import dataclasses

@@ -16,6 +16,7 @@ coll_bytes/chip / link_bw.
 from __future__ import annotations
 
 import re
+import warnings
 from typing import Dict, Optional
 
 __all__ = ["collective_bytes", "roofline_terms", "HW", "parse_shape_bytes",
@@ -250,9 +251,20 @@ def cost_analysis_terms(compiled) -> Dict[str, float]:
 
 
 def memory_analysis_terms(compiled) -> Dict[str, float]:
+    """Per-device memory-footprint terms from ``compiled.memory_analysis()``.
+
+    Backends without the analysis raise ``NotImplementedError`` (or an
+    ``XlaRuntimeError``, a ``RuntimeError`` subclass) — those degrade to
+    ``{}`` WITH a warning so a traffic-model hole is visible instead of
+    silently dropping the columns; anything else (a genuine bug) raises.
+    """
     try:
         ma = compiled.memory_analysis()
-    except Exception:
+    except (NotImplementedError, RuntimeError) as e:
+        warnings.warn(
+            f"memory_analysis unavailable on this backend "
+            f"({type(e).__name__}: {e}); footprint terms omitted",
+            RuntimeWarning, stacklevel=2)
         return {}
     out = {}
     for k in ("argument_size_in_bytes", "output_size_in_bytes",

@@ -904,6 +904,7 @@ def _sharded_core_bwd(plan, saved, gy2):
         # output slice).  Window-reading the (rows, out_width) cotangent
         # instead would force replicating it — a batch-proportional
         # all-gather whenever it flows back feature-sharded.
+        # spmlint: allow[SPM002] — even-slab cotangent transport
         gy2 = jnp.pad(gy2, ((0, 0), (0, plan.n - plan.out_width)))
     out_specs = (y_spec, plan.table_specs(), plan.vec_spec(plan.has_din),
                  plan.vec_spec(plan.has_dout), plan.vec_spec(plan.has_bias))
@@ -1046,6 +1047,7 @@ def spm_apply_sharded(params: dict, x: jax.Array, cfg, mesh: Mesh, *,
     quantum = dp_total * block_rows
     padded = -(-rows // quantum) * quantum
     if padded != rows:
+        # spmlint: allow[SPM002] row padding to the DP x row-block quantum
         x2 = jnp.pad(x2, ((0, padded - rows), (0, 0)))
 
     row_blocks = pick_row_blocks(padded // dp_total,

@@ -1,0 +1,344 @@
+"""Static-analysis subsystem tests (compile contracts, spmlint, the
+recompilation sentinel — ``src/repro/analysis/``).
+
+The seeded-violation tests are the acceptance spine: each one plants the
+exact hazard a tool exists to catch (an XLA pad smuggled onto the kernel
+path, an inline eligibility predicate, a forced retrace) and asserts the
+corresponding contract / lint rule / sentinel actually fires.  The
+healthy-path twins prove the tools stay quiet on the real tree, so a
+finding is always a signal.
+"""
+
+import ast
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import contracts, driver, jaxpr_walk, lint
+from repro.analysis.recompile import (CompileTracker, RetraceError,
+                                      assert_compiles, assert_no_recompile)
+from repro.core.linear import LinearConfig, init_linear, linear_apply
+from repro.kernels.ops import plan_runs
+
+KEY = jax.random.PRNGKey(0)
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# jaxpr_walk units
+# ---------------------------------------------------------------------------
+
+def test_iter_eqns_descends_cond_branches():
+    """The walk reaches primitives inside cond branches (list-valued
+    sub-jaxpr params), not just direct .jaxpr params."""
+    def f(x):
+        return jax.lax.cond(x.sum() > 0, jnp.sin, jnp.cos, x)
+
+    jx = jax.make_jaxpr(f)(jnp.ones(4))
+    names = jaxpr_walk.primitive_names(jx.jaxpr)
+    assert "cond" in names and "sin" in names and "cos" in names
+
+
+def test_iter_eqns_does_not_descend_pallas_bodies():
+    """pallas_call equations are leaves: the fused linear traces exactly
+    len(plan_runs) pallas_calls and the walk must not multiply-count the
+    kernel bodies' internal equations as outer pads/slices."""
+    lc = LinearConfig(d_in=96, d_out=256, impl="spm_general",
+                      backward="custom", use_kernel=True)
+    p = init_linear(KEY, lc)
+    x = jax.random.normal(KEY, (8, 96))
+    jx = jax.make_jaxpr(lambda x: linear_apply(p, x, lc))(x)
+    n = lc.n
+    strides = lc.spm_config().pairing.strides()
+    got = jaxpr_walk.count_primitive(jx.jaxpr, "pallas_call")
+    assert got == len(plan_runs(n, tuple(strides)))
+    # the kernel bodies mask in-VMEM with iota/broadcast compares; none of
+    # that internal arithmetic may leak into the outer walk as pad
+    assert "pad" not in jaxpr_walk.primitive_names(jx.jaxpr)
+
+
+def test_feature_axis_slices_and_activation_pads():
+    rows = 8
+
+    def f(x):
+        y = jax.lax.slice(x, (0, 0), (rows, 40))      # feature narrowing
+        z = x[:4]                                     # row slice: ignored
+        return y.sum() + z.sum()
+
+    jx = jax.make_jaxpr(f)(jnp.ones((rows, 64)))
+    assert jaxpr_walk.feature_axis_slices(jx.jaxpr) == [((rows, 64),
+                                                         (rows, 40))]
+    assert jaxpr_walk.feature_axis_slices(jx.jaxpr, rows=99) == []
+
+    def g(x):
+        return jnp.pad(x, ((0, 0), (0, 24)))
+
+    jg = jax.make_jaxpr(g)(jnp.ones((rows, 40)))
+    assert jaxpr_walk.activation_pads(jg.jaxpr, rows=rows) == [((rows, 40),
+                                                                (rows, 64))]
+    assert jaxpr_walk.activation_pads(jg.jaxpr, rows=7) == []
+
+
+# ---------------------------------------------------------------------------
+# compile contracts: healthy pass + seeded violations
+# ---------------------------------------------------------------------------
+
+def _fused_cell():
+    return contracts.Cell(cell_id="96x256-butterfly/fused", d_in=96,
+                          d_out=256, variant="fused")
+
+
+def test_contracts_pass_on_healthy_fused_cell():
+    cell = _fused_cell()
+    results = contracts.run_cell(cell)
+    assert results, "no contracts applied"
+    bad = {k: v for k, v in results.items() if v != "pass"}
+    assert not bad, bad
+
+
+def test_contract_catches_injected_pad_on_kernel_path():
+    """Seeded violation: a pad + feature slice smuggled around the fused
+    forward must trip kernel-path-no-pad AND the single-output-slice
+    contract."""
+    cell = _fused_cell()
+    art = contracts.Artifacts(cell)
+    fwd = art._fwd_fn()
+
+    def bad_fwd(p, x):
+        x = jnp.pad(x, ((0, 0), (0, 4)))[:, :96]
+        return fwd(p, x)
+
+    # cached_property: planting the poisoned trace is one assignment
+    art.jaxpr_fwd = jax.make_jaxpr(bad_fwd)(art.params, art.x)
+    results = contracts.run_cell(cell, art)
+    assert results["kernel-path-no-pad"].startswith("fail"), results
+    assert results["kernel-path-single-output-slice"].startswith("fail")
+
+
+def test_contract_catches_silent_kernel_fallback():
+    """Seeded violation: a fused cell whose trace contains zero
+    pallas_calls (the silent XLA fallback) must trip kernel-path-engaged
+    and the pallas-count contract."""
+    cell = _fused_cell()
+    art = contracts.Artifacts(cell)
+    lc_off = LinearConfig(d_in=cell.d_in, d_out=cell.d_out,
+                          impl="spm_general", backward=cell.backward,
+                          use_kernel=False)
+    art.jaxpr_fwd = jax.make_jaxpr(
+        lambda p, x: linear_apply(p, x, lc_off))(art.params, art.x)
+    results = contracts.run_cell(cell, art)
+    assert results["kernel-path-engaged"].startswith("fail"), results
+    assert results["pallas-call-count-matches-plan"].startswith("fail")
+
+
+def test_contract_reports_error_not_skip_on_broken_artifact():
+    """An artifact that cannot build is a finding, not a silent skip."""
+    cell = _fused_cell()
+    art = contracts.Artifacts(cell)
+
+    class Boom:
+        def __getattr__(self, name):
+            raise RuntimeError("artifact exploded")
+
+    art.jaxpr_fwd = Boom()
+    results = contracts.run_cell(cell, art)
+    assert any(v.startswith("error:") for v in results.values()), results
+
+
+# ---------------------------------------------------------------------------
+# spmlint: seeded violations per rule + clean tree
+# ---------------------------------------------------------------------------
+
+def _lint_src(tmp_path, rel, source):
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(source)
+    return lint.lint_file(p, root=tmp_path)
+
+
+def test_spm001_inline_eligibility_predicate(tmp_path):
+    src = '"""doc."""\ndef sharded_eligible(cfg):\n    return True\n'
+    found = _lint_src(tmp_path, "src/repro/parallel/helper.py", src)
+    assert [v.rule for v in found] == ["SPM001"]
+    # the one legitimate home is exempt
+    assert _lint_src(tmp_path, "src/repro/core/eligibility.py", src) == []
+
+
+def test_spm002_pad_on_kernel_path(tmp_path):
+    src = '"""doc."""\nimport jax.numpy as jnp\n\n\ndef f(x):\n' \
+          '    return jnp.pad(x, ((0, 0), (0, 4)))\n'
+    found = _lint_src(tmp_path, "src/repro/core/spm.py", src)
+    assert [v.rule for v in found] == ["SPM002"]
+    # outside the kernel path the same call is fine
+    assert _lint_src(tmp_path, "src/repro/train/step.py", src) == []
+    # and a pragma documents the sanctioned fallback site
+    src_ok = src.replace("    return jnp.pad",
+                         "    # spmlint: allow[SPM002] fallback\n"
+                         "    return jnp.pad")
+    assert _lint_src(tmp_path, "src/repro/core/spm.py", src_ok) == []
+
+
+def test_spm003_pallas_outside_kernels(tmp_path):
+    src = '"""doc."""\nfrom jax.experimental import pallas as pl\n'
+    found = _lint_src(tmp_path, "src/repro/core/fancy.py", src)
+    assert [v.rule for v in found] == ["SPM003"]
+    assert _lint_src(tmp_path, "src/repro/kernels/fancy.py", src) == []
+
+
+def test_spm004_branch_on_traced_value(tmp_path):
+    src = '"""doc."""\nimport jax.numpy as jnp\n\n\ndef f(x):\n' \
+          '    if jnp.any(x > 0):\n        return x\n    return -x\n'
+    found = _lint_src(tmp_path, "src/repro/core/util.py", src)
+    assert [v.rule for v in found] == ["SPM004"]
+    # static trace-time attributes are safe branches
+    src_ok = src.replace("jnp.any(x > 0)",
+                         "jnp.issubdtype(x.dtype, jnp.floating)")
+    assert _lint_src(tmp_path, "src/repro/core/util.py", src_ok) == []
+
+
+def test_spm005_nondeterminism_in_bench_code(tmp_path):
+    src = '"""doc."""\nimport time\nimport numpy as np\n\n\ndef f():\n' \
+          '    return time.time() + np.random.rand()\n'
+    found = _lint_src(tmp_path, "benchmarks/new_bench.py", src)
+    assert sorted(v.rule for v in found) == ["SPM005", "SPM005"]
+    src_ok = '"""doc."""\nimport time\nimport numpy as np\n\n\ndef f():\n' \
+             '    rng = np.random.default_rng(0)\n' \
+             '    return time.perf_counter() + rng.random()\n'
+    assert _lint_src(tmp_path, "benchmarks/new_bench.py", src_ok) == []
+
+
+def test_spm006_all_and_docstring_consistency(tmp_path):
+    src = '"""doc."""\n__all__ = ["present", "ghost"]\n\n\ndef present():\n' \
+          '    pass\n'
+    found = _lint_src(tmp_path, "src/repro/core/mod.py", src)
+    assert [v.rule for v in found] == ["SPM006"]
+    assert "ghost" in found[0].msg
+    nodoc = "x = 1\n"
+    found = _lint_src(tmp_path, "src/repro/core/mod2.py", nodoc)
+    assert [v.rule for v in found] == ["SPM006"]
+
+
+def test_spmlint_tree_is_clean():
+    """The committed tree carries zero violations (sanctioned sites are
+    pragma'd) — the CI lint job stays green by construction."""
+    found = lint.lint_paths()
+    assert found == [], "\n".join(str(v) for v in found)
+
+
+# ---------------------------------------------------------------------------
+# recompilation sentinel
+# ---------------------------------------------------------------------------
+
+def test_tracker_rejects_unjitted_fn():
+    with pytest.raises(TypeError):
+        with CompileTracker(f=lambda x: x):
+            pass
+
+
+def test_chaos_guard_train_step_compiles_once_across_poison():
+    """The chaos port is a TRACED operand: healthy and poisoned steps ride
+    one executable (the whole point of the in-graph injection)."""
+    from repro.models import MLPConfig, init_mlp, mlp_loss
+    from repro.optim import OptimizerConfig
+    from repro.train import make_train_state, make_train_step
+
+    cfg = MLPConfig(n_features=16, n_classes=4)
+    step = jax.jit(make_train_step(
+        lambda p, b: mlp_loss(p, b, cfg),
+        OptimizerConfig(lr=1e-2, total_steps=4), chaos_guard=True))
+    state = make_train_state(init_mlp(KEY, cfg))
+    batch = {"x": jax.random.normal(KEY, (8, 16)),
+             "y": jnp.zeros((8,), jnp.int32)}
+    with assert_compiles(1, train_step=step):
+        state, _ = step(state, batch, 0.0)
+        state, _ = step(state, batch, 1.0)   # poisoned: same executable
+    with assert_no_recompile(train_step=step):
+        step(state, batch, 0.0)
+
+
+def test_serve_decode_compiles_once_across_temperatures():
+    """Per-request sampling params (temperature, key) are traced: a
+    temperature sweep decodes on ONE compiled step."""
+    from repro.configs import get_smoke
+    from repro.models import transformer as T
+    from repro.serve import ServeEngine
+
+    cfg = get_smoke("qwen3-1.7b")
+    eng = ServeEngine(cfg=cfg, params=T.init_model(KEY, cfg), max_len=16,
+                      cache_dtype=jnp.float32)
+    prompts = jax.random.randint(KEY, (2, 4), 0, cfg.vocab_size)
+    with assert_compiles(1, decode_step=eng._step):
+        eng.generate(prompts, max_new_tokens=3, temperature=0.7, key=KEY)
+        eng.generate(prompts, max_new_tokens=3, temperature=1.3, key=KEY)
+
+
+def test_sentinel_catches_forced_retrace():
+    """Seeded violation: a shape change retraces the watched jit and the
+    sentinel must raise (this is the regression it exists for)."""
+    f = jax.jit(lambda x: x * 2)
+    with pytest.raises(RetraceError, match="retracing"):
+        with assert_compiles(1, f=f):
+            f(jnp.ones(4))
+            f(jnp.ones(8))           # new shape -> second executable
+
+
+def test_sentinel_catches_never_ran():
+    f = jax.jit(lambda x: x + 1)
+    with pytest.raises(RetraceError, match="never ran"):
+        with assert_compiles(1, f=f):
+            pass
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def test_driver_smoke_single_arch():
+    """In-process single-arch sweep: every contract passes, sharded
+    variants are skipped with visible reasons on a 1-device pytest run
+    (conftest forbids forcing devices in-process; the CLI forces 8)."""
+    report = driver.run_check(["mamba2-370m"], scales=("smoke",),
+                              include_bench_shapes=False, verbose=False)
+    c = report["counts"]
+    assert c["cells"] > 0 and c["contract_checks"] > 0
+    assert c["failures"] == 0, report["failures"]
+    if jax.device_count() < driver.N_SHARDS:
+        assert report["skipped"], "expected shard variants skipped"
+        assert all("devices" in s["reason"] or "divisible" in s["reason"]
+                   or "shard" in s["reason"] for s in report["skipped"])
+    # every fused/unfused cell reports its kernel-path verdict
+    for cid, cell in report["cells"].items():
+        assert cell["contracts"], cid
+        assert cell["kernel_path"] == (cell["variant"] != "unfused")
+
+
+def test_bench_rect_shapes_in_sync_with_kernel_bench():
+    """driver.BENCH_RECT_SHAPES duplicates benchmarks/kernel_bench.py's
+    RECT_SHAPES as data (benchmarks/ is not importable from src/): this
+    test is the sync contract."""
+    path = os.path.join(REPO, "benchmarks", "kernel_bench.py")
+    tree = ast.parse(open(path).read())
+    rect = None
+    for node in tree.body:
+        if (isinstance(node, ast.Assign)
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id == "RECT_SHAPES"):
+            rect = ast.literal_eval(node.value)
+    assert rect is not None, "RECT_SHAPES not found in kernel_bench.py"
+    assert [tuple(t) for t in rect] == \
+        [tuple(t) for t in driver.BENCH_RECT_SHAPES]
+
+
+def test_enumerate_operators_covers_all_archs():
+    """Every registry arch contributes at least one operator at each
+    scale, and dedupe keeps the arch attribution."""
+    from repro.configs import registry
+    ops = driver.enumerate_operators(include_bench_shapes=True)
+    tagged = {a for rec in ops.values() for a in rec["archs"]}
+    for arch in registry.ARCH_IDS:
+        assert f"{arch}[smoke]" in tagged, arch
+        assert f"{arch}[full]" in tagged, arch
+    assert "kernel_bench" in tagged

@@ -94,3 +94,62 @@ def test_gate_accepts_the_committed_baseline_against_itself():
     regs, dropped, new = cr.compare(bench, bench)
     assert regs == [] and dropped == [] and new == []
     assert len(cr.gated_metrics(bench)) >= 10
+
+
+# ---------------------------------------------------------------------------
+# compile-contract report gating (repro.analysis driver output)
+# ---------------------------------------------------------------------------
+
+def _contract_report(failures=(), cells=None):
+    default_cells = {
+        "96x256-butterfly/fused": {"kernel_path": True,
+                                   "contracts": {"kernel-path-no-pad":
+                                                 "pass"}},
+        "96x256-butterfly/unfused": {"kernel_path": False,
+                                     "contracts": {}},
+    }
+    return {"schema": 1, "counts": {"contract_checks": 2},
+            "failures": list(failures),
+            "cells": default_cells if cells is None else cells}
+
+
+def test_contract_gate_passes_clean_report():
+    fails, dropped = cr.compare_contracts(_contract_report(),
+                                          _contract_report())
+    assert fails == [] and dropped == []
+
+
+def test_contract_gate_fails_on_contract_failure():
+    fresh = _contract_report(
+        failures=["96x256-butterfly/fused/kernel-path-no-pad: fail: pad"])
+    fails, _ = cr.compare_contracts(fresh, _contract_report())
+    assert len(fails) == 1 and "kernel-path-no-pad" in fails[0]
+
+
+def test_contract_gate_fails_on_dropped_cell_and_lost_kernel_path():
+    base = _contract_report()
+    # fresh lost one cell entirely and the other fell off the kernel path
+    fresh = _contract_report(cells={
+        "96x256-butterfly/fused": {"kernel_path": False, "contracts": {}},
+    })
+    fails, dropped = cr.compare_contracts(fresh, base)
+    assert fails == []
+    assert len(dropped) == 2
+    assert any("missing" in d for d in dropped)
+    assert any("fell off the kernel path" in d for d in dropped)
+
+
+def test_contract_gate_cli(tmp_path):
+    base_p, fresh_p = tmp_path / "base.json", tmp_path / "fresh.json"
+    base_p.write_text(json.dumps(_payload()))
+    fresh_p.write_text(json.dumps(_payload()))
+    cb_p, cf_p = tmp_path / "cbase.json", tmp_path / "cfresh.json"
+    cb_p.write_text(json.dumps(_contract_report()))
+    cf_p.write_text(json.dumps(_contract_report()))
+    argv = ["--baseline", str(base_p), "--fresh", str(fresh_p),
+            "--contract-report", str(cf_p),
+            "--contract-baseline", str(cb_p)]
+    assert cr.main(argv) == 0
+    cf_p.write_text(json.dumps(_contract_report(
+        failures=["x/contract: fail"])))
+    assert cr.main(argv) == 1

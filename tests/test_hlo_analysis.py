@@ -1,0 +1,168 @@
+"""Unit tests for the raw HLO-text parsers (``repro.launch.hlo_analysis``)
+and the structured matchers layered on them (``repro.analysis.hlo_match``),
+on ADVERSARIAL hand-written HLO: async -start/-done twins that must count
+once, tuple result shapes, unknown dtypes that must be skipped, and the
+``memory_analysis`` degradation path (warn + empty, never crash)."""
+
+import warnings
+
+import pytest
+
+from repro.analysis.hlo_match import (assert_bwd_gather_bounded,
+                                      assert_permute_only, list_collectives,
+                                      permute_only_violations)
+from repro.launch.hlo_analysis import (collective_bytes,
+                                       memory_analysis_terms,
+                                       parse_shape_bytes)
+
+
+# ---------------------------------------------------------------------------
+# parse_shape_bytes
+# ---------------------------------------------------------------------------
+
+def test_parse_shape_bytes_simple_and_rank0():
+    assert parse_shape_bytes("f32[8,64]") == 8 * 64 * 4
+    assert parse_shape_bytes("bf16[16]") == 32
+    assert parse_shape_bytes("f32[]") == 4          # rank-0: one element
+    assert parse_shape_bytes("pred[4]") == 4
+
+
+def test_parse_shape_bytes_tuple_shapes_sum():
+    # async collectives carry tuple-typed results: every member counts
+    s = "(f32[8,16], u32[], s32[2,2])"
+    assert parse_shape_bytes(s) == 8 * 16 * 4 + 4 + 4 * 4
+
+
+def test_parse_shape_bytes_skips_unknown_dtypes():
+    # a token dtype the table doesn't know contributes nothing (instead of
+    # crashing or guessing) — layout/opaque annotations stay inert
+    assert parse_shape_bytes("token[]") == 0
+    assert parse_shape_bytes("(token[], f32[4])") == 16
+    assert parse_shape_bytes("opaque123[8]") == 0
+
+
+# ---------------------------------------------------------------------------
+# collective_bytes on adversarial HLO text
+# ---------------------------------------------------------------------------
+
+_ASYNC_HLO = """\
+HloModule adversarial
+
+ENTRY main {
+  p0 = f32[8,16] parameter(0)
+  cps = (f32[8,16], f32[8,16]) collective-permute-start(p0), channel_id=1
+  cpd = f32[8,16] collective-permute-done(cps)
+  ag = f32[8,64] all-gather(cpd), dimensions={1}
+  ars = f32[8,16] all-reduce-start(cpd), to_apply=add
+  ard = f32[8,16] all-reduce-done(ars)
+  ROOT t = tuple(ag, ard)
+}
+"""
+
+
+def test_collective_bytes_counts_async_pairs_once():
+    cb = collective_bytes(_ASYNC_HLO)
+    # the -start line carries a (operand, result) tuple: both members are
+    # parsed, but the -done twin adds nothing
+    assert cb["collective-permute"] == 2 * 8 * 16 * 4
+    assert cb["all-reduce"] == 8 * 16 * 4
+    assert cb["all-gather"] == 8 * 64 * 4
+    assert cb["total"] == (cb["collective-permute"] + cb["all-reduce"]
+                           + cb["all-gather"])
+
+
+def test_collective_bytes_ignores_non_collective_lines():
+    hlo = "x = f32[1024,1024] dot(a, b)\ny = f32[4] add(c, d)\n"
+    cb = collective_bytes(hlo)
+    assert cb["total"] == 0
+
+
+# ---------------------------------------------------------------------------
+# hlo_match structured matchers
+# ---------------------------------------------------------------------------
+
+def test_list_collectives_orders_and_flags_async():
+    ops = list_collectives(_ASYNC_HLO)
+    kinds = [o.kind for o in ops]
+    assert kinds == ["collective-permute", "all-gather", "all-reduce"]
+    assert [o.is_async for o in ops] == [True, False, True]
+    assert ops[0].line_no < ops[1].line_no < ops[2].line_no
+
+
+def test_permute_only_violations_and_budgets():
+    bad = permute_only_violations(_ASYNC_HLO)
+    assert any("all-gather" in b for b in bad)
+    assert any("all-reduce" in b for b in bad)
+    # generous budgets absorb both; the permute requirement is satisfied
+    assert permute_only_violations(
+        _ASYNC_HLO, allow={"all-gather": 10**6, "all-reduce": 10**6}) == []
+    # an empty module with require_permute flags the vacuous pass
+    assert permute_only_violations("ENTRY e { ROOT c = f32[] constant(0) }")
+
+
+def test_assert_permute_only_raises_with_detail():
+    with pytest.raises(AssertionError, match="all-gather"):
+        assert_permute_only(_ASYNC_HLO)
+    clean = "cp = f32[8,8] collective-permute(p0), channel_id=1\n"
+    assert_permute_only(clean)          # no raise
+
+
+def test_bwd_gather_bound():
+    hlo = "ag = f32[256] all-gather(x), dimensions={0}\n"
+    assert_bwd_gather_bounded(hlo, param_bytes=512)       # 1024 budget
+    with pytest.raises(AssertionError, match="all-gather"):
+        assert_bwd_gather_bounded(hlo, param_bytes=100)
+    with pytest.raises(AssertionError, match="all-reduce"):
+        assert_bwd_gather_bounded(
+            "ar = f32[4] all-reduce(x), to_apply=add\n", param_bytes=10**6)
+
+
+# ---------------------------------------------------------------------------
+# memory_analysis_terms degradation (the un-silenced except)
+# ---------------------------------------------------------------------------
+
+class _NoAnalysis:
+    def memory_analysis(self):
+        raise NotImplementedError("backend has no memory analysis")
+
+
+class _RuntimeFail:
+    def memory_analysis(self):
+        raise RuntimeError("UNIMPLEMENTED: memory analysis")
+
+
+class _Bug:
+    def memory_analysis(self):
+        raise ValueError("a genuine bug, not a backend gap")
+
+
+class _Ok:
+    class _MA:
+        argument_size_in_bytes = 128
+        output_size_in_bytes = 64
+        temp_size_in_bytes = 32
+
+    def memory_analysis(self):
+        return self._MA()
+
+
+def test_memory_analysis_degrades_with_warning_not_silently():
+    for compiled in (_NoAnalysis(), _RuntimeFail()):
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            assert memory_analysis_terms(compiled) == {}
+        assert len(w) == 1
+        assert issubclass(w[0].category, RuntimeWarning)
+        assert "memory_analysis unavailable" in str(w[0].message)
+
+
+def test_memory_analysis_reraises_genuine_bugs():
+    with pytest.raises(ValueError, match="genuine bug"):
+        memory_analysis_terms(_Bug())
+
+
+def test_memory_analysis_extracts_known_terms():
+    terms = memory_analysis_terms(_Ok())
+    assert terms == {"argument_size_in_bytes": 128,
+                     "output_size_in_bytes": 64,
+                     "temp_size_in_bytes": 32}

@@ -253,36 +253,21 @@ def test_linear_apply_fused_parity_rectangular(d_in, d_out, dtype):
 def test_fused_rectangular_no_xla_pad_or_slice():
     """Acceptance: the fused rectangular linear_apply lowers with NO
     XLA-level jnp.pad and no feature-axis output slice — the zero-fill and
-    the partial store live inside the kernel boundary runs.  (Walks every
-    inner jaxpr except kernel bodies; the batch is a multiple of the row
-    block so the only legitimate pad — row padding — is absent too.)"""
+    the partial store live inside the kernel boundary runs.  (Uses the
+    shared repro.analysis.jaxpr_walk walker, which visits every inner
+    jaxpr except kernel bodies; the batch is a multiple of the row block
+    so the only legitimate pad — row padding — is absent too.)"""
+    from repro.analysis.jaxpr_walk import feature_axis_slices, primitive_names
+
     lc = LinearConfig(d_in=96, d_out=256, impl="spm_general",
                       backward="custom", use_kernel=True)
     p = init_linear(KEY, lc)
     x = jax.random.normal(KEY, (8, 96))
-
-    eqns = []
-
-    def walk(jaxpr):
-        for eqn in jaxpr.eqns:
-            eqns.append(eqn)
-            if eqn.primitive.name == "pallas_call":
-                continue  # in-kernel masking is the point, don't descend
-            for v in eqn.params.values():
-                if hasattr(v, "jaxpr") and hasattr(v.jaxpr, "eqns"):
-                    walk(v.jaxpr)
-                elif hasattr(v, "eqns"):
-                    walk(v)
-
-    walk(jax.make_jaxpr(lambda x: linear_apply(p, x, lc))(x).jaxpr)
-    names = [e.primitive.name for e in eqns]
+    jx = jax.make_jaxpr(lambda x: linear_apply(p, x, lc))(x)
+    names = primitive_names(jx.jaxpr)
     assert "pad" not in names, f"XLA pad survived: {sorted(set(names))}"
-    for e in eqns:
-        if e.primitive.name == "slice":
-            iv, ov = e.invars[0].aval, e.outvars[0].aval
-            assert not (len(iv.shape) == 2
-                        and iv.shape[-1] != ov.shape[-1]), \
-                f"feature-axis output slice survived: {iv.shape}->{ov.shape}"
+    slices = feature_axis_slices(jx.jaxpr)
+    assert slices == [], f"feature-axis output slice survived: {slices}"
 
 
 def test_bwd_dead_tile_skip_zero_blocks():
