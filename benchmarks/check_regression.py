@@ -22,12 +22,19 @@ contract baseline but missing from the fresh report fails too — a config
 silently dropping off the kernel path is a regression even when the
 modeled bytes of the remaining cells look fine.
 
+The serving benchmark rides the same gate: ``--serve-baseline`` /
+``--serve-fresh`` compare ``BENCH_serve.json`` payloads on their
+schedule-deterministic metrics (decode ticks, latency percentiles, slot
+idleness, and the decode tick's steady-state compile count — wall-clock
+is never gated; see ``gated_serve_metrics``).
+
 Usage:
   PYTHONPATH=src:. python benchmarks/kernel_bench.py --smoke --out fresh.json
   PYTHONPATH=src:. python benchmarks/check_regression.py \
       --baseline BENCH_kernel.json --fresh fresh.json [--tol 0.02] \
       [--contract-report fresh_contracts.json \
-       --contract-baseline ANALYSIS_contracts.json]
+       --contract-baseline ANALYSIS_contracts.json] \
+      [--serve-baseline BENCH_serve.json --serve-fresh fresh_serve.json]
 """
 
 from __future__ import annotations
@@ -73,11 +80,36 @@ def gated_metrics(bench: dict) -> Dict[Tuple, float]:
     return out
 
 
-def compare(baseline: dict, fresh: dict,
-            tol: float = DEFAULT_TOL) -> Tuple[list, list, list]:
+def gated_serve_metrics(bench: dict) -> Dict[Tuple, float]:
+    """Flatten a ``BENCH_serve.json`` payload into {key: value} for every
+    gated metric — the schedule-deterministic ones only (ticks, tokens,
+    latency percentiles, slot idleness, tick compile count).  Wall-clock
+    fields are excluded by construction.  Each gated number is
+    smaller-is-better so the shared ``compare`` direction applies:
+    occupancy is gated as ``idle_milli`` (1000 - occupancy_milli)."""
+    out: Dict[Tuple, float] = {}
+    base = ("serve", bench.get("arch"), bench.get("slots"),
+            bench.get("requests"), bench.get("max_new"))
+    out[base + ("tick_compiles",)] = bench.get("tick_compiles", 0)
+    for row in bench.get("loads", []):
+        k = base + (row["offered_load"],)
+        out[k + ("ticks",)] = row["ticks"]
+        out[k + ("tokens",)] = row["tokens"]
+        out[k + ("idle_milli",)] = 1000 - row["occupancy_milli"]
+        out[k + ("p50_latency_ticks",)] = row["p50_latency_ticks"]
+        out[k + ("p99_latency_ticks",)] = row["p99_latency_ticks"]
+    return out
+
+
+def compare(baseline: dict, fresh: dict, tol: float = DEFAULT_TOL,
+            metrics_fn=None) -> Tuple[list, list, list]:
     """Returns (regressions, dropped, new) key lists; the gate passes iff
-    the first two are empty.  A regression entry is (key, base, fresh)."""
-    b, f = gated_metrics(baseline), gated_metrics(fresh)
+    the first two are empty.  A regression entry is (key, base, fresh).
+    ``metrics_fn`` flattens a payload into gated {key: value} (default:
+    the kernel-bench metrics; pass ``gated_serve_metrics`` for
+    BENCH_serve payloads)."""
+    metrics_fn = metrics_fn or gated_metrics
+    b, f = metrics_fn(baseline), metrics_fn(fresh)
     regressions = []
     for key, bv in b.items():
         if key not in f:
@@ -127,6 +159,11 @@ def main(argv=None) -> int:
     ap.add_argument("--contract-baseline", default=None,
                     help="committed contract report; fresh must cover "
                          "every baseline cell")
+    ap.add_argument("--serve-baseline", default=None,
+                    help="committed BENCH_serve.json")
+    ap.add_argument("--serve-fresh", default=None,
+                    help="fresh BENCH_serve.json to gate (requires "
+                         "--serve-baseline)")
     args = ap.parse_args(argv)
     with open(args.baseline) as fh:
         baseline = json.load(fh)
@@ -148,6 +185,31 @@ def main(argv=None) -> int:
     for key, bv, fv in regressions:
         print(f"FAIL: {key}: {bv:,} -> {fv:,} "
               f"(+{(fv / bv - 1) * 100:.1f}% > tol {args.tol * 100:.0f}%)")
+    s_regressions, s_dropped = [], []
+    if args.serve_fresh:
+        if not args.serve_baseline:
+            print("ERROR: --serve-fresh requires --serve-baseline")
+            return 2
+        with open(args.serve_baseline) as fh:
+            s_base = json.load(fh)
+        with open(args.serve_fresh) as fh:
+            s_fresh = json.load(fh)
+        scale = ("arch", "slots", "requests", "max_new")
+        if any(s_base.get(k) != s_fresh.get(k) for k in scale):
+            print("ERROR: serve-bench scale mismatch — baseline "
+                  f"{[s_base.get(k) for k in scale]} vs fresh "
+                  f"{[s_fresh.get(k) for k in scale]}; regenerate at the "
+                  "same scale")
+            return 2
+        s_regressions, s_dropped, s_new = compare(
+            s_base, s_fresh, args.tol, metrics_fn=gated_serve_metrics)
+        for key in s_new:
+            print(f"note: new serve row (no baseline, not gated): {key}")
+        for key in s_dropped:
+            print(f"FAIL: baseline serve row missing from fresh bench: "
+                  f"{key}")
+        for key, bv, fv in s_regressions:
+            print(f"FAIL: serve {key}: {bv:,} -> {fv:,}")
     c_failures, c_dropped = [], []
     if args.contract_report:
         with open(args.contract_report) as fh:
@@ -162,9 +224,11 @@ def main(argv=None) -> int:
         for d in c_dropped:
             print(f"FAIL: contract coverage: {d}")
     if regressions or (dropped and not args.allow_dropped) \
-            or c_failures or c_dropped:
+            or c_failures or c_dropped or s_regressions or s_dropped:
         print(f"bench regression gate FAILED "
               f"({len(regressions)} regressions, {len(dropped)} dropped, "
+              f"{len(s_regressions)} serve regressions, "
+              f"{len(s_dropped)} serve rows dropped, "
               f"{len(c_failures)} contract failures, "
               f"{len(c_dropped)} contract coverage losses)")
         return 1
@@ -172,9 +236,12 @@ def main(argv=None) -> int:
     if args.contract_report:
         n_contract = (f", {c_fresh['counts']['contract_checks']} "
                       "contract checks")
+    n_serve = ""
+    if args.serve_fresh:
+        n_serve = f", {len(gated_serve_metrics(s_fresh))} serve metrics"
     print(f"bench regression gate passed "
           f"({len(gated_metrics(fresh))} metrics, {len(new)} new"
-          f"{n_contract})")
+          f"{n_serve}{n_contract})")
     return 0
 
 

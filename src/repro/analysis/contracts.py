@@ -32,7 +32,7 @@ from repro.analysis.hlo_match import (bwd_gather_bound_violations,
                                       permute_only_violations)
 from repro.core import eligibility
 from repro.core.linear import LinearConfig, init_linear, linear_apply
-from repro.kernels.ops import plan_runs
+from repro.kernels.ops import plan_runs, plan_runs_for_rows
 
 __all__ = ["Cell", "Artifacts", "Contract", "CONTRACTS", "contract",
            "run_cell", "VARIANTS"]
@@ -138,8 +138,11 @@ class Artifacts:
 
     @functools.cached_property
     def runs(self):
-        """Unsharded fused-kernel run plan."""
-        return plan_runs(self.n, self.strides)
+        """Unsharded fused-kernel run plan — row-count-aware, matching
+        what ``spm_stack_fused`` executes for this cell's ``rows`` (f32
+        activations): tiny-row cells plan under the widened decode tile
+        cap."""
+        return plan_runs_for_rows(self.n, self.strides, self.cell.rows, 4)
 
     @functools.cached_property
     def steps(self):

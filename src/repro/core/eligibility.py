@@ -54,7 +54,8 @@ from repro.core.pairings import Schedule
 
 __all__ = ["plan_steps", "kernel_eligible", "use_fused_kernel",
            "sharded_eligible", "resolve_shard_kernel", "resolve_overlap",
-           "resolve_rdma", "overlap_segments", "OVERLAP_ROW_BLOCKS"]
+           "resolve_rdma", "overlap_segments", "OVERLAP_ROW_BLOCKS",
+           "TINY_ROW_THRESHOLD", "tiny_row_call"]
 
 # Row blocks per shard slab under the overlap schedule: block i's partner
 # exchange hides under block i+1's compute, so >= 2 blocks are needed for
@@ -65,6 +66,22 @@ __all__ = ["plan_steps", "kernel_eligible", "use_fused_kernel",
 # (launch/hlo_analysis.sharded_stage_traffic's overlap default) import —
 # so the modeled pipeline depth can never drift from the executed one.
 OVERLAP_ROW_BLOCKS = 4
+
+# Decode-tick calls hit the fused kernel with rows = active batch slots —
+# often 1-8, far below the training row counts the default feature-tiling
+# assumes.  At or under this row count the kernel planner widens feature
+# tiles instead (kernels/ops.plan_runs_for_rows): with a single 8-row
+# block resident, VMEM affords much wider tiles, turning a many-run grid
+# of dead rows into few wide runs.  Contract cells lower at rows=8, so
+# the committed ANALYSIS baselines pin exactly this boundary.
+TINY_ROW_THRESHOLD = 8
+
+
+def tiny_row_call(n_rows: int) -> bool:
+    """Whether a call with ``n_rows`` flattened batch rows should take the
+    decode-specialized tiny-row kernel plan (wider feature tiles — see
+    ``kernels/ops.plan_runs_for_rows``)."""
+    return 0 < n_rows <= TINY_ROW_THRESHOLD
 
 
 def _is_pow2(k: int) -> bool:

@@ -61,9 +61,11 @@ from typing import Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.eligibility import tiny_row_call
 from repro.kernels import spm_stack as K
 
-__all__ = ["spm_stack_fused", "plan_runs", "pick_block_rows_for_plan",
+__all__ = ["spm_stack_fused", "plan_runs", "plan_runs_for_rows",
+           "tile_cap_for_rows", "pick_block_rows_for_plan",
            "default_interpret"]
 
 MAX_TILE = 2048  # lane-dim tile cap: 16 VREG lanes x 128; VMEM-comfortable
@@ -123,6 +125,30 @@ def plan_runs(n: int, strides: Tuple[int, ...],
         cur_lcm = new_lcm
     close()
     return tuple(runs)
+
+
+def tile_cap_for_rows(n: int, strides: Tuple[int, ...], n_rows: int,
+                      dtype_bytes: int = 4) -> int:
+    """Feature-tile cap for a call with ``n_rows`` flattened batch rows:
+    the default ``MAX_TILE`` for training-sized calls, the widened
+    ``spm_stack.pick_max_tile`` cap for tiny-row (decode) calls — see
+    ``core/eligibility.tiny_row_call``."""
+    if tiny_row_call(n_rows):
+        return max(MAX_TILE, K.pick_max_tile(n, len(strides), dtype_bytes))
+    return MAX_TILE
+
+
+def plan_runs_for_rows(n: int, strides: Tuple[int, ...], n_rows: int,
+                       dtype_bytes: int = 4
+                       ) -> Tuple[Tuple[Tuple[int, ...], int], ...]:
+    """Row-count-aware run plan: ``plan_runs`` under the tile cap
+    ``tile_cap_for_rows`` picks for ``n_rows``.  The ONE planner both the
+    executor (``spm_stack_fused``) and the compile-contract checker
+    (``analysis/contracts.Artifacts.runs``) call, so the proven
+    pallas-call count can never drift from the executed plan."""
+    strides = tuple(int(s) for s in strides)
+    return plan_runs(n, strides,
+                     tile_cap_for_rows(n, strides, n_rows, dtype_bytes))
 
 
 def _flatten_rows(x: jax.Array) -> Tuple[jax.Array, Tuple[int, ...]]:
@@ -192,20 +218,24 @@ def _boundary_kw(r: int, n_runs: int, flags, d_in, d_out, bias) -> dict:
     return kw
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9, 10))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9, 10, 11))
 def _fused_core(x2, coeffs, d_in, d_out, bias,
-                strides, flags, block_rows, interpret, in_width, out_width):
+                strides, flags, block_rows, interpret, in_width, out_width,
+                max_tile=MAX_TILE):
     """x2: (B, in_width or n) row-major; coeffs: (L, n//2, 4);
-    d_in/d_out/bias: (n,).  Returns (B, out_width or n)."""
+    d_in/d_out/bias: (n,).  Returns (B, out_width or n).  ``max_tile`` is
+    the static feature-tile cap the run plan was made under (widened for
+    tiny-row decode calls)."""
     return _fused_fwd(x2, coeffs, d_in, d_out, bias,
                       strides, flags, block_rows, interpret,
-                      in_width, out_width)[0]
+                      in_width, out_width, max_tile)[0]
 
 
 def _fused_fwd(x2, coeffs, d_in, d_out, bias,
-               strides, flags, block_rows, interpret, in_width, out_width):
+               strides, flags, block_rows, interpret, in_width, out_width,
+               max_tile=MAX_TILE):
     n = 2 * coeffs.shape[1]
-    runs = plan_runs(n, strides)
+    runs = plan_runs(n, strides, max_tile)
     zs = []
     z = x2
     off = 0
@@ -223,11 +253,11 @@ def _fused_fwd(x2, coeffs, d_in, d_out, bias,
 
 
 def _fused_bwd(strides, flags, block_rows, interpret, in_width, out_width,
-               res, gy):
+               max_tile, res, gy):
     zs, coeffs, d_in, d_out, bias = res
     has_din, has_dout, has_bias = flags
     n = 2 * coeffs.shape[1]
-    runs = plan_runs(n, strides)
+    runs = plan_runs(n, strides, max_tile)
     offsets = _run_offsets(runs)
     delta = gy
     g_cf_parts = [None] * len(runs)
@@ -325,9 +355,11 @@ def spm_stack_fused(x: jax.Array, coeffs: jax.Array,
     if interpret is None:
         interpret = default_interpret()
     x2, lead = _flatten_rows(x)
+    max_tile = tile_cap_for_rows(n, strides, x2.shape[0],
+                                 dtype_bytes=x.dtype.itemsize)
     if block_rows is None:
         block_rows = pick_block_rows_for_plan(
-            plan_runs(n, strides), x2.shape[0],
+            plan_runs(n, strides, max_tile), x2.shape[0],
             dtype_bytes=x.dtype.itemsize)
     x2p, rows = _pad_rows(x2, block_rows)
     flags = (d_in is not None, d_out is not None, bias is not None)
@@ -337,7 +369,8 @@ def spm_stack_fused(x: jax.Array, coeffs: jax.Array,
         d_in if d_in is not None else placeholder,
         d_out if d_out is not None else placeholder,
         bias if bias is not None else placeholder,
-        strides, flags, block_rows, interpret, in_width, out_width)
+        strides, flags, block_rows, interpret, in_width, out_width,
+        max_tile)
     if y2.shape[0] != rows:       # row padding only; never a feature slice
         y2 = y2[:rows]
     out_w = out_width if out_width is not None else n

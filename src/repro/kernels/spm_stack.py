@@ -244,6 +244,26 @@ def pick_block_rows(n_tile: int, n_stages: int, dtype_bytes: int = 4,
     return bb
 
 
+def pick_max_tile(n: int, n_stages: int, dtype_bytes: int = 4,
+                  budget: int = 12 * 2**20) -> int:
+    """Feature-tile cap for tiny-row (decode) calls: the widest
+    power-of-two multiple of the default 2048 cap whose backward working
+    set still fits the VMEM budget at the MINIMUM row block (8).
+
+    Decode ticks call the operator with rows = active batch slots — a
+    single row block.  The default ``ops.MAX_TILE`` cap is sized for
+    training row counts, where many row blocks stream through VMEM
+    concurrently with wide tiles; with one 8-row block resident the same
+    budget affords much wider tiles, so a schedule that plans to several
+    runs at 2048 (several HBM round-trips per token) re-plans to fewer,
+    wider runs — often one."""
+    cap = 2048
+    while cap < n and vmem_bytes(8, cap * 2, n_stages,
+                                 dtype_bytes) <= budget:
+        cap *= 2
+    return cap
+
+
 def _vec_spec(n_tile: int) -> pl.BlockSpec:
     """(1, n_tile) slab of an (1, n) vector, indexed by the feature tile."""
     return pl.BlockSpec((1, n_tile), lambda i, j: (0, j))

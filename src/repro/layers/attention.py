@@ -120,20 +120,30 @@ def chunked_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     G = H // Hkv
     scale = dh ** -0.5
 
+    # Pad the EDGE chunk (masked) instead of shrinking the chunk to a
+    # divisor: the old largest-divisor search degraded to chunk=1 on
+    # prime/odd lengths (a T=1021 prefill became a length-1021 scan of
+    # single-row chunks).  Padded key positions land past every real
+    # position, so the causal mask would admit them for padded queries —
+    # the explicit ``kp < Tk`` refinement keeps them out everywhere; padded
+    # query rows are sliced off the output.
     q_chunk = min(q_chunk, Tq)
-    while Tq % q_chunk:
-        q_chunk -= 1
     k_chunk = min(k_chunk, Tk)
-    while Tk % k_chunk:
-        k_chunk -= 1
-    nq, nk = Tq // q_chunk, Tk // k_chunk
+    Tq_pad = -(-Tq // q_chunk) * q_chunk
+    Tk_pad = -(-Tk // k_chunk) * k_chunk
+    if Tq_pad != Tq:
+        q = jnp.pad(q, ((0, 0), (0, Tq_pad - Tq), (0, 0), (0, 0)))
+    if Tk_pad != Tk:
+        k = jnp.pad(k, ((0, 0), (0, Tk_pad - Tk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Tk_pad - Tk), (0, 0), (0, 0)))
+    nq, nk = Tq_pad // q_chunk, Tk_pad // k_chunk
 
     qg = (q.reshape(B, nq, q_chunk, Hkv, G, dh).astype(jnp.float32) * scale)
     kg = k.reshape(B, nk, k_chunk, Hkv, dh).astype(jnp.float32)
     vg = v.reshape(B, nk, k_chunk, Hkv, dh).astype(jnp.float32)
 
-    q_pos = q_offset + jnp.arange(Tq).reshape(nq, q_chunk)
-    k_pos = jnp.arange(Tk).reshape(nk, k_chunk)
+    q_pos = q_offset + jnp.arange(Tq_pad).reshape(nq, q_chunk)
+    k_pos = jnp.arange(Tk_pad).reshape(nk, k_chunk)
 
     def per_q_chunk(qi, qc):
         # qc: (B, q_chunk, Hkv, G, dh)
@@ -146,6 +156,8 @@ def chunked_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             mask = kp[None, :] <= qp[:, None]             # causal
             if window is not None:
                 mask &= kp[None, :] > qp[:, None] - window
+            if Tk_pad != Tk:
+                mask &= kp[None, :] < Tk                  # padded keys out
             s = jnp.where(mask[None, None, None], s, NEG_INF)
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
@@ -166,7 +178,9 @@ def chunked_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
     outs = jax.lax.map(lambda i: per_q_chunk(i, qg[:, i]), jnp.arange(nq))
     # outs: (nq, B, q_chunk, G, Hkv, dh)
-    out = jnp.moveaxis(outs, 0, 1).reshape(B, Tq, H, dh)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Tq_pad, H, dh)
+    if Tq_pad != Tq:
+        out = out[:, :Tq]
     return out
 
 
@@ -177,10 +191,28 @@ def chunked_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 def attention_apply(params: dict, x: jax.Array, cfg: AttentionConfig, *,
                     cos: jax.Array, sin: jax.Array,
                     cache: Optional[dict] = None,
-                    cache_index: Optional[jax.Array] = None
+                    cache_index: Optional[jax.Array] = None,
+                    fill_len: Optional[jax.Array] = None
                     ) -> Tuple[jax.Array, Optional[dict]]:
-    """x: (B, T, d).  Training/prefill when cache is None; single-token
-    decode when cache is given (T == 1, cache_index = current length)."""
+    """x: (B, T, d).  Three modes:
+
+    * **training** — ``cache is None``: chunked causal attention, no cache.
+    * **prefill-into-cache** — cache given with ``T > 1``: the fresh
+      prompt runs the SAME chunked attention path and its K/V are
+      block-written into the (assumed empty) cache in one pass — no
+      per-token scan.  ``cache_index`` is the scalar start position
+      (serving prefills at 0); ``fill_len`` (scalar or per-row ``(B,)``)
+      gives the TRUE prompt length of a right-padded batch: windowed
+      layers ring-fill only the last ``window`` REAL positions (padded
+      keys never evict real ones), and full layers rely on the decode
+      valid mask to hide padded slots until decode overwrites them.
+    * **decode** — cache given with ``T == 1``: append K/V at
+      ``cache_index`` and attend over the cache.  ``cache_index`` may be
+      a scalar (whole batch at one position — the fixed-batch engine) or
+      per-row ``(B,)`` (continuous batching: every slot at its own
+      length, scatter-written).  Windowed layers treat the cache as a
+      ring buffer (slot = index % window, age-based valid mask).
+    """
     B, T, _ = x.shape
     H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
 
@@ -203,14 +235,52 @@ def attention_apply(params: dict, x: jax.Array, cfg: AttentionConfig, *,
             q, k, v, window=cfg.window,
             q_chunk=cfg.q_chunk, k_chunk=cfg.k_chunk)
         new_cache = None
-    else:
-        # decode: append k/v at cache_index (ring-buffer for windowed layers)
+    elif T > 1:
+        # prefill-into-cache: attention over the fresh prompt runs the
+        # chunked training path (cache assumed empty), then K/V are
+        # block-written in one pass.
+        out = chunked_causal_attention(
+            q, k, v, window=cfg.window,
+            q_chunk=cfg.q_chunk, k_chunk=cfg.k_chunk)
+        kc = k.astype(cache["k"].dtype)
+        vc = v.astype(cache["v"].dtype)
         s_cache = cache["k"].shape[1]
-        slot = (cache_index % s_cache) if cfg.window is not None else cache_index
-        ck = jax.lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-        cv = jax.lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        start = jnp.asarray(0 if cache_index is None else cache_index)
+        if cfg.window is None:
+            ck = jax.lax.dynamic_update_slice(cache["k"], kc, (0, start, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], vc, (0, start, 0, 0))
+        else:
+            # ring fill: slot j holds the newest position p with
+            # p % window == j among the REAL positions start..last; with a
+            # right-padded prompt, ``fill_len`` keeps padded keys out of
+            # the ring so they can never evict real recent positions.
+            lens = jnp.broadcast_to(
+                jnp.asarray(T if fill_len is None else fill_len), (B,))
+            last = start + lens - 1                          # (B,) global
+            j = jnp.arange(s_cache)[None, :]                 # (1, W)
+            p = last[:, None] - ((last[:, None] - j) % s_cache)
+            src = jnp.clip(p - start, 0, T - 1)              # (B, W)
+            ck = jnp.take_along_axis(kc, src[:, :, None, None], axis=1)
+            cv = jnp.take_along_axis(vc, src[:, :, None, None], axis=1)
+        new_cache = {"k": ck, "v": cv}
+    else:
+        # decode: append k/v at cache_index (ring-buffer for windowed
+        # layers); per-row (B,) cache_index scatter-writes each row at its
+        # own slot — the continuous-batching path.
+        ci = jnp.asarray(cache_index)
+        s_cache = cache["k"].shape[1]
+        slot = (ci % s_cache) if cfg.window is not None else ci
+        if ci.ndim == 1:
+            rows = jnp.arange(B)
+            ck = cache["k"].at[rows, slot].set(
+                k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[rows, slot].set(
+                v[:, 0].astype(cache["v"].dtype))
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
         new_cache = {"k": ck, "v": cv}
         scale = dh ** -0.5
         qf = q.astype(jnp.float32) * scale                 # (B,1,H,dh)
@@ -218,15 +288,17 @@ def attention_apply(params: dict, x: jax.Array, cfg: AttentionConfig, *,
         vf = cv.astype(jnp.float32)
         qg = qf.reshape(B, 1, Hkv, H // Hkv, dh)
         s = jnp.einsum("bthgd,bshd->bhgts", qg, kf)        # (B,Hkv,G,1,S)
-        pos = jnp.arange(s_cache)
+        pos = jnp.arange(s_cache)[None, :]                 # (1, S)
+        ci_b = jnp.broadcast_to(ci, (B,))[:, None]         # (B, 1)
         if cfg.window is None:
-            valid = pos <= cache_index
+            valid = pos <= ci_b                            # (B, S)
         else:
             # ring buffer: valid slots are the last min(index+1, window)
-            n_valid = jnp.minimum(cache_index + 1, s_cache)
-            age = (slot - pos) % s_cache                   # 0 = newest
+            n_valid = jnp.minimum(ci_b + 1, s_cache)
+            slot_b = jnp.broadcast_to(slot, (B,))[:, None]
+            age = (slot_b - pos) % s_cache                 # 0 = newest
             valid = age < n_valid
-        s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+        s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
         p = jax.nn.softmax(s, axis=-1)
         out = jnp.einsum("bhgts,bshd->bthgd", p, vf).reshape(B, 1, H, dh)
 

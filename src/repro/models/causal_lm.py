@@ -37,7 +37,11 @@ def lm_loss(params: dict, batch: dict, cfg: T.ModelConfig
     ce = jnp.sum(nll * mask) / denom
     loss = ce + MOE_AUX_COEF * aux
     metrics = {"loss": loss, "ce": ce, "aux": aux,
-               "ppl_proxy": jnp.exp(jnp.clip(ce, max=20.0))}
+               "ppl_proxy": jnp.exp(jnp.clip(ce, max=20.0)),
+               # mask weight of this batch: lets gradient accumulation
+               # recover the global masked mean from per-microbatch means
+               # (train/step.py averages ce weighted by ce_weight).
+               "ce_weight": denom}
     return loss, metrics
 
 
@@ -48,23 +52,45 @@ def train_metrics(metrics: dict) -> dict:
 def prefill(params: dict, cfg: T.ModelConfig, *, max_len: int,
             tokens: Optional[jax.Array] = None,
             embeds: Optional[jax.Array] = None,
-            cache_dtype=jnp.bfloat16):
+            cache_dtype=jnp.bfloat16,
+            length: Optional[jax.Array] = None):
     """Run the prompt through the model and build a decode-ready cache.
 
-    Implementation: token-parallel forward for the logits (cheap, chunked
-    attention), then the cache is filled by replaying K/V projections —
-    here we simply run the forward in cache-filling mode token-block-wise
-    is avoided: we recompute K/V per layer via a cache-free forward and
-    scatter.  For simplicity and exactness we fill the cache by running
-    decode over the prompt with ``lax.scan`` (state-carried); logits of the
-    last position are returned.  O(T) steps but each is O(1) — acceptable
-    for the CPU validation path; the dry-run lowers the fused variant.
+    Attention-only stacks take the chunked path: ONE token-parallel forward
+    (chunked causal attention) that also writes K/V into the cache —
+    O(T^2/chunk) attention work instead of the O(T)-sequential
+    decode-replay scan.  ``length`` (scalar or per-row ``(B,)``) gives true
+    prompt lengths when the batch is right-padded to a common bucket
+    length; last-position logits are gathered at ``length - 1`` per row and
+    windowed ring caches only fill real positions.
+
+    Stacks with SSM mixers (mamba2/zamba2 hybrids) keep the exact
+    decode-replay ``lax.scan`` (SSM caches are strictly single-token);
+    ``length`` is unsupported there.
     """
     if tokens is not None:
         B, T_len = tokens.shape
     else:
         B, T_len = embeds.shape[:2]
     cache = T.init_cache(B, max_len, cfg, cache_dtype)
+    attn_only = all(s.mixer == "attn" for s in cfg.layers)
+
+    if attn_only:
+        kw = {"tokens": tokens} if tokens is not None else {"embeds": embeds}
+        logits, cache, _ = T.forward(
+            params, cfg, cache=cache,
+            cache_index=jnp.asarray(0, jnp.int32),
+            fill_len=length, **kw)
+        if length is None:
+            return logits[:, -1], cache
+        last = jnp.broadcast_to(jnp.asarray(length), (B,)) - 1
+        out = jnp.take_along_axis(logits, last[:, None, None], axis=1)
+        return out[:, 0], cache
+
+    if length is not None:
+        raise NotImplementedError(
+            "per-row prompt lengths need an attention-only stack "
+            "(SSM caches prefill via the sequential scan)")
 
     def step(carry, t):
         cache = carry

@@ -322,12 +322,12 @@ def _rope_tables(cfg: ModelConfig, positions: jax.Array) -> dict:
 
 
 def _apply_shared(shared_params: dict, h: jax.Array, cfg: ModelConfig,
-                  rope: dict, cache, cache_index):
+                  rope: dict, cache, cache_index, fill_len=None):
     cos, sin = rope["default"]
     a, new_cache = attention_apply(
         shared_params["attn"], rms_norm(shared_params["norm1"], h),
         cfg.shared_attn_cfg(), cos=cos, sin=sin,
-        cache=cache, cache_index=cache_index)
+        cache=cache, cache_index=cache_index, fill_len=fill_len)
     h = h + a
     f = ffn_apply(shared_params["ffn"], rms_norm(shared_params["norm2"], h),
                   cfg.shared_ffn_cfg())
@@ -336,12 +336,13 @@ def _apply_shared(shared_params: dict, h: jax.Array, cfg: ModelConfig,
 
 def _apply_layer(lp: dict, spec: LayerSpec, cfg: ModelConfig, h: jax.Array,
                  rope: dict, shared_params: Optional[dict],
-                 cache: Optional[dict], cache_index):
+                 cache: Optional[dict], cache_index, fill_len=None):
     new_cache: dict = {}
     aux = jnp.zeros((), jnp.float32)
     if spec.shared_block:
         sc = None if cache is None else cache.get("shared")
-        h, nsc = _apply_shared(shared_params, h, cfg, rope, sc, cache_index)
+        h, nsc = _apply_shared(shared_params, h, cfg, rope, sc, cache_index,
+                               fill_len)
         if cache is not None:
             new_cache["shared"] = nsc
     x = rms_norm(lp["norm1"], h)
@@ -350,7 +351,7 @@ def _apply_layer(lp: dict, spec: LayerSpec, cfg: ModelConfig, h: jax.Array,
         cos, sin = rope[spec.rope]
         y, nmc = attention_apply(lp["mixer"], x, cfg.attn_cfg(spec),
                                  cos=cos, sin=sin, cache=mc,
-                                 cache_index=cache_index)
+                                 cache_index=cache_index, fill_len=fill_len)
     else:
         y, nmc = mamba2_apply(lp["mixer"], x, cfg.mamba_cfg(), cache=mc)
     if cache is not None:
@@ -368,13 +369,19 @@ def forward(params: dict, cfg: ModelConfig, *,
             tokens: Optional[jax.Array] = None,
             embeds: Optional[jax.Array] = None,
             positions: Optional[jax.Array] = None,
-            cache=None, cache_index=None):
+            cache=None, cache_index=None, fill_len=None):
     """Returns (logits, new_cache, aux_loss).
 
-    Training / prefill: cache=None / cache given with full-seq tokens is not
-    supported — prefill runs cache-free and the serving engine seeds the
-    cache from prefill activations (serve/engine.py).  Decode: T == 1 with
-    cache + cache_index.
+    Three modes:
+
+    * training — ``cache=None``: plain causal forward over the full batch.
+    * chunked prefill — ``cache`` given with ``T > 1`` tokens: one causal
+      forward whose attention layers also write K/V into the cache starting
+      at ``cache_index`` (attention-only stacks; SSM caches are strictly
+      single-token).  ``fill_len`` (scalar or per-row ``(B,)``) gives true
+      prompt lengths when the batch is right-padded to a bucket length.
+    * decode — ``T == 1`` with ``cache`` + ``cache_index`` (scalar, or
+      per-row ``(B,)`` for continuous batching).
     """
     if tokens is not None:
         h = embed(params["embed"], tokens, cfg.embed_cfg(), cfg.dtype,
@@ -394,7 +401,12 @@ def forward(params: dict, cfg: ModelConfig, *,
     h = constrain(h, "batch_full")
 
     if positions is None:
-        base = jnp.arange(T) if cache_index is None else cache_index + jnp.arange(T)
+        if cache_index is None:
+            base = jnp.arange(T)
+        else:
+            ci = jnp.asarray(cache_index)
+            off = ci[:, None] if ci.ndim == 1 else ci
+            base = off + jnp.arange(T)
         positions = jnp.broadcast_to(base, (B, T))
         if cfg.rope_kind == "mrope":
             positions = jnp.broadcast_to(positions, (3, B, T))
@@ -434,7 +446,7 @@ def forward(params: dict, cfg: ModelConfig, *,
             for i, spec in enumerate(specs):
                 h, nc, a = _apply_layer(gp[f"l{i}"], spec, cfg, h, rope,
                                         shared_params, gc[f"l{i}"],
-                                        cache_index)
+                                        cache_index, fill_len)
                 new_gc[f"l{i}"] = nc
                 aux = aux + a
             out = None if cache is None else new_gc
@@ -464,7 +476,7 @@ def forward(params: dict, cfg: ModelConfig, *,
                 step = jax.checkpoint(_apply_layer,
                                       static_argnums=(1, 2), prevent_cse=False)
             h, nc, a = step(lp, spec, cfg, h, rope, shared_params, lc,
-                            cache_index)
+                            cache_index, fill_len)
             aux_total = aux_total + a
             if cache is not None:
                 new_cache.append(nc)

@@ -22,10 +22,15 @@ __all__ = ["compress", "decompress", "compress_tree", "decompress_tree",
            "ef_step", "psum_compressed"]
 
 
+def _amax_scale(x: jax.Array) -> jax.Array:
+    """Per-tensor int8 quantization scale: absmax / 127 (+eps)."""
+    return jnp.max(jnp.abs(x.astype(jnp.float32))) / 127.0 + 1e-12
+
+
 def compress(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """f32 -> (int8 values, f32 scale)."""
     xf = x.astype(jnp.float32)
-    scale = jnp.max(jnp.abs(xf)) / 127.0 + 1e-12
+    scale = _amax_scale(xf)
     q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
     return q, scale
 
@@ -68,11 +73,13 @@ def psum_compressed(grads: Any, axis_name: str) -> Any:
     collective).  Sum of int8 payloads in int32, then rescale — exact for
     the quantized values; per-member scales are all-gathered (tiny)."""
     def one(g):
-        q, s = compress(g)
         # each member may have a different scale; reduce in scaled space:
         # sum_i q_i * s_i = psum(q * s) — but that defeats compression.
         # Standard trick: use the axis-max scale so payload stays int8.
-        s_max = jax.lax.pmax(s, axis_name)
+        # Only the scale is needed here — quantizing against the LOCAL
+        # scale first would be dead work (the payload is re-quantized
+        # against s_max below).
+        s_max = jax.lax.pmax(_amax_scale(g), axis_name)
         q2 = jnp.clip(jnp.round(g.astype(jnp.float32) / s_max),
                       -127, 127).astype(jnp.int8)
         total = jax.lax.psum(q2.astype(jnp.int32), axis_name)

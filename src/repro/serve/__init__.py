@@ -1,3 +1,4 @@
-"""Serving: batched prefill + decode engine."""
+"""Serving: batched prefill + decode engine, continuous batching."""
 
-from repro.serve.engine import ServeEngine, serve_step  # noqa: F401
+from repro.serve.engine import (ContinuousBatchingEngine,  # noqa: F401
+                                Request, ServeEngine, serve_step)

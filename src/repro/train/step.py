@@ -5,7 +5,9 @@
 
   * optional microbatch gradient accumulation (``accum_steps`` splits the
     per-device batch along axis 0 and ``lax.scan``s the grads — constant
-    memory in global batch),
+    memory in global batch; metrics are averaged across microbatches,
+    mask-weighted for ``ce`` via ``ce_weight``, so logs describe the same
+    batch the loss optimizes),
   * global-norm clipping + AdamW + cosine schedule,
   * a NaN/inf GUARD: if the gradient global-norm is non-finite the update
     is skipped entirely (params and opt state pass through) and
@@ -74,7 +76,22 @@ def make_train_step(loss_fn: Callable, opt_cfg: OptimizerConfig, *,
             body, (zero, jnp.zeros((), jnp.float32)), mb)
         scale = 1.0 / accum_steps
         grads = jax.tree.map(lambda g: g * scale, gsum)
-        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        # average the stacked per-microbatch metrics — the logged numbers
+        # must describe the WHOLE accumulated batch, not the last micro.
+        # ce is a masked mean, so a plain mean of per-micro means would
+        # skew under uneven masks: weight it by each micro's mask sum
+        # (ce_weight from lm_loss) to recover the global masked mean.
+        stacked = metrics
+        metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), stacked)
+        if (isinstance(stacked, dict) and "ce" in stacked
+                and "ce_weight" in stacked):
+            w = stacked["ce_weight"]
+            wsum = jnp.maximum(jnp.sum(w), 1.0)
+            metrics["ce"] = jnp.sum(stacked["ce"] * w) / wsum
+            metrics["ce_weight"] = jnp.sum(w)
+            if "ppl_proxy" in metrics:
+                metrics["ppl_proxy"] = jnp.exp(jnp.clip(metrics["ce"],
+                                                        max=20.0))
         return loss_sum * scale, metrics, grads
 
     def step(state: dict, batch: Any, poison: Any = None):

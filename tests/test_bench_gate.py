@@ -153,3 +153,87 @@ def test_contract_gate_cli(tmp_path):
     cf_p.write_text(json.dumps(_contract_report(
         failures=["x/contract: fail"])))
     assert cr.main(argv) == 1
+
+
+# ---------------------------------------------------------------------------
+# serve-bench gating (BENCH_serve.json payloads)
+# ---------------------------------------------------------------------------
+
+def _serve_payload():
+    return {
+        "schema": "serve_bench/v1", "arch": "qwen3-1.7b", "slots": 4,
+        "requests": 12, "max_new": 6, "tick_compiles": 0,
+        "loads": [
+            {"offered_load": 0.5, "ticks": 40, "tokens": 72,
+             "occupancy_milli": 450, "p50_latency_ticks": 4,
+             "p99_latency_ticks": 6, "wall_s": 1.0, "tokens_per_s": 72.0},
+            {"offered_load": 2.0, "ticks": 16, "tokens": 72,
+             "occupancy_milli": 940, "p50_latency_ticks": 8,
+             "p99_latency_ticks": 10, "wall_s": 0.5,
+             "tokens_per_s": 144.0},
+        ],
+    }
+
+
+def test_serve_gate_identical_payloads_pass_and_wall_clock_ignored():
+    fresh = _serve_payload()
+    fresh["loads"][0]["wall_s"] = 99.0          # wall-clock never gated
+    fresh["loads"][0]["tokens_per_s"] = 0.1
+    regs, dropped, new = cr.compare(_serve_payload(), fresh,
+                                    metrics_fn=cr.gated_serve_metrics)
+    assert regs == [] and dropped == [] and new == []
+
+
+def test_serve_gate_fails_on_latency_occupancy_or_compile_regression():
+    for field, worse in [("p99_latency_ticks", 14), ("ticks", 60)]:
+        fresh = _serve_payload()
+        fresh["loads"][0][field] = worse
+        regs, _, _ = cr.compare(_serve_payload(), fresh,
+                                metrics_fn=cr.gated_serve_metrics)
+        assert len(regs) == 1 and field in regs[0][0]
+    # occupancy drop gates as idle growth
+    fresh = _serve_payload()
+    fresh["loads"][1]["occupancy_milli"] = 500   # idle 60 -> 500
+    regs, _, _ = cr.compare(_serve_payload(), fresh,
+                            metrics_fn=cr.gated_serve_metrics)
+    assert len(regs) == 1 and "idle_milli" in regs[0][0]
+    # a retracing decode tick is a hard failure
+    fresh = _serve_payload()
+    fresh["tick_compiles"] = 3
+    regs, _, _ = cr.compare(_serve_payload(), fresh,
+                            metrics_fn=cr.gated_serve_metrics)
+    assert len(regs) == 1 and "tick_compiles" in regs[0][0]
+
+
+def test_serve_gate_cli(tmp_path):
+    base_p, fresh_p = tmp_path / "base.json", tmp_path / "fresh.json"
+    base_p.write_text(json.dumps(_payload()))
+    fresh_p.write_text(json.dumps(_payload()))
+    sb_p, sf_p = tmp_path / "sbase.json", tmp_path / "sfresh.json"
+    sb_p.write_text(json.dumps(_serve_payload()))
+    sf_p.write_text(json.dumps(_serve_payload()))
+    argv = ["--baseline", str(base_p), "--fresh", str(fresh_p),
+            "--serve-baseline", str(sb_p), "--serve-fresh", str(sf_p)]
+    assert cr.main(argv) == 0
+    bad = _serve_payload()
+    bad["loads"][1]["p50_latency_ticks"] = 12
+    sf_p.write_text(json.dumps(bad))
+    assert cr.main(argv) == 1
+    # serve scale mismatch is an error, never a vacuous pass
+    mism = _serve_payload()
+    mism["slots"] = 8
+    sf_p.write_text(json.dumps(mism))
+    assert cr.main(argv) == 2
+    # --serve-fresh without a baseline is an error
+    assert cr.main(["--baseline", str(base_p), "--fresh", str(fresh_p),
+                    "--serve-fresh", str(sf_p)]) == 2
+
+
+def test_serve_gate_accepts_the_committed_baseline_against_itself():
+    with open(os.path.join(REPO, "BENCH_serve.json")) as f:
+        bench = json.load(f)
+    regs, dropped, new = cr.compare(bench, bench,
+                                    metrics_fn=cr.gated_serve_metrics)
+    assert regs == [] and dropped == [] and new == []
+    assert bench["tick_compiles"] == 0      # the single-compile contract
+    assert len(cr.gated_serve_metrics(bench)) >= 10

@@ -617,3 +617,30 @@ else:
         gx_gather = rows * (-(-in_w // 4) * 4) * 4
         assert_bwd_gather_bounded(hlo_b, param_bytes=param_bytes,
                                   extra_gather_bytes=gx_gather)
+
+    def test_psum_compressed_under_shard_map():
+        """The int8 gradient all-reduce under a REAL shard_map pod axis
+        (8 forced host devices): every member quantizes against the
+        axis-max scale (pmax), the int8 payloads psum in int32, and each
+        member dequantizes to the identical replicated result — matching
+        the explicit host-side int8-sum reference."""
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        from repro.optim.compression import _amax_scale, psum_compressed
+
+        mesh = Mesh(np.asarray(jax.devices()).reshape(N_DEV), ("pod",))
+        # wildly different per-member magnitudes: local-scale quantization
+        # would disagree on the dequant grid across members
+        g = jnp.stack([(2.0 if i % 2 else 0.01) *
+                       jax.random.normal(jax.random.fold_in(KEY, i), (64,))
+                       for i in range(N_DEV)])
+        f = jax.jit(shard_map(
+            lambda gi: psum_compressed({"w": gi[0]}, "pod")["w"][None],
+            mesh=mesh, in_specs=P("pod"), out_specs=P("pod")))
+        out = np.asarray(f(g))
+        s_max = float(max(_amax_scale(g[i]) for i in range(N_DEV)))
+        q = np.clip(np.round(np.asarray(g, np.float64) / s_max), -127, 127)
+        ref = q.sum(axis=0) * s_max
+        for i in range(N_DEV):
+            np.testing.assert_allclose(out[i], ref, rtol=1e-5, atol=1e-6)

@@ -28,6 +28,7 @@ API_MODULES = [
     "repro.core.eligibility",
     "repro.configs.base",
     "repro.parallel",
+    "repro.serve.engine",
 ]
 
 DOC_FILES = ["README.md"] + sorted(

@@ -346,7 +346,9 @@ def test_fused_rectangular_multi_run_boundaries(in_w, out_w):
     n, strides = 4096, (1, 2, 4, 8, 1024, 2048)
     assert len(plan_runs(n, strides)) == 2
     cf, d_in, d_out, bias = _full_operands(n, len(strides))
-    x = jax.random.normal(KEY, (4, in_w))
+    # 16 rows: above TINY_ROW_THRESHOLD, so the multi-run default plan
+    # engages (tiny batches collapse to a single wide run by design)
+    x = jax.random.normal(KEY, (16, in_w))
 
     def f(x, cf, d_in, d_out, bias):
         y = spm_stack_fused(x, cf, strides, d_in=d_in, d_out=d_out,
@@ -361,7 +363,7 @@ def test_fused_rectangular_multi_run_boundaries(in_w, out_w):
 
     y = spm_stack_fused(x, cf, strides, d_in=d_in, d_out=d_out, bias=bias,
                         in_width=in_w, out_width=out_w)
-    assert y.shape == (4, out_w)
+    assert y.shape == (16, out_w)
     xp = jnp.pad(x, ((0, 0), (0, n - in_w)))
     ref = spm_full_ref(xp, cf, tuple(strides), d_in=d_in, d_out=d_out,
                        bias=bias)[:, :out_w]
@@ -369,7 +371,7 @@ def test_fused_rectangular_multi_run_boundaries(in_w, out_w):
                                atol=1e-4, rtol=1e-4)
     g = jax.grad(f, argnums=(0, 1, 2, 3, 4))(x, cf, d_in, d_out, bias)
     gr = jax.grad(r, argnums=(0, 1, 2, 3, 4))(x, cf, d_in, d_out, bias)
-    assert g[0].shape == (4, in_w)
+    assert g[0].shape == (16, in_w)
     for a, b in zip(g, gr):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    atol=1e-3, rtol=1e-3)
@@ -395,7 +397,8 @@ def test_fused_dead_chain_non_monotone_tiles(in_w, out_w):
     cf = 0.4 * jax.random.normal(jax.random.PRNGKey(1),
                                  (len(strides), n // 2, 4))
     xw = in_w if in_w is not None else n
-    x = jax.random.normal(KEY, (4, xw))
+    # 16 rows keep the non-monotone 3-run plan (tiny rows collapse it)
+    x = jax.random.normal(KEY, (16, xw))
 
     def f(x, cf):
         y = spm_stack_fused(x, cf, strides, in_width=in_w, out_width=out_w)
@@ -407,7 +410,7 @@ def test_fused_dead_chain_non_monotone_tiles(in_w, out_w):
 
     g = jax.grad(f, argnums=(0, 1))(x, cf)
     gr = jax.grad(r, argnums=(0, 1))(x, cf)
-    assert g[0].shape == (4, xw)
+    assert g[0].shape == (16, xw)
     for a, b in zip(g, gr):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    atol=1e-3, rtol=1e-3)
@@ -503,3 +506,61 @@ def test_vmem_budget_respected():
         br = pick_block_rows(nt, 12)
         assert vmem_bytes(br, nt, 12) <= 12 * 2 ** 20 * 2  # within 2x budget
         assert br >= 8
+
+
+# ---------------------------------------------------------------------------
+# tiny-row (decode) plans
+# ---------------------------------------------------------------------------
+
+def test_plan_runs_for_rows_tiny_vs_training():
+    """Decode-sized calls (rows <= TINY_ROW_THRESHOLD) re-plan under the
+    widened VMEM tile cap — fewer, wider runs (fewer HBM round-trips per
+    token) — while training-sized calls keep the default plan exactly."""
+    from repro.core.eligibility import TINY_ROW_THRESHOLD, tiny_row_call
+    from repro.kernels.ops import (MAX_TILE, plan_runs_for_rows,
+                                   tile_cap_for_rows)
+    from repro.kernels.spm_stack import pick_max_tile
+
+    assert not tiny_row_call(0)
+    assert all(tiny_row_call(r) for r in range(1, TINY_ROW_THRESHOLD + 1))
+    assert not tiny_row_call(TINY_ROW_THRESHOLD + 1)
+
+    n, strides = 4096, (1, 2, 4, 8, 1024, 2048)
+    assert len(plan_runs(n, strides)) == 2        # default: 2 runs @ 2048
+    assert tile_cap_for_rows(n, strides, 64) == MAX_TILE
+    assert plan_runs_for_rows(n, strides, 64) == plan_runs(n, strides)
+
+    assert pick_max_tile(n, len(strides)) >= n    # one 8-row block fits
+    assert tile_cap_for_rows(n, strides, 4) >= n
+    tiny = plan_runs_for_rows(n, strides, 4)
+    assert len(tiny) == 1 and tiny[0][1] == n     # single full-width run
+    # the runs cover the same stage sequence either way
+    assert sum((list(r[0]) for r in tiny), []) == \
+        sum((list(r[0]) for r in plan_runs(n, strides)), [])
+
+
+def test_tiny_row_fused_matches_ref_and_grads():
+    """A decode-shaped call (4 rows) through spm_stack_fused takes the
+    single-run tiny plan and still matches the jnp oracle bitwise-close,
+    forward and backward — the re-plan changes traffic, not math."""
+    from repro.kernels.ops import plan_runs_for_rows
+
+    n, strides = 4096, (1, 2, 2048)
+    assert len(plan_runs_for_rows(n, strides, 4)) == 1   # tiny plan
+    assert len(plan_runs(n, strides)) == 2               # training plan
+    x = jax.random.normal(KEY, (4, n))
+    cf = 0.4 * jax.random.normal(jax.random.PRNGKey(1),
+                                 (len(strides), n // 2, 4))
+    y = spm_stack_fused(x, cf, strides)
+    ref = spm_stack_ref(x, cf, strides)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+    g = jax.grad(lambda x, cf:
+                 jnp.sum(spm_stack_fused(x, cf, strides) ** 2),
+                 argnums=(0, 1))(x, cf)
+    gr = jax.grad(lambda x, cf:
+                  jnp.sum(spm_stack_ref(x, cf, strides) ** 2),
+                  argnums=(0, 1))(x, cf)
+    for a, b in zip(g, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-3, rtol=1e-3)

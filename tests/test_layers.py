@@ -49,6 +49,27 @@ def test_chunked_attention_matches_naive(H, Hkv, window, qc, kc):
                                atol=1e-4)
 
 
+@pytest.mark.parametrize("T,qc,kc,window", [
+    (61, 16, 16, None),   # prime T: edge chunks are padded + masked
+    (61, 16, 16, 8),      # prime T, sliding window
+    (37, 13, 11, None),   # odd T, odd ragged chunks
+    (53, 64, 64, None),   # chunk larger than T
+])
+def test_chunked_attention_odd_lengths_match_naive(T, qc, kc, window):
+    """Regression: prime/odd T used to degrade to chunk=1 (the largest
+    chunk divisor of 61 is 1 — a length-61 scan of single-row chunks).
+    The edge chunk is now padded and masked instead; padded keys must
+    never leak into real queries nor padded queries into the output."""
+    B, H, Hkv, dh = 2, 4, 2, 16
+    q = jax.random.normal(KEY, (B, T, H, dh))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, T, Hkv, dh))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, T, Hkv, dh))
+    out = chunked_causal_attention(q, k, v, window=window, q_chunk=qc,
+                                   k_chunk=kc)
+    np.testing.assert_allclose(out, naive_attention(q, k, v, window),
+                               atol=1e-4)
+
+
 @pytest.mark.parametrize("window", [None, 8])
 def test_attention_decode_matches_full(window):
     B, T, d = 2, 32, 64
@@ -75,6 +96,95 @@ def test_windowed_cache_is_ring_buffer():
                           window=4)
     cache = init_kv_cache(3, 1000, cfg)
     assert cache["k"].shape == (3, 4, 2, 8)     # window, not max_len
+
+
+def test_windowed_ring_wraparound_decode():
+    """Decode past the window (T=11 steps, window=4): once the ring wraps
+    (t >= window) every step must still reproduce the full windowed
+    forward — a wrong slot/age mask only shows up AFTER wraparound."""
+    B, T, d, W = 2, 11, 16, 4
+    cfg = AttentionConfig(d_model=d, n_heads=2, n_kv_heads=2, head_dim=8,
+                          window=W)
+    p = init_attention(KEY, cfg)
+    x = jax.random.normal(KEY, (B, T, d))
+    pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+    cos, sin = rope_angles(pos, cfg.head_dim)
+    y_full, _ = attention_apply(p, x, cfg, cos=cos, sin=sin)
+    cache = init_kv_cache(B, T, cfg, jnp.float32)
+    for t in range(T):
+        ct, st = rope_angles(jnp.full((B, 1), t), cfg.head_dim)
+        yt, cache = attention_apply(p, x[:, t:t + 1], cfg, cos=ct, sin=st,
+                                    cache=cache, cache_index=jnp.array(t))
+        np.testing.assert_allclose(yt[:, 0], y_full[:, t], atol=2e-3,
+                                   err_msg=f"step {t} (wrapped: {t >= W})")
+
+
+@pytest.mark.parametrize("window", [None, 4])
+def test_decode_per_row_cache_index_matches_scalar(window):
+    """A (B,) cache_index with every row at the same position is bitwise
+    the scalar path: the continuous-batching scatter-write and the
+    fixed-batch dynamic_update_slice must agree exactly."""
+    B, T, d = 2, 6, 16
+    cfg = AttentionConfig(d_model=d, n_heads=2, n_kv_heads=2, head_dim=8,
+                          window=window)
+    p = init_attention(KEY, cfg)
+    x = jax.random.normal(KEY, (B, T, d))
+    c_s = init_kv_cache(B, T, cfg, jnp.float32)
+    c_r = init_kv_cache(B, T, cfg, jnp.float32)
+    for t in range(T):
+        ct, st = rope_angles(jnp.full((B, 1), t), cfg.head_dim)
+        ys, c_s = attention_apply(p, x[:, t:t + 1], cfg, cos=ct, sin=st,
+                                  cache=c_s, cache_index=jnp.array(t))
+        yr, c_r = attention_apply(p, x[:, t:t + 1], cfg, cos=ct, sin=st,
+                                  cache=c_r,
+                                  cache_index=jnp.full((B,), t, jnp.int32))
+        np.testing.assert_array_equal(np.asarray(ys), np.asarray(yr))
+    for a, b in zip(jax.tree.leaves(c_s), jax.tree.leaves(c_r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("window", [None, 4])
+def test_prefill_into_cache_matches_sequential_decode(window):
+    """Block prefill of a right-padded batch (per-row fill_len), then one
+    per-row decode step == each row prefilled token-by-token alone.  This
+    is the continuous-batching admit path: padded cache slots must stay
+    invisible and (windowed) padded keys must not evict real ones."""
+    d, Tpad, max_len = 16, 12, 16
+    lens = [8, 5]
+    cfg = AttentionConfig(d_model=d, n_heads=2, n_kv_heads=2, head_dim=8,
+                          window=window)
+    p = init_attention(KEY, cfg)
+    x = jax.random.normal(KEY, (2, Tpad, d))
+    xt = jax.random.normal(jax.random.PRNGKey(3), (2, 1, d))
+
+    # reference: each row alone, sequential decode over its true length
+    refs = []
+    for r, L in enumerate(lens):
+        cache = init_kv_cache(1, max_len, cfg, jnp.float32)
+        for t in range(L):
+            ct, st = rope_angles(jnp.full((1, 1), t), cfg.head_dim)
+            _, cache = attention_apply(p, x[r:r + 1, t:t + 1], cfg, cos=ct,
+                                       sin=st, cache=cache,
+                                       cache_index=jnp.array(t))
+        ct, st = rope_angles(jnp.full((1, 1), L), cfg.head_dim)
+        y, _ = attention_apply(p, xt[r:r + 1], cfg, cos=ct, sin=st,
+                               cache=cache, cache_index=jnp.array(L))
+        refs.append(y[0, 0])
+
+    # batched: ONE chunked prefill over the padded prompts, then a
+    # per-row-index decode step at each row's own length
+    cache = init_kv_cache(2, max_len, cfg, jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(Tpad), (2, Tpad))
+    cos, sin = rope_angles(pos, cfg.head_dim)
+    _, cache = attention_apply(p, x, cfg, cos=cos, sin=sin, cache=cache,
+                               cache_index=jnp.array(0),
+                               fill_len=jnp.asarray(lens, jnp.int32))
+    ci = jnp.asarray(lens, jnp.int32)
+    ct, st = rope_angles(ci[:, None], cfg.head_dim)
+    y, _ = attention_apply(p, xt, cfg, cos=ct, sin=st, cache=cache,
+                           cache_index=ci)
+    np.testing.assert_allclose(y[0, 0], refs[0], atol=2e-3)
+    np.testing.assert_allclose(y[1, 0], refs[1], atol=2e-3)
 
 
 def test_mrope_reduces_to_rope_for_text():

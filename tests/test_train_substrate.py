@@ -309,3 +309,72 @@ def test_error_feedback_accumulates_residual():
     solo_err = jnp.linalg.norm(2 * gq1["w"] - true_sum)
     ef_err = jnp.linalg.norm(ef_sum - true_sum)
     assert float(ef_err) <= float(solo_err) + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# accumulation metrics (regression: last-microbatch reporting)
+# ---------------------------------------------------------------------------
+
+def test_accum_metrics_cover_whole_batch_not_last_micro():
+    """Regression: the accum path used to report ONLY the last
+    microbatch's metrics (``tree.map(lambda m: m[-1], metrics)``).  With
+    an uneven mask across microbatches, accum=4 must log the same
+    mask-weighted ce as accum=1 on the identical batch — and emphatically
+    not the last micro's ce."""
+    w0 = jnp.zeros((4,))
+    x = jax.random.normal(KEY, (8, 4))
+    # micro 0 fully masked out; micros 1-3 carry 1, 4, 8 live tokens:
+    # last-micro ce, plain-mean ce, and weighted ce all differ
+    mask = jnp.zeros((8, 4)).at[2, 0].set(1.0).at[4:6, :2].set(1.0) \
+        .at[6:8, :].set(1.0)
+
+    def loss_fn(p, b):
+        per_tok = (b["x"] - p["w"]) ** 2
+        wsum = jnp.sum(b["mask"])
+        ce = jnp.sum(per_tok * b["mask"]) / jnp.maximum(wsum, 1.0)
+        return ce, {"ce": ce, "ce_weight": wsum,
+                    "ppl_proxy": jnp.exp(jnp.clip(ce, max=20.0)),
+                    "aux": jnp.mean(per_tok)}
+
+    ocfg = OptimizerConfig(lr=1e-2, total_steps=10)
+    st1 = jax.jit(make_train_step(loss_fn, ocfg))
+    st4 = jax.jit(make_train_step(loss_fn, ocfg, accum_steps=4))
+    batch = {"x": x, "mask": mask}
+    _, m1 = st1(make_train_state({"w": w0}), batch)
+    _, m4 = st4(make_train_state({"w": w0}), batch)
+    np.testing.assert_allclose(float(m4["ce"]), float(m1["ce"]), rtol=1e-6)
+    np.testing.assert_allclose(float(m4["ce_weight"]),
+                               float(m1["ce_weight"]), rtol=1e-6)
+    np.testing.assert_allclose(float(m4["ppl_proxy"]),
+                               float(m1["ppl_proxy"]), rtol=1e-6)
+    # the buggy value (last micro alone) is measurably different
+    last_ce, _ = loss_fn({"w": w0}, {"x": x[6:], "mask": mask[6:]})
+    assert abs(float(last_ce) - float(m1["ce"])) > 1e-3
+    # unweighted metrics take the plain mean over microbatches
+    aux_mean = np.mean([float(loss_fn({"w": w0},
+                                      {"x": x[i:i + 2],
+                                       "mask": mask[i:i + 2]})[1]["aux"])
+                        for i in range(0, 8, 2)])
+    np.testing.assert_allclose(float(m4["aux"]), aux_mean, rtol=1e-6)
+
+
+def test_psum_compressed_uses_axis_max_scale():
+    """``psum_compressed`` under a named axis (vmap stands in for
+    shard_map): every member quantizes against the axis-MAX scale —
+    members agree on the dequant grid — and the result matches the
+    explicit int8-sum reference.  Also pins the dead-work fix: the scale
+    comes straight from absmax/127, not from a discarded local
+    compress()."""
+    from repro.optim.compression import _amax_scale, psum_compressed
+    g = jnp.stack([0.01 * jax.random.normal(KEY, (64,)),
+                   3.0 * jax.random.normal(jax.random.PRNGKey(1), (64,))])
+    out = jax.vmap(lambda gi: psum_compressed({"w": gi}, "i"),
+                   axis_name="i")(g)["w"]
+    s_max = float(jnp.maximum(_amax_scale(g[0]), _amax_scale(g[1])))
+    q = np.clip(np.round(np.asarray(g, np.float64) / s_max), -127, 127)
+    ref = q.sum(axis=0) * s_max
+    np.testing.assert_allclose(np.asarray(out[0]), ref, rtol=1e-5,
+                               atol=1e-7)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(out[1]))
+    # quantization error is bounded by half an ULP of the shared grid
+    assert float(np.max(np.abs(ref - np.asarray(g.sum(0))))) <= s_max + 1e-9
