@@ -61,10 +61,14 @@ def gated_metrics(bench: dict) -> Dict[Tuple, float]:
         base = ("square", r["n"], batch, lb)
         out[base + ("fused_bytes",)] = t["fused_bytes"]
         out[base + ("fused_roundtrips",)] = t["fused_roundtrips"]
+        if "quant_bytes" in t:
+            out[base + ("quant_bytes",)] = t["quant_bytes"]
     for r in bench.get("rect_results", []):
         t = r["traffic"]
         base = ("rect", r["shape"], r["d_in"], r["d_out"], lb)
         out[base + ("fused_bytes",)] = t["fused_bytes"]
+        if "quant_bytes" in t:
+            out[base + ("quant_bytes",)] = t["quant_bytes"]
     for r in bench.get("sharded_results", []):
         base = ("sharded", r["n"], r["L"], r["n_shards"],
                 r.get("in_width"), r.get("out_width"), batch)

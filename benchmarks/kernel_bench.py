@@ -35,8 +35,10 @@ from benchmarks.common import emit, time_step
 from repro.analysis.recompile import assert_compiles
 from repro.core import SPMConfig, init_spm, spm_apply
 from repro.core.linear import LinearConfig, init_linear, linear_apply
+from repro.core.eligibility import quant_acts_eligible
 from repro.core.pairings import default_n_stages, two_level_schedule
-from repro.kernels.ops import pick_block_rows_for_plan, plan_runs
+from repro.kernels.ops import (pick_block_rows_for_plan, plan_runs,
+                               plan_runs_for_rows)
 from repro.kernels.spm_stack import vmem_bytes
 from repro.launch.hlo_analysis import HW, sharded_stage_traffic
 from repro.parallel.spm_shard import plan_steps
@@ -124,7 +126,15 @@ def rect_traffic(d_in: int, d_out: int, n: int, batch: int, L: int) -> dict:
     when d_out < n; n = even_ceil(max) makes one side exactly n).
     fused — reads batch*d_in once, writes batch*d_out once, plus one
     n-wide round-trip per INTERIOR run boundary of the kernel plan (and
-    the O(nL) coefficient reads)."""
+    the O(nL) coefficient reads).
+    quant — the fused plan with int8 activation I/O and an int8
+    coefficient table: every activation byte above moves at width 1
+    instead of 4, joined by the per-(row-block, feature-tile) f32 scale
+    arrays riding each activation pass and the (L, 1) per-stage
+    coefficient scales; diag/bias stay f32.  Only modeled when the int8
+    run plan is uniform-tile (``core/eligibility.quant_acts_eligible`` —
+    the same rule the kernel path engages under); otherwise the quant
+    columns report the f32 bytes and reduction 1.0."""
     strides = tuple(
         SPMConfig(n=n, n_stages=L, variant="general").pairing.strides())
     n_runs = len(plan_runs(n, strides))
@@ -138,9 +148,27 @@ def rect_traffic(d_in: int, d_out: int, n: int, batch: int, L: int) -> dict:
     if d_out < n:
         unfused += act_n + act_out    # slice pass
     fused = act_in + act_out + (n_runs - 1) * 2 * act_n + coeff_bytes
+    runs_q = plan_runs_for_rows(n, strides, batch, 1)
+    quant_ok = quant_acts_eligible(runs_q)
+    if quant_ok:
+        nq = len(runs_q)
+        br = pick_block_rows_for_plan(runs_q, batch, 1)
+        # one (row_blocks, feature_tiles) f32 scale array per activation
+        # pass: the input read, each interior boundary (write + re-read),
+        # and the output write
+        scale_pass = -(-batch // br) * -(-n // runs_q[0][1]) * 4
+        n_passes = 2 * nq
+        coeff_q = L * (n // 2) * 4 + L * 4 + 3 * n * 4
+        quant = (batch * d_in + batch * d_out
+                 + (nq - 1) * 2 * batch * n
+                 + n_passes * scale_pass + coeff_q)
+    else:
+        quant = fused
     return {"n_runs": n_runs, "coeff_bytes": coeff_bytes,
             "unfused_bytes": unfused, "fused_bytes": fused,
-            "reduction": unfused / fused}
+            "reduction": unfused / fused,
+            "quant_eligible": quant_ok, "quant_bytes": quant,
+            "quant_reduction": fused / quant}
 
 
 def traffic_model(n: int, batch: int, L: int,
@@ -173,6 +201,9 @@ def traffic_model(n: int, batch: int, L: int,
             "fused_bytes": t["fused_bytes"],
             "reduction": t["reduction"],
             "reduction_vs_kernel_only": kernel_only / t["fused_bytes"],
+            "quant_eligible": t["quant_eligible"],
+            "quant_bytes": t["quant_bytes"],
+            "quant_reduction": t["quant_reduction"],
             "max_tile": max_tile,
             "block_rows": br,
             "vmem_bytes": max(vmem_bytes(br, tile, len(rs))
@@ -367,7 +398,7 @@ def main(argv=None) -> None:
     # (XLA pad + square composition + slice), fwd and fwd+bwd
     print("# rectangular hot shapes (d_in,d_out,n,L,"
           "fwd_unfused_us,fwd_fused_us,fwdbwd_unfused_us,fwdbwd_fused_us,"
-          "hbm_reduction)")
+          "hbm_reduction,quant_bytes,quant_reduction)")
     rect_records = []
     for tag, d_in, d_out in rect_shapes:
         rr = {"shape": tag, "d_in": d_in, "d_out": d_out}
@@ -386,7 +417,9 @@ def main(argv=None) -> None:
                   f"{rr['linear_fwd_fused_us']:.0f},"
                   f"{rr['linear_fwdbwd_unfused_us']:.0f},"
                   f"{rr['linear_fwdbwd_fused_us']:.0f},"
-                  f"{rr['traffic']['reduction']:.1f}x")
+                  f"{rr['traffic']['reduction']:.1f}x,"
+                  f"{rr['traffic']['quant_bytes']},"
+                  f"{rr['traffic']['quant_reduction']:.2f}x")
             emit(f"kernel/rect_{tag}/linear_fused_fwd",
                  rr["linear_fwd_fused_us"],
                  f"unfused={rr['linear_fwd_unfused_us']:.0f}us "

@@ -22,33 +22,44 @@ START = "<!-- BENCH-TABLE:START (benchmarks/readme_table.py) -->"
 END = "<!-- BENCH-TABLE:END -->"
 
 
+def _quant_cell(t: dict) -> str:
+    """int8 column for one traffic record: bytes + reduction vs the f32
+    fused plan, or an em-dash when the plan is quant-ineligible (or the
+    payload predates the quant model)."""
+    if not t.get("quant_eligible"):
+        return "—"
+    return f"{t['quant_bytes']:,} ({t['quant_reduction']:.1f}x)"
+
+
 def render(bench: dict) -> str:
     """The README tables as one markdown string."""
     out = []
     out.append("Square full-operator HBM traffic (f32, batch "
                f"{bench['batch']}): fused Pallas plan vs per-stage XLA "
-               "composition with unfused diag/bias:\n")
+               "composition with unfused diag/bias, plus the int8-I/O "
+               "bytes (`--quantize`, docs/quantization.md):\n")
     out.append("| n | L | round-trips (fused / unfused) | HBM bytes "
-               "(fused / unfused) | reduction |")
-    out.append("|---|---|---|---|---|")
+               "(fused / unfused) | reduction | int8 bytes (vs fused) |")
+    out.append("|---|---|---|---|---|---|")
     for r in bench["results"]:
         t = r["traffic"]
         out.append(
             f"| {r['n']} | {r['L']} | {t['fused_roundtrips']} / "
             f"{t['unfused_roundtrips']} | {t['fused_bytes']:,} / "
-            f"{t['unfused_bytes']:,} | {t['reduction']:.1f}x |")
+            f"{t['unfused_bytes']:,} | {t['reduction']:.1f}x | "
+            f"{_quant_cell(t)} |")
     out.append("")
     out.append("Rectangular hot shapes (rectangular-native kernel "
                "boundaries vs XLA pad + square compose + slice):\n")
     out.append("| shape | d_in → d_out | n | HBM bytes (fused / unfused) "
-               "| reduction |")
-    out.append("|---|---|---|---|---|")
+               "| reduction | int8 bytes (vs fused) |")
+    out.append("|---|---|---|---|---|---|")
     for r in bench["rect_results"]:
         t = r["traffic"]
         out.append(
             f"| {r['shape']} | {r['d_in']} → {r['d_out']} | {r['n']} | "
             f"{t['fused_bytes']:,} / {t['unfused_bytes']:,} | "
-            f"{t['reduction']:.1f}x |")
+            f"{t['reduction']:.1f}x | {_quant_cell(t)} |")
     out.append("")
     out.append("Feature-sharded two_level executor, per chip "
                f"({bench['sharded_results'][0]['n_shards']}-way): "

@@ -167,6 +167,28 @@ class Artifacts:
         with self._mesh_ctx():
             return jax.make_jaxpr(self._loss_fn())(self.params, self.x)
 
+    @functools.cached_property
+    def jaxpr_q8(self):
+        """Trace of the int8-native inference entry
+        (``spm_stack_fused_q8``) over this cell's square operator core:
+        int8 rows + per-block scales in, int8 rows + scales out.  Only
+        built for cells the quant eligibility rule admits (uniform-tile
+        run plan under int8 byte width)."""
+        from repro.core.spm import stage_coeffs
+        from repro.kernels import quant as Q
+        from repro.kernels.ops import spm_stack_fused_q8
+        cf = stage_coeffs(self.params, self.scfg)
+        rows = self.cell.rows
+        runs = plan_runs_for_rows(self.n, self.strides, rows, 1)
+        qx, xs = Q.quantize_blocks(
+            jax.random.normal(_KEY, (rows, self.n), jnp.float32),
+            rows, runs[0][1])
+        p = self.params
+        fn = lambda qx, xs, cf, di, do, b: spm_stack_fused_q8(
+            qx, xs, cf, self.strides, d_in=di, d_out=do, bias=b)
+        return jax.make_jaxpr(fn)(qx, xs, cf, p["d_in"], p["d_out"],
+                                  p["bias"])
+
     # -- HLO artifacts (compiled; compile_hlo cells only) ----------------
 
     @functools.cached_property
@@ -421,6 +443,49 @@ def _c_dead_tile(cell: Cell, art: Artifacts) -> List[str]:
         return [f"no backward pallas grid shows the pruned feature-tile "
                 f"count {vis} (grids: {grids})"]
     return []
+
+
+def _quant_cell(cell: Cell) -> bool:
+    if cell.variant != "fused":
+        return False
+    lc = cell.linear_config()
+    strides = tuple(lc.spm_config().pairing.strides())
+    runs = plan_runs_for_rows(lc.n, strides, cell.rows, 1)
+    return eligibility.quant_acts_eligible(runs)
+
+
+@contract("quant-no-f32-activation-io", applies=_quant_cell)
+def _c_quant_no_f32(cell: Cell, art: Artifacts) -> List[str]:
+    """The int8-native entry (``spm_stack_fused_q8``) moves NO f32
+    activation arrays between kernels: every activation-shaped
+    (rows, features) array outside the pallas bodies is int8 — the only
+    f32 riding the path are the narrow per-(row-block, feature-tile) /
+    per-stage scale arrays.  Non-vacuous: the trace must contain
+    pallas_call equations and return an int8 payload.  This is the
+    quantization perf story stated structurally — byte width IS
+    wall-clock on a memory-bound operator, so one stray f32 round trip
+    erases the win."""
+    bad = []
+    rows = cell.rows
+    n_pallas = 0
+    for we in jaxpr_walk.iter_eqns(art.jaxpr_q8):
+        if we.name == "pallas_call":
+            n_pallas += 1
+        for v in we.eqn.outvars:
+            aval = getattr(v, "aval", None)
+            shape = tuple(getattr(aval, "shape", ()))
+            # scale arrays are (rows/block_rows, tiles) with tiles a
+            # small run count — an activation is rows x a feature width
+            if (len(shape) == 2 and shape[0] == rows and shape[1] >= 8
+                    and str(aval.dtype) == "float32"):
+                bad.append(f"f32 activation-shaped array {shape} "
+                           f"from '{we.name}'")
+    if n_pallas == 0:
+        bad.append("q8 trace lowered ZERO pallas_call equations")
+    out0 = art.jaxpr_q8.jaxpr.outvars[0]
+    if str(out0.aval.dtype) != "int8":
+        bad.append(f"q8 payload dtype {out0.aval.dtype} != int8")
+    return bad
 
 
 @contract("sharded-permute-only", applies=_hlo_sharded)

@@ -6,4 +6,5 @@ from repro.configs.registry import (  # noqa: F401
 )
 from repro.configs.base import (  # noqa: F401
     with_overrides, with_fused_linears, with_feature_sharding,
+    with_overlap_executor, with_quantized_io, with_compressed_pod_grads,
 )

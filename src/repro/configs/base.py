@@ -10,7 +10,8 @@ from repro.models.transformer import LayerSpec, ModelConfig
 __all__ = ["dense_layers", "local_global_layers", "moe_layers",
            "mamba_layers", "hybrid_layers", "with_overrides",
            "with_fused_linears", "with_feature_sharding",
-           "with_overlap_executor"]
+           "with_overlap_executor", "with_quantized_io",
+           "with_compressed_pod_grads"]
 
 
 def dense_layers(n: int) -> Tuple[LayerSpec, ...]:
@@ -87,3 +88,31 @@ def with_overlap_executor(cfg: ModelConfig,
     ``activation_sharding`` context); see core/eligibility.resolve_overlap
     for the resolution rules."""
     return dataclasses.replace(cfg, spm_overlap=on)
+
+
+def with_quantized_io(cfg: ModelConfig, acts: bool = True,
+                      coeffs: bool = True) -> ModelConfig:
+    """Set the int8 quantization knobs on every SPM linear in the model.
+
+    ``acts`` — int8 ACTIVATION I/O on the fused kernel path
+    (``spm_quant_acts``): inputs/outputs move through HBM as int8 with
+    per-(row-block, feature-tile) scales, dequantized to f32 in VMEM;
+    engages only when the kernel run plan has one uniform feature tile
+    (core/eligibility.quant_acts_eligible), else falls back to f32 I/O.
+    ``coeffs`` — int8 per-stage-scaled COEFFICIENT tables
+    (``spm_quant_coeffs``), honored by both the fused single-device path
+    and the distributed shard-local runs.  Both knobs are inert on dense
+    baselines and on the XLA composition fallback.  See
+    docs/quantization.md for the full eligibility/fallback matrix."""
+    return dataclasses.replace(cfg, spm_quant_acts=acts,
+                               spm_quant_coeffs=coeffs)
+
+
+def with_compressed_pod_grads(cfg: ModelConfig, on: bool = True) -> ModelConfig:
+    """Enable int8 error-feedback compressed data-parallel gradient
+    reduction (``compress_pod_grads``).  Consumed by the TRAIN layer, not
+    the operator: ``train/step.make_pod_train_step`` reads it to route the
+    pod all-reduce through ``optim.compression.psum_compressed_ef`` with
+    the per-member residual carried in ``state["opt"]["ef"]`` (see
+    ``train/step.pod_residual``)."""
+    return dataclasses.replace(cfg, compress_pod_grads=on)

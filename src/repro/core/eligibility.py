@@ -55,7 +55,7 @@ from repro.core.pairings import Schedule
 __all__ = ["plan_steps", "kernel_eligible", "use_fused_kernel",
            "sharded_eligible", "resolve_shard_kernel", "resolve_overlap",
            "resolve_rdma", "overlap_segments", "OVERLAP_ROW_BLOCKS",
-           "TINY_ROW_THRESHOLD", "tiny_row_call"]
+           "TINY_ROW_THRESHOLD", "tiny_row_call", "quant_acts_eligible"]
 
 # Row blocks per shard slab under the overlap schedule: block i's partner
 # exchange hides under block i+1's compute, so >= 2 blocks are needed for
@@ -82,6 +82,24 @@ def tiny_row_call(n_rows: int) -> bool:
     decode-specialized tiny-row kernel plan (wider feature tiles — see
     ``kernels/ops.plan_runs_for_rows``)."""
     return 0 < n_rows <= TINY_ROW_THRESHOLD
+
+
+def quant_acts_eligible(runs) -> bool:
+    """Whether a kernel run plan (``kernels/ops.plan_runs`` output:
+    ``((strides, n_tile), ...)``) supports int8 ACTIVATION I/O.
+
+    Activation scales are per (row-block, feature-tile), so a run's int8
+    output chains into the next run as its int8 input only when BOTH runs
+    tile the feature axis identically — the scale array produced by run r
+    is indexed by run r+1's grid.  The predicate is therefore: one uniform
+    feature tile across every run of the plan (single-run plans — the
+    common case for butterfly schedules under the default tile cap — are
+    trivially uniform).  Ineligible plans fall back to f32 activation I/O
+    gracefully; quantized COEFFICIENT tables are per-stage-scaled and have
+    no such constraint.  Lives here with the rest of the fallback matrix
+    (single home for every SPM fast-path predicate)."""
+    tiles = {n_tile for _, n_tile in runs}
+    return len(tiles) == 1
 
 
 def _is_pow2(k: int) -> bool:

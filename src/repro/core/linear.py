@@ -72,6 +72,11 @@ class LinearConfig:
                                          # exchanges): None=auto (on-TPU),
                                          # True=force the schedule (ppermute
                                          # transport off-TPU), False=off
+    quant_acts: bool = False             # int8 activation I/O on the fused
+                                         # kernel path (per-block scales;
+                                         # see SPMConfig.quant_acts)
+    quant_coeffs: bool = False           # int8 per-stage-scaled coefficient
+                                         # tables dequantized in VMEM
 
     def __post_init__(self):
         if self.impl not in LINEAR_IMPLS:
@@ -105,7 +110,8 @@ class LinearConfig:
             schedule=self.schedule, use_diag=True, use_bias=self.use_bias,
             backward=backward, init_scale=self.init_scale,
             n_shards=self.n_shards, param_dtype=self.param_dtype,
-            use_kernel=self.use_kernel, overlap=self.overlap)
+            use_kernel=self.use_kernel, overlap=self.overlap,
+            quant_acts=self.quant_acts, quant_coeffs=self.quant_coeffs)
 
 
 def init_linear(key: jax.Array, cfg: LinearConfig) -> dict:

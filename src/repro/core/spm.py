@@ -102,6 +102,27 @@ class SPMConfig:
     # Resolution lives in core/eligibility.resolve_overlap; only consulted
     # when the distributed executor engages (n_shards > 1 + mesh context).
     overlap: Optional[bool] = None
+    # Int8 quantization knobs (kernels/quant.py scale conventions).  Both
+    # change only BYTES MOVED — in-VMEM compute stays f32:
+    #   quant_acts   — int8 activation I/O for the fused kernel runs
+    #                  (per-(row-block, feature-tile) scales; requires a
+    #                  uniform-tile run plan, falls back to f32 I/O
+    #                  gracefully — core/eligibility.quant_acts_eligible).
+    #                  Fused single-device path only; the XLA composition
+    #                  and the distributed executor ignore it.
+    #   quant_coeffs — int8 per-stage-scaled coefficient tables,
+    #                  dequantized in VMEM; honored by the fused path AND
+    #                  the distributed executor's shard-local runs.
+    #                  Coefficient grads stay f32, computed from the same
+    #                  dequantized values the forward used.
+    quant_acts: bool = False
+    quant_coeffs: bool = False
+    # Int8 error-feedback compression of the cross-pod gradient all-reduce
+    # (optim/compression.psum_compressed_ef).  Consumed by the TRAIN layer
+    # (train/step.make_pod_train_step), not by the operator itself: the
+    # knob rides here so one config object carries the whole quantization
+    # posture of a run.
+    compress_pod_grads: bool = False
 
     def __post_init__(self):
         if self.variant not in ("general", "rotation"):
@@ -473,7 +494,8 @@ def spm_apply(params: dict, x: jax.Array, cfg: SPMConfig, *,
             d_in=params["d_in"] if cfg.use_diag else None,
             d_out=params["d_out"] if cfg.use_diag else None,
             bias=params["bias"] if cfg.use_bias else None,
-            in_width=in_width, out_width=out_width)
+            in_width=in_width, out_width=out_width,
+            quant_acts=cfg.quant_acts, quant_coeffs=cfg.quant_coeffs)
     if in_width is not None:
         pad = [(0, 0)] * (x.ndim - 1) + [(0, n - in_width)]
         x = jnp.pad(x, pad)  # spmlint: allow[SPM002] XLA fallback path

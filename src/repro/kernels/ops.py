@@ -61,12 +61,13 @@ from typing import Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.eligibility import tiny_row_call
+from repro.core.eligibility import quant_acts_eligible, tiny_row_call
 from repro.kernels import spm_stack as K
+from repro.kernels import quant as Q
 
-__all__ = ["spm_stack_fused", "plan_runs", "plan_runs_for_rows",
-           "tile_cap_for_rows", "pick_block_rows_for_plan",
-           "default_interpret"]
+__all__ = ["spm_stack_fused", "spm_stack_fused_q8", "plan_runs",
+           "plan_runs_for_rows", "tile_cap_for_rows",
+           "pick_block_rows_for_plan", "default_interpret"]
 
 MAX_TILE = 2048  # lane-dim tile cap: 16 VREG lanes x 128; VMEM-comfortable
 
@@ -192,8 +193,27 @@ def pick_block_rows_for_plan(runs, n_rows: int, dtype_bytes: int, *,
 #
 # Diff args: (x2, coeffs, d_in, d_out, bias).  The diag/bias operands are
 # ALWAYS arrays (size-1 placeholders when absent) so the vjp signature is
-# uniform; the static ``flags = (has_din, has_dout, has_bias)`` tuple decides
-# which are real.  Placeholders never reach a kernel and get zero grads.
+# uniform; the static ``flags = (has_din, has_dout, has_bias, quant_acts,
+# quant_coeffs)`` tuple decides which are real and whether the run chain
+# moves int8 activations / coefficient tables (kernels/quant.py scale
+# conventions).  Placeholders never reach a kernel and get zero grads.
+#
+# Quantized-activation chain (``quant_acts``; requires a uniform-tile plan,
+# ``core/eligibility.quant_acts_eligible``): the input is quantized ONCE in
+# XLA at entry, every run reads int8 + per-block scales and requantizes on
+# its epilogue store (the scale array chains straight into the next run's
+# x_scale), and the final int8 output is dequantized at exit.  The saved
+# residuals are the int8 stage inputs + scales, so the backward's in-VMEM
+# remat replays exactly the activations the quantized forward produced —
+# the VJP is the true gradient of the quantized network (straight-through
+# w.r.t. the entry quantization).
+#
+# Quantized coefficients (``quant_coeffs``): the f32 table is quantized
+# per-stage here (O(nL), not activation-sized) and the kernels dequantize
+# one stage at a time in VMEM.  The backward recomputes the SAME
+# deterministic quantization from the saved f32 table, so its coefficient
+# grads are bitwise what a pre-dequantized f32 table would produce, and
+# the cotangent flows to the original f32 coeffs straight-through.
 
 def _run_offsets(runs):
     offs, off = [], 0
@@ -206,7 +226,7 @@ def _run_offsets(runs):
 def _boundary_kw(r: int, n_runs: int, flags, d_in, d_out, bias) -> dict:
     """Kernel operands folded into run r: d_in on the first, d_out/bias on
     the last (both on a single-run plan)."""
-    has_din, has_dout, has_bias = flags
+    has_din, has_dout, has_bias = flags[:3]
     kw = {}
     if r == 0 and has_din:
         kw["d_in"] = d_in
@@ -236,26 +256,45 @@ def _fused_fwd(x2, coeffs, d_in, d_out, bias,
                max_tile=MAX_TILE):
     n = 2 * coeffs.shape[1]
     runs = plan_runs(n, strides, max_tile)
+    quant_acts = len(flags) > 3 and flags[3]
+    quant_cf = len(flags) > 4 and flags[4]
+    kcf, scf = (Q.quantize_coeffs(coeffs) if quant_cf else (coeffs, None))
     zs = []
-    z = x2
+    z, zscale = x2, None
+    if quant_acts:
+        z, zscale = Q.quantize_blocks(x2, block_rows, runs[0][1])
     off = 0
     for r, (run_strides, n_tile) in enumerate(runs):
-        zs.append(z)
-        cf = coeffs[off: off + len(run_strides)]
-        z = K.spm_stack_kernel_call(
-            z, cf, strides=run_strides, block_rows=block_rows,
-            n_tile=n_tile, interpret=interpret,
+        zs.append((z, zscale) if quant_acts else z)
+        nL = len(run_strides)
+        out = K.spm_stack_kernel_call(
+            z, kcf[off: off + nL], strides=run_strides,
+            block_rows=block_rows, n_tile=n_tile, interpret=interpret,
             in_width=in_width if r == 0 else None,
             out_width=out_width if r == len(runs) - 1 else None,
+            x_scale=zscale,
+            coeff_scale=scf[off: off + nL] if quant_cf else None,
+            quant_out=quant_acts,
             **_boundary_kw(r, len(runs), flags, d_in, d_out, bias))
-        off += len(run_strides)
+        z, zscale = out if quant_acts else (out, None)
+        off += nL
+    if quant_acts:
+        # dequantize the final int8 output at exit — callers that want the
+        # int8 payload itself use the forward-only spm_stack_fused_q8
+        z = Q.dequantize_blocks(z, zscale, block_rows, runs[-1][1],
+                                dtype=x2.dtype)
     return z, (tuple(zs), coeffs, d_in, d_out, bias)
 
 
 def _fused_bwd(strides, flags, block_rows, interpret, in_width, out_width,
                max_tile, res, gy):
     zs, coeffs, d_in, d_out, bias = res
-    has_din, has_dout, has_bias = flags
+    has_din, has_dout, has_bias = flags[:3]
+    quant_acts = len(flags) > 3 and flags[3]
+    quant_cf = len(flags) > 4 and flags[4]
+    # requantize the saved f32 table — deterministic, so the kernels see
+    # bitwise the same dequantized values the forward used
+    kcf, scf = (Q.quantize_coeffs(coeffs) if quant_cf else (coeffs, None))
     n = 2 * coeffs.shape[1]
     runs = plan_runs(n, strides, max_tile)
     offsets = _run_offsets(runs)
@@ -274,12 +313,17 @@ def _fused_bwd(strides, flags, block_rows, interpret, in_width, out_width,
     dead = None     # first all-zero column of the downstream run's g_x
     for r in range(len(runs) - 1, -1, -1):
         run_strides, n_tile = runs[r]
-        cf = coeffs[offsets[r]: offsets[r] + len(run_strides)]
+        lo = offsets[r]
+        cf = kcf[lo: lo + len(run_strides)]
+        z_r, zscale_r = zs[r] if quant_acts else (zs[r], None)
         last = r == len(runs) - 1
         out = K.spm_stack_bwd_kernel_call(
-            zs[r], cf, delta,
+            z_r, cf, delta,
             d_in=d_in if (r == 0 and has_din) else None,
             d_out=d_out if (last and has_dout) else None,
+            x_scale=zscale_r,
+            coeff_scale=scf[lo: lo + len(run_strides)] if quant_cf
+            else None,
             strides=run_strides, block_rows=block_rows, n_tile=n_tile,
             has_bias=last and has_bias,
             in_width=in_width if r == 0 else None,
@@ -327,6 +371,8 @@ def spm_stack_fused(x: jax.Array, coeffs: jax.Array,
                     in_width: Optional[int] = None,
                     out_width: Optional[int] = None,
                     block_rows: int | None = None,
+                    quant_acts: bool = False,
+                    quant_coeffs: bool = False,
                     interpret: bool | None = None) -> jax.Array:
     """Fused SPM operator over the last axis of ``x``.
 
@@ -339,6 +385,16 @@ def spm_stack_fused(x: jax.Array, coeffs: jax.Array,
     (..., in_width).  Differentiable in x, coeffs, and the diag/bias
     operands (closed-form VJP); with everything optional omitted this is
     exactly the bare square stage stack (back-compat entry).
+
+    ``quant_acts`` moves the run chain's HBM activation traffic at int8
+    with per-(row-block, feature-tile) scales (quantize at entry,
+    dequantize-in-VMEM / requantize-on-store per run, dequantize at
+    exit); requires a uniform-tile run plan
+    (``core/eligibility.quant_acts_eligible`` — falls back to f32 I/O
+    gracefully otherwise).  ``quant_coeffs`` moves the coefficient table
+    at int8 with per-stage scales dequantized in VMEM; coefficient grads
+    stay f32 and bitwise-comparable to a pre-dequantized f32 table.  Both
+    knobs change only BYTES MOVED, never the in-VMEM f32 compute.
     """
     strides = tuple(int(s) for s in strides)
     n = 2 * coeffs.shape[1]
@@ -357,12 +413,13 @@ def spm_stack_fused(x: jax.Array, coeffs: jax.Array,
     x2, lead = _flatten_rows(x)
     max_tile = tile_cap_for_rows(n, strides, x2.shape[0],
                                  dtype_bytes=x.dtype.itemsize)
+    runs = plan_runs(n, strides, max_tile)
     if block_rows is None:
         block_rows = pick_block_rows_for_plan(
-            plan_runs(n, strides, max_tile), x2.shape[0],
-            dtype_bytes=x.dtype.itemsize)
+            runs, x2.shape[0], dtype_bytes=x.dtype.itemsize)
     x2p, rows = _pad_rows(x2, block_rows)
-    flags = (d_in is not None, d_out is not None, bias is not None)
+    flags = (d_in is not None, d_out is not None, bias is not None,
+             quant_acts and quant_acts_eligible(runs), bool(quant_coeffs))
     placeholder = jnp.zeros((1,), x.dtype)
     y2 = _fused_core(
         x2p, coeffs,
@@ -375,3 +432,67 @@ def spm_stack_fused(x: jax.Array, coeffs: jax.Array,
         y2 = y2[:rows]
     out_w = out_width if out_width is not None else n
     return y2.reshape(lead + (out_w,))
+
+
+def spm_stack_fused_q8(qx: jax.Array, x_scale: jax.Array,
+                       coeffs: jax.Array, strides: Sequence[int], *,
+                       d_in: Optional[jax.Array] = None,
+                       d_out: Optional[jax.Array] = None,
+                       bias: Optional[jax.Array] = None,
+                       in_width: Optional[int] = None,
+                       out_width: Optional[int] = None,
+                       quant_coeffs: bool = True,
+                       interpret: bool | None = None):
+    """Int8-native fused forward: int8 in, int8 out (inference entry).
+
+    ``qx``: (B, in_width or n) int8 rows already quantized per
+    (row-block, feature-tile) (``kernels/quant.quantize_blocks``);
+    ``x_scale``: its (B // block_rows, tiles) f32 scale array —
+    ``block_rows`` is derived from it, so the two must come from the same
+    quantization.  Runs the whole run chain with int8 activation I/O
+    (and, by default, an int8 per-stage-scaled coefficient table) and
+    returns ``(qy int8 (B, out_width or n), y_scale)`` WITHOUT
+    dequantizing: end to end, HBM sees no f32 activation bytes — the
+    property the quant compile contract checks on this entry.  Forward
+    only (no custom_vjp); training uses ``spm_stack_fused(...,
+    quant_acts=True)``, which shares the same run chain but
+    quantizes/dequantizes at the jit boundary.  Raises when the run plan
+    is not uniform-tile (``core/eligibility.quant_acts_eligible``).
+    """
+    strides = tuple(int(s) for s in strides)
+    n = 2 * coeffs.shape[1]
+    if in_width == n:
+        in_width = None
+    if out_width == n:
+        out_width = None
+    assert qx.dtype == jnp.int8, qx.dtype
+    B = qx.shape[0]
+    if B % x_scale.shape[0]:
+        raise ValueError(f"rows {B} not a multiple of scale rows "
+                         f"{x_scale.shape[0]}")
+    block_rows = B // x_scale.shape[0]
+    max_tile = tile_cap_for_rows(n, strides, B, dtype_bytes=1)
+    runs = plan_runs(n, strides, max_tile)
+    if not quant_acts_eligible(runs):
+        raise ValueError(f"run plan {runs} is not uniform-tile; int8 "
+                         "activation I/O cannot chain across its runs")
+    if interpret is None:
+        interpret = default_interpret()
+    kcf, scf = (Q.quantize_coeffs(coeffs) if quant_coeffs
+                else (coeffs, None))
+    flags = (d_in is not None, d_out is not None, bias is not None)
+    z, zscale = qx, x_scale
+    off = 0
+    for r, (run_strides, n_tile) in enumerate(runs):
+        nL = len(run_strides)
+        z, zscale = K.spm_stack_kernel_call(
+            z, kcf[off: off + nL], strides=run_strides,
+            block_rows=block_rows, n_tile=n_tile, interpret=interpret,
+            in_width=in_width if r == 0 else None,
+            out_width=out_width if r == len(runs) - 1 else None,
+            x_scale=zscale,
+            coeff_scale=scf[off: off + nL] if quant_coeffs else None,
+            quant_out=True,
+            **_boundary_kw(r, len(runs), flags, d_in, d_out, bias))
+        off += nL
+    return z, zscale

@@ -1,0 +1,110 @@
+"""Block-scale int8 quantization helpers for the fused SPM kernels.
+
+The fused kernels tile activations into self-contained
+``(block_rows, n_tile)`` blocks — stages inside one run pair lanes
+tile-locally, so block (i, j) of the output depends ONLY on block (i, j)
+of the input.  That makes per-(row-block, feature-tile) scales the
+natural quantization granularity: one f32 scale per VMEM-resident block,
+delivered to the kernel through a ``(1, 1)`` BlockSpec riding the same
+grid indices as the activation block it scales.  Dequantize-on-load and
+requantize-on-store then happen entirely in VMEM; HBM only ever sees the
+int8 payload plus the O(B * n / (block_rows * n_tile)) scale array.
+
+Coefficient tables quantize per STAGE (one scale per ``(n_pairs, 4)``
+slab): the table is O(nL) — tiny next to activations — and a per-stage
+scale keeps the dequantized values bitwise-identical whether the multiply
+happens in VMEM (kernel) or in XLA (the reference / the closed-form
+backward), which is what keeps coefficient grads bitwise-comparable
+between the quantized and pre-dequantized runs.
+
+The scale convention matches ``optim/compression``: ``absmax / 127 +
+1e-12`` — always finite and strictly positive (denormal and all-zero
+inputs quantize to exact zeros; the round-trip error is bounded by
+``scale / 2`` elementwise).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_blocks", "dequantize_blocks", "quantize_coeffs",
+           "dequantize_coeffs", "block_scale_bound"]
+
+_EPS = 1e-12
+
+
+def quantize_blocks(x2: jax.Array, block_rows: int, n_tile: int
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Quantize a (B, W) activation to int8 with per-block scales.
+
+    ``B`` must be a multiple of ``block_rows`` (the caller row-pads, as
+    for the kernels); ``W`` may be a partial multiple of ``n_tile`` (a
+    rectangular boundary operand) — the trailing partial tile is scaled
+    over its real columns only.  Returns ``(q, scales)`` with ``q`` int8
+    of shape (B, W) and ``scales`` f32 of shape
+    ``(B // block_rows, ceil(W / n_tile))``, laid out so the kernels'
+    ``(1, 1)`` scale BlockSpec indexed by the activation grid ``(i, j)``
+    picks the matching block's scale.
+    """
+    B, W = x2.shape
+    assert B % block_rows == 0, (B, block_rows)
+    nb = B // block_rows
+    ncol = -(-W // n_tile)
+    wp = ncol * n_tile
+    xf = x2.astype(jnp.float32)
+    if wp != W:
+        # spmlint: allow[SPM002] scale-grid padding (host-side, pre-kernel)
+        xf = jnp.pad(xf, ((0, 0), (0, wp - W)))
+    xr = xf.reshape(nb, block_rows, ncol, n_tile)
+    scales = jnp.max(jnp.abs(xr), axis=(1, 3)) / 127.0 + _EPS  # (nb, ncol)
+    q = jnp.clip(jnp.round(xr / scales[:, None, :, None]), -127, 127)
+    q = q.astype(jnp.int8).reshape(B, wp)[:, :W]
+    return q, scales
+
+
+def dequantize_blocks(q: jax.Array, scales: jax.Array, block_rows: int,
+                      n_tile: int, dtype=jnp.float32) -> jax.Array:
+    """Inverse of ``quantize_blocks`` (up to the <= scale/2 rounding)."""
+    B, W = q.shape
+    nb = B // block_rows
+    ncol = -(-W // n_tile)
+    wp = ncol * n_tile
+    qf = q.astype(jnp.float32)
+    if wp != W:
+        # spmlint: allow[SPM002] scale-grid padding (host-side, pre-kernel)
+        qf = jnp.pad(qf, ((0, 0), (0, wp - W)))
+    xr = qf.reshape(nb, block_rows, ncol, n_tile) * scales[:, None, :, None]
+    return xr.reshape(B, wp)[:, :W].astype(dtype)
+
+
+def quantize_coeffs(coeffs: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Quantize an (L, n_pairs, 4) coefficient table to int8 with one f32
+    scale per stage.  Returns ``(q, scales)`` with ``scales`` shaped
+    ``(L, 1)`` — the 2D layout the kernels' stage-scale ref expects."""
+    cf = coeffs.astype(jnp.float32)
+    scales = (jnp.max(jnp.abs(cf), axis=(1, 2), keepdims=False)
+              / 127.0 + _EPS)                                  # (L,)
+    q = jnp.clip(jnp.round(cf / scales[:, None, None]), -127, 127)
+    return q.astype(jnp.int8), scales.reshape(-1, 1)
+
+
+def dequantize_coeffs(q: jax.Array, scales: jax.Array,
+                      dtype=jnp.float32) -> jax.Array:
+    """Dequantize a per-stage-scaled int8 coefficient table — the exact
+    multiply the kernels perform in VMEM, so a reference computed on this
+    table matches the kernel's quantized-coeff output bitwise (modulo the
+    shared f32 arithmetic)."""
+    return (q.astype(jnp.float32)
+            * scales.reshape(-1, 1, 1)).astype(dtype)
+
+
+def block_scale_bound(x2: jax.Array, block_rows: int, n_tile: int) -> float:
+    """Worst-case per-element quantization step of ``quantize_blocks`` on
+    this input: the MAX block scale.  Parity tests derive their tolerance
+    from this (error <= scale / 2 per quantization point) instead of a
+    magic constant."""
+    _, scales = quantize_blocks(x2, block_rows, n_tile)
+    return float(jnp.max(scales))

@@ -125,8 +125,11 @@ def _mask_cols(z, tile_idx, width: int):
     return jnp.where(col < width, z, 0.0)
 
 
-def _apply_stages_fwd(z, cf_ref, strides, collect: bool = False):
-    """Run all stages on a resident f32 tile; optionally collect inputs."""
+def _apply_stages_fwd(z, cf_ref, strides, collect: bool = False,
+                      scf_ref=None):
+    """Run all stages on a resident f32 tile; optionally collect inputs.
+    With ``scf_ref`` ((L, 1) per-stage scales) the coefficient slab is an
+    int8 table dequantized here, in VMEM, one stage at a time."""
     bb, nt = z.shape
     zs = []
     for ell, s in enumerate(strides):
@@ -135,6 +138,8 @@ def _apply_stages_fwd(z, cf_ref, strides, collect: bool = False):
         g = nt // (2 * s)
         zr = z.reshape(bb, g, 2, s)
         cf = cf_ref[ell].astype(_F32)          # (nt//2, 4)
+        if scf_ref is not None:
+            cf = cf * scf_ref[ell, 0]
         a = cf[:, 0].reshape(g, 1, s)
         b = cf[:, 1].reshape(g, 1, s)
         c = cf[:, 2].reshape(g, 1, s)
@@ -150,14 +155,23 @@ def _apply_stages_fwd(z, cf_ref, strides, collect: bool = False):
 def _kernel(*refs,
             strides: Tuple[int, ...],
             has_din: bool, has_dout: bool, has_bias: bool,
-            in_width: Optional[int], has_base: bool = False):
+            in_width: Optional[int], has_base: bool = False,
+            quant_in: bool = False, quant_out: bool = False,
+            quant_cf: bool = False):
     """Kernel body: x_ref (bb, nt), cf_ref (L, nt//2, 4), o_ref (bb, nt).
 
     Optional refs (in order, present when the matching flag is set):
-    din_ref / dout_ref / bias_ref, each (1, nt).  All compute is f32 in
-    VMEM regardless of the I/O dtype.  ``in_width`` (rectangular first
-    run) zero-fills the lanes past the true input width before anything
-    else touches them; a narrow OUTPUT needs no in-kernel handling — the
+    ``quant_in`` inserts an sx_ref ((1, 1) per-block scale) after x_ref —
+    x is int8, dequantized to f32 on load in VMEM; ``quant_cf`` inserts an
+    scf_ref ((L, 1) per-stage scales) after cf_ref — the coefficient slab
+    is int8, dequantized per stage in VMEM; din_ref / dout_ref / bias_ref,
+    each (1, nt).  ``quant_out`` adds a second output sy_ref ((1, 1)): the
+    epilogue computes the block's absmax/127 scale, stores it, and stores
+    the int8 requantized block to o_ref — HBM sees no f32 activation
+    bytes on a fully quantized run.  All compute is f32 in VMEM
+    regardless of the I/O dtype.  ``in_width`` (rectangular first run)
+    zero-fills the lanes past the true input width before anything else
+    touches them; a narrow OUTPUT needs no in-kernel handling — the
     partial edge tile is masked by the out-of-bounds store.  With
     ``has_base`` the first ref is the scalar-prefetch ``(1,)`` base
     feature tile (sharded windowed read) and the mask compares against
@@ -165,23 +179,38 @@ def _kernel(*refs,
     """
     refs = list(refs)
     base = refs.pop(0)[0] if has_base else 0
-    x_ref, cf_ref = refs.pop(0), refs.pop(0)
+    x_ref = refs.pop(0)
+    sx_ref = refs.pop(0) if quant_in else None
+    cf_ref = refs.pop(0)
+    scf_ref = refs.pop(0) if quant_cf else None
     din_ref = refs.pop(0) if has_din else None
     dout_ref = refs.pop(0) if has_dout else None
     bias_ref = refs.pop(0) if has_bias else None
-    (o_ref,) = refs
+    if quant_out:
+        o_ref, sy_ref = refs
+    else:
+        (o_ref,) = refs
 
     z = x_ref[...].astype(_F32)
+    if quant_in:
+        z = z * sx_ref[0, 0]                    # dequantize-on-load (VMEM)
     if in_width is not None:
         z = _mask_cols(z, base + pl.program_id(1), in_width)
     if has_din:
         z = z * din_ref[...].astype(_F32)       # (1, nt) broadcast over rows
-    z = _apply_stages_fwd(z, cf_ref, strides)
+    z = _apply_stages_fwd(z, cf_ref, strides, scf_ref=scf_ref)
     if has_dout:
         z = z * dout_ref[...].astype(_F32)
     if has_bias:
         z = z + bias_ref[...].astype(_F32)
-    o_ref[...] = z.astype(o_ref.dtype)
+    if quant_out:
+        # requantize-on-store: per-block absmax scale, int8 payload.  The
+        # scale convention matches kernels/quant.py (always positive).
+        sy = jnp.max(jnp.abs(z)) / 127.0 + 1e-12
+        sy_ref[...] = sy.reshape(1, 1)
+        o_ref[...] = jnp.clip(jnp.round(z / sy), -127, 127).astype(jnp.int8)
+    else:
+        o_ref[...] = z.astype(o_ref.dtype)
 
 
 def vmem_bytes(block_rows: int, n_tile: int, n_stages: int,
@@ -279,18 +308,22 @@ def _lift_spec(spec: pl.BlockSpec) -> pl.BlockSpec:
 
 @functools.partial(jax.jit, static_argnames=("strides", "block_rows",
                                              "n_tile", "in_width",
-                                             "out_width", "interpret"))
+                                             "out_width", "quant_out",
+                                             "interpret"))
 def spm_stack_kernel_call(x: jax.Array, coeffs: jax.Array,
                           d_in: Optional[jax.Array] = None,
                           d_out: Optional[jax.Array] = None,
                           bias: Optional[jax.Array] = None,
-                          col_base: Optional[jax.Array] = None, *,
+                          col_base: Optional[jax.Array] = None,
+                          x_scale: Optional[jax.Array] = None,
+                          coeff_scale: Optional[jax.Array] = None, *,
                           strides: Tuple[int, ...],
                           block_rows: int,
                           n_tile: int,
                           in_width: Optional[int] = None,
                           out_width: Optional[int] = None,
-                          interpret: bool = False) -> jax.Array:
+                          quant_out: bool = False,
+                          interpret: bool = False):
     """pallas_call wrapper.  x: (B, in_width or n); coeffs: (L, n//2, 4);
     optional d_in/d_out/bias: (n,) — folded into the kernel (applied before
     the first / after the last stage, in VMEM).  ``in_width`` /
@@ -300,12 +333,25 @@ def spm_stack_kernel_call(x: jax.Array, coeffs: jax.Array,
     tiles — tile-local pairing makes the rest dead) and stored (masked
     partial edge tile).  Returns (B, out_width or n).
 
+    Quantized I/O (kernels/quant.py conventions):
+
+    * ``x_scale`` — x is int8 with per-(row-block, feature-tile) scales
+      ``(B // block_rows, ceil(in_width / n_tile))``; each block is
+      dequantized to f32 on load, in VMEM.
+    * ``quant_out=True`` — the epilogue requantizes the finished block and
+      returns ``(y int8, y_scale f32)`` with ``y_scale`` shaped
+      ``(B // block_rows, grid feature tiles)``; chained runs feed it
+      straight back as the next run's ``x_scale`` (tiles must match).
+    * ``coeff_scale`` — coeffs is int8 with per-stage ``(L, 1)`` scales,
+      dequantized one stage at a time in VMEM.
+
     ``col_base`` (sharded windowed read — requires ``in_width``, excludes
-    ``out_width``): a TRACED (1,) int32 base feature tile.  x is the
-    feature-COMPLETE (B, in_width) operand shared by all shards; the x
-    index map offsets its feature block by the base (scalar prefetch) so
-    this shard reads/zero-fills exactly its n-wide window of the global
-    operator, and the output is the full (B, n) shard-local slab.
+    ``out_width`` and quantized ACTIVATIONS; quantized coeffs are fine):
+    a TRACED (1,) int32 base feature tile.  x is the feature-COMPLETE
+    (B, in_width) operand shared by all shards; the x index map offsets
+    its feature block by the base (scalar prefetch) so this shard
+    reads/zero-fills exactly its n-wide window of the global operator,
+    and the output is the full (B, n) shard-local slab.
 
     Requires: B % block_rows == 0, n % n_tile == 0, and every stride s
     satisfies n_tile % (2*s) == 0 (pairs tile-local).  ops.py guarantees
@@ -317,8 +363,11 @@ def spm_stack_kernel_call(x: jax.Array, coeffs: jax.Array,
     assert B % block_rows == 0 and n % n_tile == 0
     for s in strides:
         assert n_tile % (2 * s) == 0, (s, n_tile)
+    quant_in = x_scale is not None
+    assert quant_in == (x.dtype == jnp.int8)
     has_base = col_base is not None
     assert not has_base or (in_width is not None and out_width is None)
+    assert not has_base or (not quant_in and not quant_out)
     out_w = out_width if out_width is not None else n
     grid = (B // block_rows, n // n_tile if has_base
             else -(-out_w // n_tile))
@@ -329,28 +378,47 @@ def spm_stack_kernel_call(x: jax.Array, coeffs: jax.Array,
     x_spec = pl.BlockSpec((block_rows, n_tile), lambda i, j: (i, j))
     cf_spec = pl.BlockSpec((L, n_tile // 2, 4), lambda i, j: (0, j, 0))
     o_spec = pl.BlockSpec((block_rows, n_tile), lambda i, j: (i, j))
+    sc_spec = pl.BlockSpec((1, 1), lambda i, j: (i, j))
+    scf_spec = pl.BlockSpec((L, 1), lambda i, j: (0, 0))
 
-    operands = [x, coeffs]
-    in_specs = [x_spec, cf_spec]
+    operands = [x]
+    in_specs = [x_spec]
+    if quant_in:
+        operands.append(x_scale.astype(_F32))
+        in_specs.append(sc_spec)
+    operands.append(coeffs)
+    in_specs.append(cf_spec)
+    if coeff_scale is not None:
+        operands.append(coeff_scale.astype(_F32).reshape(L, 1))
+        in_specs.append(scf_spec)
     for vec in (d_in, d_out, bias):
         if vec is not None:
             operands.append(vec.reshape(1, n))
             in_specs.append(_vec_spec(n_tile))
 
+    out_specs = o_spec
+    out_shape = jax.ShapeDtypeStruct(
+        (B, out_w), jnp.int8 if quant_out else x.dtype)
+    if quant_out:
+        out_specs = [o_spec, sc_spec]
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((B // block_rows, grid[1]),
+                                          jnp.float32)]
+
     kernel = functools.partial(_kernel, strides=strides,
                                has_din=d_in is not None,
                                has_dout=d_out is not None,
                                has_bias=bias is not None,
-                               in_width=in_width, has_base=has_base)
+                               in_width=in_width, has_base=has_base,
+                               quant_in=quant_in, quant_out=quant_out,
+                               quant_cf=coeff_scale is not None)
     if has_base:
         # Scalar prefetch: every index map gains a trailing base ref; only
         # the x map consumes it (blocks past the operand edge clamp; the
         # in-VMEM mask against the global column zero-fills them).
-        in_specs = [pl.BlockSpec(x_spec.block_shape,
-                                 lambda i, j, b: (i, b[0] + j))]
-        in_specs += [_lift_spec(s) for s in ([cf_spec]
-                                             + [_vec_spec(n_tile)]
-                                             * (len(operands) - 2))]
+        in_specs = [_lift_spec(s) for s in in_specs]
+        in_specs[0] = pl.BlockSpec(x_spec.block_shape,
+                                   lambda i, j, b: (i, b[0] + j))
         return pl.pallas_call(
             kernel,
             grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -364,8 +432,8 @@ def spm_stack_kernel_call(x: jax.Array, coeffs: jax.Array,
         kernel,
         grid=grid,
         in_specs=in_specs,
-        out_specs=o_spec,
-        out_shape=jax.ShapeDtypeStruct((B, out_w), x.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(*operands)
 
@@ -390,18 +458,23 @@ def spm_stack_kernel_call(x: jax.Array, coeffs: jax.Array,
 # revisits; accumulating across a non-minor axis would read back a flushed
 # buffer on real TPU): init at batch step 0, accumulate after.
 
-def _stage_walk_bwd(zs, delta, cf_ref, strides: Tuple[int, ...]):
+def _stage_walk_bwd(zs, delta, cf_ref, strides: Tuple[int, ...],
+                    scf_ref=None):
     """Reverse walk over one run's stages from the collected stage-input
     tiles ``zs``: the eq. 14 pair grads (reduced over the batch-tile rows)
     and delta <- B^T delta (eqs. 12-13).  Returns ``(delta_0,
     gcf (L, nt//2, 4))`` — shared by the plain and overlap backward
-    kernels."""
+    kernels.  ``scf_ref`` dequantizes an int8 coefficient slab in VMEM
+    (the gcf output stays f32 in DEQUANTIZED units — the grads of the
+    values the forward actually used)."""
     bb, nt = delta.shape
     gcf_parts = []
     for ell in range(len(strides) - 1, -1, -1):
         s = strides[ell]
         g = nt // (2 * s)
         cf = cf_ref[ell].astype(_F32)
+        if scf_ref is not None:
+            cf = cf * scf_ref[ell, 0]
         a = cf[:, 0].reshape(g, 1, s)
         b = cf[:, 1].reshape(g, 1, s)
         c = cf[:, 2].reshape(g, 1, s)
@@ -426,10 +499,15 @@ def _bwd_kernel(*refs,
                 strides: Tuple[int, ...],
                 has_din: bool, has_dout: bool, has_bias: bool,
                 in_width: Optional[int], out_width: Optional[int],
-                has_base: bool = False, n_zero_init: int = 0):
+                has_base: bool = False, n_zero_init: int = 0,
+                quant_in: bool = False, quant_cf: bool = False):
     refs = list(refs)
     base = refs.pop(0)[0] if has_base else 0
-    x_ref, cf_ref, gy_ref = refs.pop(0), refs.pop(0), refs.pop(0)
+    x_ref = refs.pop(0)
+    sx_ref = refs.pop(0) if quant_in else None
+    cf_ref = refs.pop(0)
+    scf_ref = refs.pop(0) if quant_cf else None
+    gy_ref = refs.pop(0)
     din_ref = refs.pop(0) if has_din else None
     dout_ref = refs.pop(0) if has_dout else None
     if n_zero_init:
@@ -451,11 +529,17 @@ def _bwd_kernel(*refs,
     # Rectangular first run: lanes past in_width are zero-filled exactly as
     # the forward saw them, so the remat AND every grad that multiplies by
     # x (g_din, the eq. 14 coefficient grads) see zeros on padded lanes.
+    # A quantized saved-x (int8 + per-block scale) dequantizes on load, so
+    # the remat replays EXACTLY the activations the quantized forward
+    # produced — the backward is the true gradient of the quantized net.
     x_raw = x_ref[...].astype(_F32)
+    if quant_in:
+        x_raw = x_raw * sx_ref[0, 0]
     if in_width is not None:
         x_raw = _mask_cols(x_raw, j, in_width)
     z0 = x_raw * din_ref[...].astype(_F32) if has_din else x_raw
-    z_last, zs = _apply_stages_fwd(z0, cf_ref, strides, collect=True)
+    z_last, zs = _apply_stages_fwd(z0, cf_ref, strides, collect=True,
+                                   scf_ref=scf_ref)
 
     # Rectangular last run: the sliced-away output columns carry no
     # cotangent, so masking gy to out_width zeroes their contribution to
@@ -482,7 +566,8 @@ def _bwd_kernel(*refs,
     else:
         delta = gy
 
-    delta, gcf = _stage_walk_bwd(zs, delta, cf_ref, strides)
+    delta, gcf = _stage_walk_bwd(zs, delta, cf_ref, strides,
+                                 scf_ref=scf_ref)
 
     if has_din:
         _acc(gdin_ref, jnp.sum(delta * x_raw, axis=0).reshape(1, nt))
@@ -499,7 +584,9 @@ def spm_stack_bwd_kernel_call(x: jax.Array, coeffs: jax.Array,
                               gy: jax.Array,
                               d_in: Optional[jax.Array] = None,
                               d_out: Optional[jax.Array] = None,
-                              col_base: Optional[jax.Array] = None, *,
+                              col_base: Optional[jax.Array] = None,
+                              x_scale: Optional[jax.Array] = None,
+                              coeff_scale: Optional[jax.Array] = None, *,
                               strides: Tuple[int, ...],
                               block_rows: int,
                               n_tile: int,
@@ -514,6 +601,16 @@ def spm_stack_bwd_kernel_call(x: jax.Array, coeffs: jax.Array,
     followed by ``g_din (n,)`` if ``d_in`` was given, ``g_dout (n,)`` if
     ``d_out`` was given, and ``g_bias (n,)`` if ``has_bias`` (the bias value
     itself is not needed for its grad).  All parameter grads are f32.
+
+    Quantized operands (kernels/quant.py conventions): ``x_scale`` marks a
+    saved-x that is int8 with per-(row-block, feature-tile) scales —
+    dequantized on load, so the in-VMEM remat replays exactly the
+    activations the quantized forward produced (g_x then comes back in
+    the GY dtype, never int8 — cotangents are not quantized).
+    ``coeff_scale`` marks an int8 coefficient table with per-stage
+    ``(L, 1)`` scales dequantized in VMEM; the f32 gcf output is the grad
+    of the DEQUANTIZED values, bitwise what a pre-dequantized f32 table
+    would produce.
 
     Rectangular boundaries: ``x`` is (B, in_width) and ``gy`` is
     (B, out_width) when set; both are masked to exact zeros past their
@@ -551,6 +648,9 @@ def spm_stack_bwd_kernel_call(x: jax.Array, coeffs: jax.Array,
     L, n = coeffs.shape[0], 2 * coeffs.shape[1]
     has_base = col_base is not None
     assert not (has_base and dead_from is not None)
+    quant_in = x_scale is not None
+    assert quant_in == (x.dtype == jnp.int8)
+    assert not (has_base and quant_in)
     x_windowed = has_base and in_width is not None
     gy_windowed = has_base and out_width is not None
     in_w = in_width if in_width is not None else n
@@ -579,16 +679,29 @@ def spm_stack_bwd_kernel_call(x: jax.Array, coeffs: jax.Array,
     act_spec = pl.BlockSpec((block_rows, n_tile), lambda j, i: (i, j))
     cf_spec = pl.BlockSpec((L, n_tile // 2, 4), lambda j, i: (0, j, 0))
     vec_spec = pl.BlockSpec((1, n_tile), lambda j, i: (0, j))
+    sc_spec = pl.BlockSpec((1, 1), lambda j, i: (i, j))
+    scf_spec = pl.BlockSpec((L, 1), lambda j, i: (0, 0))
 
-    operands = [x, coeffs, gy]
-    in_specs = [act_spec, cf_spec, act_spec]
+    operands = [x]
+    in_specs = [act_spec]
+    if quant_in:
+        operands.append(x_scale.astype(jnp.float32))
+        in_specs.append(sc_spec)
+    operands.append(coeffs)
+    in_specs.append(cf_spec)
+    if coeff_scale is not None:
+        operands.append(coeff_scale.astype(jnp.float32).reshape(L, 1))
+        in_specs.append(scf_spec)
+    operands.append(gy)
+    in_specs.append(act_spec)
     for vec in (d_in, d_out):
         if vec is not None:
             operands.append(vec.reshape(1, n))
             in_specs.append(vec_spec)
 
+    gx_dt = gy.dtype if quant_in else x.dtype
     out_specs = [act_spec, cf_spec]
-    out_shape = [jax.ShapeDtypeStruct((B, gx_w), x.dtype),
+    out_shape = [jax.ShapeDtypeStruct((B, gx_w), gx_dt),
                  jax.ShapeDtypeStruct((L, n // 2, 4), jnp.float32)]
     for present in (d_in is not None, d_out is not None, has_bias):
         if present:
@@ -616,17 +729,20 @@ def spm_stack_bwd_kernel_call(x: jax.Array, coeffs: jax.Array,
                                has_dout=d_out is not None,
                                has_bias=has_bias,
                                in_width=in_width, out_width=out_width,
-                               has_base=has_base, n_zero_init=n_zero_init)
+                               has_base=has_base, n_zero_init=n_zero_init,
+                               quant_in=quant_in,
+                               quant_cf=coeff_scale is not None)
     if has_base:
         # Scalar prefetch: every index map gains a trailing base ref; only
         # the windowed operands consume it (offset feature block).
         win_spec = pl.BlockSpec((block_rows, n_tile),
                                 lambda j, i, b: (i, b[0] + j))
         in_specs = [_lift_spec(s) for s in in_specs]
+        gy_idx = 2 + (1 if coeff_scale is not None else 0)
         if x_windowed:
             in_specs[0] = win_spec
         if gy_windowed:
-            in_specs[2] = win_spec
+            in_specs[gy_idx] = win_spec
         out = pl.pallas_call(
             kernel,
             grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -746,10 +862,11 @@ def _drain_epilogue(rdma, cap_sem, n_blocks: int):
 def _overlap_kernel(partner_ref, base_ref, *refs,
                     strides: Tuple[int, ...], n_blocks: int,
                     mesh_ndim: int, has_din: bool,
-                    in_width: Optional[int]):
+                    in_width: Optional[int], quant_cf: bool = False):
     refs = list(refs)
-    x_ref, cf_ref, ma_ref, mb_ref = (refs.pop(0), refs.pop(0),
-                                     refs.pop(0), refs.pop(0))
+    x_ref, cf_ref = refs.pop(0), refs.pop(0)
+    scf_ref = refs.pop(0) if quant_cf else None
+    ma_ref, mb_ref = refs.pop(0), refs.pop(0)
     din_ref = refs.pop(0) if has_din else None
     o_ref, send_buf, recv_buf, send_sem, recv_sem, cap_sem = refs
 
@@ -769,7 +886,7 @@ def _overlap_kernel(partner_ref, base_ref, *refs,
             z = _mask_cols(z, base_ref[0], in_width)
         if has_din:
             z = z * din_ref[...].astype(_F32)
-        z = _apply_stages_fwd(z, cf_ref, strides)
+        z = _apply_stages_fwd(z, cf_ref, strides, scf_ref=scf_ref)
         send_buf[slot] = z.astype(send_buf.dtype)
         _rdma(slot).start()
 
@@ -798,7 +915,8 @@ def spm_overlap_kernel_call(x: jax.Array, coeffs: jax.Array,
                             mix_a: jax.Array, mix_b: jax.Array,
                             partner: jax.Array,
                             d_in: Optional[jax.Array] = None,
-                            col_base: Optional[jax.Array] = None, *,
+                            col_base: Optional[jax.Array] = None,
+                            coeff_scale: Optional[jax.Array] = None, *,
                             strides: Tuple[int, ...],
                             block_rows: int,
                             n_tile: int,
@@ -842,16 +960,21 @@ def spm_overlap_kernel_call(x: jax.Array, coeffs: jax.Array,
     o_spec = pl.BlockSpec((block_rows, n_tile),
                           lambda i, p, b: (jnp.maximum(i - 1, 0), 0))
 
-    operands = [x, coeffs, mix_a.reshape(1, n_tile),
-                mix_b.reshape(1, n_tile)]
-    in_specs = [x_spec, cf_spec, vec_spec, vec_spec]
+    operands = [x, coeffs]
+    in_specs = [x_spec, cf_spec]
+    if coeff_scale is not None:
+        operands.append(coeff_scale.astype(jnp.float32).reshape(L, 1))
+        in_specs.append(pl.BlockSpec((L, 1), lambda i, p, b: (0, 0)))
+    operands += [mix_a.reshape(1, n_tile), mix_b.reshape(1, n_tile)]
+    in_specs += [vec_spec, vec_spec]
     if d_in is not None:
         operands.append(d_in.reshape(1, n_tile))
         in_specs.append(vec_spec)
 
     kernel = functools.partial(_overlap_kernel, strides=strides,
                                n_blocks=nb, mesh_ndim=mesh_ndim,
-                               has_din=d_in is not None, in_width=in_width)
+                               has_din=d_in is not None, in_width=in_width,
+                               quant_cf=coeff_scale is not None)
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -873,10 +996,11 @@ def spm_overlap_kernel_call(x: jax.Array, coeffs: jax.Array,
 def _overlap_bwd_kernel(partner_ref, base_ref, *refs,
                         strides: Tuple[int, ...], n_blocks: int,
                         mesh_ndim: int, has_din: bool,
-                        in_width: Optional[int]):
+                        in_width: Optional[int], quant_cf: bool = False):
     refs = list(refs)
-    x_ref, xw_ref, cf_ref, gy_ref = (refs.pop(0), refs.pop(0),
-                                     refs.pop(0), refs.pop(0))
+    x_ref, xw_ref, cf_ref = refs.pop(0), refs.pop(0), refs.pop(0)
+    scf_ref = refs.pop(0) if quant_cf else None
+    gy_ref = refs.pop(0)
     u_ref, v_ref = refs.pop(0), refs.pop(0)
     din_ref = refs.pop(0) if has_din else None
     gx_ref, gcf_ref, gso_ref, gsw_ref = (refs.pop(0), refs.pop(0),
@@ -905,7 +1029,7 @@ def _overlap_bwd_kernel(partner_ref, base_ref, *refs,
         z = _masked(x_ref)
         if has_din:
             z = z * din_ref[...].astype(_F32)
-        z_out = _apply_stages_fwd(z, cf_ref, strides)
+        z_out = _apply_stages_fwd(z, cf_ref, strides, scf_ref=scf_ref)
         send_buf[slot, 0] = gy_ref[...].astype(send_buf.dtype)
         send_buf[slot, 1] = z_out.astype(send_buf.dtype)
         _rdma(slot).start()
@@ -936,8 +1060,10 @@ def _overlap_bwd_kernel(partner_ref, base_ref, *refs,
                 + v_ref[...].astype(_F32) * delta_p)
         x_raw = _masked(xw_ref)
         z0 = x_raw * din_ref[...].astype(_F32) if has_din else x_raw
-        _, zs = _apply_stages_fwd(z0, cf_ref, strides, collect=True)
-        delta0, gcf = _stage_walk_bwd(zs, dmid, cf_ref, strides)
+        _, zs = _apply_stages_fwd(z0, cf_ref, strides, collect=True,
+                                  scf_ref=scf_ref)
+        delta0, gcf = _stage_walk_bwd(zs, dmid, cf_ref, strides,
+                                      scf_ref=scf_ref)
         _acc(gcf_ref, gcf)
         if has_din:
             _acc(gdin_ref, jnp.sum(delta0 * x_raw, axis=0).reshape(1, nt))
@@ -961,7 +1087,8 @@ def spm_overlap_bwd_kernel_call(x: jax.Array, coeffs: jax.Array,
                                 u: jax.Array, v: jax.Array,
                                 partner: jax.Array,
                                 d_in: Optional[jax.Array] = None,
-                                col_base: Optional[jax.Array] = None, *,
+                                col_base: Optional[jax.Array] = None,
+                                coeff_scale: Optional[jax.Array] = None, *,
                                 strides: Tuple[int, ...],
                                 block_rows: int,
                                 n_tile: int,
@@ -1012,10 +1139,13 @@ def spm_overlap_bwd_kernel_call(x: jax.Array, coeffs: jax.Array,
     gx_spec = pl.BlockSpec((block_rows, n_tile),
                            lambda i, p, b: (jnp.maximum(i - 1, 0), 0))
 
-    operands = [x, x, coeffs, gy, u.reshape(1, n_tile),
-                v.reshape(1, n_tile)]
-    in_specs = [x_send_spec, x_walk_spec, cf_spec, gy_spec, vec_spec,
-                vec_spec]
+    operands = [x, x, coeffs]
+    in_specs = [x_send_spec, x_walk_spec, cf_spec]
+    if coeff_scale is not None:
+        operands.append(coeff_scale.astype(jnp.float32).reshape(L, 1))
+        in_specs.append(pl.BlockSpec((L, 1), lambda i, p, b: (0, 0)))
+    operands += [gy, u.reshape(1, n_tile), v.reshape(1, n_tile)]
+    in_specs += [gy_spec, vec_spec, vec_spec]
     if d_in is not None:
         operands.append(d_in.reshape(1, n_tile))
         in_specs.append(vec_spec)
@@ -1031,7 +1161,8 @@ def spm_overlap_bwd_kernel_call(x: jax.Array, coeffs: jax.Array,
 
     kernel = functools.partial(_overlap_bwd_kernel, strides=strides,
                                n_blocks=nb, mesh_ndim=mesh_ndim,
-                               has_din=d_in is not None, in_width=in_width)
+                               has_din=d_in is not None, in_width=in_width,
+                               quant_cf=coeff_scale is not None)
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(

@@ -30,7 +30,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import ARCH_IDS, get_config, get_smoke, with_overrides
+from repro.configs import (ARCH_IDS, get_config, get_smoke, with_overrides,
+                           with_quantized_io)
 from repro.data.char_corpus import build_corpus
 from repro.data.loader import DeterministicLoader
 from repro.models import causal_lm as LM
@@ -38,9 +39,9 @@ from repro.models import transformer as T
 from repro.optim.adamw import OptimizerConfig
 from repro.train import (FaultEventLog, FaultPolicy, RESUME_LATEST,
                          StragglerDetector, latest_valid_step,
-                         make_train_state, make_train_step,
-                         restore_checkpoint, run_with_recovery,
-                         save_checkpoint)
+                         make_pod_train_step, make_train_state,
+                         make_train_step, restore_checkpoint,
+                         run_with_recovery, save_checkpoint)
 from repro.train.chaos import ChaosSchedule
 
 
@@ -88,6 +89,19 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quantize", action="store_true",
+                    help="int8 SPM quantization: activation I/O on the "
+                         "fused kernel path + per-stage-scaled coefficient "
+                         "tables (configs.with_quantized_io; see "
+                         "docs/quantization.md)")
+    ap.add_argument("--pod-dp", type=int, default=0,
+                    help="data-parallel pod size: >1 runs the train step "
+                         "inside a shard_map over a ('pod',) mesh of that "
+                         "many devices (batch must divide by it)")
+    ap.add_argument("--compress-pod-grads", action="store_true",
+                    help="with --pod-dp: reduce gradients through the int8 "
+                         "error-feedback compressed psum instead of a "
+                         "plain pmean (optim/compression.py)")
     ap.add_argument("--chaos-spec", default="",
                     help="deterministic fault-injection plan, e.g. "
                          "'nan@13+5;corrupt@18:bitflip;preempt@19' "
@@ -116,8 +130,19 @@ def train(args: argparse.Namespace,
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     if args.linear_impl:
         cfg = with_overrides(cfg, linear_impl=args.linear_impl)
+    if getattr(args, "quantize", False):
+        cfg = with_quantized_io(cfg)
+    n_pod = max(getattr(args, "pod_dp", 0), 0)
+    if getattr(args, "compress_pod_grads", False):
+        cfg = with_overrides(cfg, compress_pod_grads=True)
+    if n_pod > 1 and args.batch % n_pod:
+        raise ValueError(f"--batch {args.batch} must divide by "
+                         f"--pod-dp {n_pod}")
     print(f"arch={cfg.name} impl={cfg.linear_impl} "
-          f"steps={args.steps} B={args.batch} T={args.seq}")
+          f"steps={args.steps} B={args.batch} T={args.seq}"
+          + (f" pod={n_pod}"
+             f"{' (compressed grads)' if cfg.compress_pod_grads else ''}"
+             if n_pod > 1 else ""))
 
     if event_log is None:
         path = args.event_log or (os.path.join(args.ckpt_dir,
@@ -138,13 +163,26 @@ def train(args: argparse.Namespace,
     # chaos_guard is always on: with poison=0 the step is bit-identical
     # to a guard-free build, and the single compiled step serves healthy
     # and poisoned iterations alike.
-    step_fn = jax.jit(make_train_step(
-        lambda p, b: LM.lm_loss(p, b, cfg), opt_cfg,
-        accum_steps=args.accum, chaos_guard=True))
+    loss_fn = lambda p, b: LM.lm_loss(p, b, cfg)
+    if n_pod > 1:
+        from jax.sharding import Mesh
+        devs = jax.devices()
+        if len(devs) < n_pod:
+            raise ValueError(f"--pod-dp {n_pod} needs {n_pod} devices, "
+                             f"have {len(devs)}")
+        mesh = Mesh(np.asarray(devs[:n_pod]).reshape(n_pod), ("pod",))
+        step_fn = jax.jit(make_pod_train_step(
+            loss_fn, opt_cfg, mesh, compress=cfg.compress_pod_grads,
+            accum_steps=args.accum, chaos_guard=True))
+    else:
+        step_fn = jax.jit(make_train_step(
+            loss_fn, opt_cfg, accum_steps=args.accum, chaos_guard=True))
 
     def init_state() -> dict:
         params = T.init_model(jax.random.PRNGKey(args.seed), cfg)
-        state = make_train_state(params)
+        state = make_train_state(
+            params,
+            ef_pod=n_pod if (n_pod > 1 and cfg.compress_pod_grads) else 0)
         n_params = sum(x.size for x in jax.tree.leaves(params))
         print(f"params: {n_params:,}")
         return state

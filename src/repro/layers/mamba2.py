@@ -41,6 +41,8 @@ class Mamba2Config:
     spm_schedule: str = "butterfly"
     spm_n_shards: int = 1
     spm_overlap: Optional[bool] = None
+    spm_quant_acts: bool = False
+    spm_quant_coeffs: bool = False
     param_dtype: Any = jnp.float32
 
     @property
@@ -62,6 +64,8 @@ class Mamba2Config:
             n_stages=self.spm_stages, backward=self.spm_backward,
             use_kernel=self.spm_use_kernel, schedule=self.spm_schedule,
             n_shards=self.spm_n_shards, overlap=self.spm_overlap,
+            quant_acts=self.spm_quant_acts,
+            quant_coeffs=self.spm_quant_coeffs,
             param_dtype=self.param_dtype)
 
     @property

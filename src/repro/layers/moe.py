@@ -42,6 +42,8 @@ class MoEConfig:
     spm_schedule: str = "butterfly"
     spm_n_shards: int = 1
     spm_overlap: Optional[bool] = None
+    spm_quant_acts: bool = False
+    spm_quant_coeffs: bool = False
     param_dtype: Any = jnp.float32
 
     @property
@@ -54,6 +56,8 @@ class MoEConfig:
                          spm_schedule=self.spm_schedule,
                          spm_n_shards=self.spm_n_shards,
                          spm_overlap=self.spm_overlap,
+                         spm_quant_acts=self.spm_quant_acts,
+                         spm_quant_coeffs=self.spm_quant_coeffs,
                          param_dtype=self.param_dtype)
 
     @property
@@ -66,6 +70,8 @@ class MoEConfig:
                          spm_schedule=self.spm_schedule,
                          spm_n_shards=self.spm_n_shards,
                          spm_overlap=self.spm_overlap,
+                         spm_quant_acts=self.spm_quant_acts,
+                         spm_quant_coeffs=self.spm_quant_coeffs,
                          param_dtype=self.param_dtype)
 
     def capacity(self, group_tokens: int) -> int:

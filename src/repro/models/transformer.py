@@ -91,6 +91,13 @@ class ModelConfig:
                                            # executor (row-block pipelined
                                            # exchanges): None=auto/on-TPU,
                                            # True=force, False=off
+    spm_quant_acts: bool = False           # int8 activation I/O on the fused
+                                           # kernel path (per-block scales)
+    spm_quant_coeffs: bool = False         # int8 per-stage-scaled coefficient
+                                           # tables dequantized in VMEM
+    compress_pod_grads: bool = False       # int8 error-feedback pod-DP grad
+                                           # reduction (train/step.py
+                                           # make_pod_train_step)
     # io
     input_kind: str = "tokens"       # "tokens" | "embeddings"
     tie_embeddings: bool = True
@@ -113,6 +120,8 @@ class ModelConfig:
             spm_use_kernel=self.spm_use_kernel,
             spm_schedule=self.spm_schedule, spm_n_shards=self.spm_n_shards,
             spm_overlap=self.spm_overlap,
+            spm_quant_acts=self.spm_quant_acts,
+            spm_quant_coeffs=self.spm_quant_coeffs,
             q_chunk=self.q_chunk,
             k_chunk=self.k_chunk, param_dtype=self.param_dtype)
 
@@ -124,6 +133,8 @@ class ModelConfig:
             spm_use_kernel=self.spm_use_kernel,
             spm_schedule=self.spm_schedule, spm_n_shards=self.spm_n_shards,
             spm_overlap=self.spm_overlap,
+            spm_quant_acts=self.spm_quant_acts,
+            spm_quant_coeffs=self.spm_quant_coeffs,
             param_dtype=self.param_dtype)
 
     def moe_cfg(self) -> MoEConfig:
@@ -136,6 +147,8 @@ class ModelConfig:
             spm_use_kernel=self.spm_use_kernel,
             spm_schedule=self.spm_schedule, spm_n_shards=self.spm_n_shards,
             spm_overlap=self.spm_overlap,
+            spm_quant_acts=self.spm_quant_acts,
+            spm_quant_coeffs=self.spm_quant_coeffs,
             param_dtype=self.param_dtype)
 
     def mamba_cfg(self) -> Mamba2Config:
@@ -147,6 +160,8 @@ class ModelConfig:
             spm_use_kernel=self.spm_use_kernel,
             spm_schedule=self.spm_schedule, spm_n_shards=self.spm_n_shards,
             spm_overlap=self.spm_overlap,
+            spm_quant_acts=self.spm_quant_acts,
+            spm_quant_coeffs=self.spm_quant_coeffs,
             param_dtype=self.param_dtype)
 
     def shared_attn_cfg(self) -> AttentionConfig:
@@ -160,6 +175,8 @@ class ModelConfig:
             spm_use_kernel=self.spm_use_kernel,
             spm_schedule=self.spm_schedule, spm_n_shards=self.spm_n_shards,
             spm_overlap=self.spm_overlap,
+            spm_quant_acts=self.spm_quant_acts,
+            spm_quant_coeffs=self.spm_quant_coeffs,
             param_dtype=self.param_dtype)
 
     def embed_cfg(self) -> EmbeddingConfig:

@@ -87,5 +87,8 @@ def adamw_update(params: Any, grads: Any, state: dict,
     new_p = treedef.unflatten([o[0] for o in out])
     new_mu = treedef.unflatten([o[1] for o in out])
     new_nu = treedef.unflatten([o[2] for o in out])
-    return (new_p, {"mu": new_mu, "nu": new_nu, "count": count},
-            {"grad_norm": gnorm, "lr": lr})
+    # extra optimizer-state keys (e.g. the error-feedback residual "ef"
+    # carried by the compressed-psum train step) pass through untouched —
+    # their owner updates them, AdamW only owns mu/nu/count
+    new_state = {**state, "mu": new_mu, "nu": new_nu, "count": count}
+    return new_p, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -19,12 +19,25 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["compress", "decompress", "compress_tree", "decompress_tree",
-           "ef_step", "psum_compressed"]
+           "ef_step", "psum_compressed", "psum_compressed_ef",
+           "init_residual"]
 
 
 def _amax_scale(x: jax.Array) -> jax.Array:
     """Per-tensor int8 quantization scale: absmax / 127 (+eps)."""
     return jnp.max(jnp.abs(x.astype(jnp.float32))) / 127.0 + 1e-12
+
+
+def _is_compressed_leaf(x: Any) -> bool:
+    """Whether ``x`` is a ``compress`` result: a 2-tuple of (int8 array,
+    scalar scale).  Keying off the CONTENT (dtype + rank) instead of
+    "any 2-tuple" keeps legitimate 2-tuple pytree structure (e.g. a
+    ``(mu, nu)`` state pair) traversable."""
+    if not (isinstance(x, tuple) and len(x) == 2):
+        return False
+    q, s = x
+    return (hasattr(q, "dtype") and q.dtype == jnp.int8
+            and hasattr(s, "ndim") and jnp.ndim(s) == 0)
 
 
 def compress(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
@@ -37,18 +50,24 @@ def compress(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
 
 def decompress(q: jax.Array, scale: jax.Array, dtype=jnp.float32
                ) -> jax.Array:
+    """(int8 values, f32 scale) -> ``dtype`` (default f32)."""
     return (q.astype(jnp.float32) * scale).astype(dtype)
 
 
 def compress_tree(tree: Any) -> Any:
+    """``compress`` every array leaf: pytree of (int8 values, scale)."""
     return jax.tree.map(lambda x: compress(x), tree,
                         is_leaf=lambda x: isinstance(x, jax.Array))
 
 
 def decompress_tree(ctree: Any, like: Any) -> Any:
+    """Inverse of ``compress_tree``: dequantize every compressed leaf back
+    to the dtype of the matching leaf of ``like``.  Compressed leaves are
+    recognized by content — (int8 array, scalar scale) — so 2-tuples that
+    are genuine pytree structure descend normally."""
     return jax.tree.map(
         lambda c, x: decompress(c[0], c[1], x.dtype), ctree, like,
-        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+        is_leaf=_is_compressed_leaf)
 
 
 def ef_step(grads: Any, residual: Any) -> Tuple[Any, Any]:
@@ -87,5 +106,40 @@ def psum_compressed(grads: Any, axis_name: str) -> Any:
     return jax.tree.map(one, grads)
 
 
+def psum_compressed_ef(grads: Any, residual: Any, axis_name: str, *,
+                       mean: bool = True) -> Tuple[Any, Any]:
+    """Error-feedback int8 gradient all-reduce over ``axis_name``.
+
+    Each member folds its LOCAL residual into the gradient BEFORE
+    quantizing (g' = g + r), quantizes g' against the axis-max scale
+    (pmax, so every member shares one dequant grid), psums the int8
+    payload in int32, and keeps the local quantization error as the next
+    step's residual (r' = g' - q * s).  Over steps the residual recycles
+    what quantization dropped, making the compressed update unbiased in
+    the EF-SGD sense.  Returns ``(total_grads, new_residual)``; with
+    ``mean=True`` the total is divided by the axis size (gradient mean,
+    matching an uncompressed ``pmean``) — the residual is kept in SUM
+    space either way, since it is local error, not a reduced quantity."""
+    inv_size = 1.0 / jax.lax.psum(1.0, axis_name)
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        s = jax.lax.pmax(_amax_scale(gf), axis_name)
+        q = jnp.clip(jnp.round(gf / s), -127, 127)
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        out = total.astype(jnp.float32) * s
+        if mean:
+            out = out * inv_size
+        return out.astype(g.dtype), gf - q * s
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]))
+
+
 def init_residual(params: Any) -> Any:
+    """Zero error-feedback residual matching ``params`` (always f32 — the
+    residual accumulates sub-quantum error smaller than one bf16 ulp)."""
     return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)

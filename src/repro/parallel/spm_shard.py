@@ -113,6 +113,7 @@ from repro.core.eligibility import (OVERLAP_ROW_BLOCKS, overlap_segments,
                                     resolve_rdma, resolve_shard_kernel,
                                     sharded_eligible)
 from repro.core.pairings import Stage
+from repro.kernels import quant as Q
 from repro.kernels import spm_stack as K
 from repro.kernels.ops import (default_interpret, pick_block_rows_for_plan,
                                plan_runs)
@@ -186,6 +187,14 @@ class ShardPlan:
     # kernel.
     row_blocks: Tuple[int, ...] = ()
     rdma_crosses: Tuple[int, ...] = ()
+    # quant_cf: shard-local kernel runs read int8 per-stage-scaled
+    # coefficient tables, dequantized in VMEM (SPMConfig.quant_coeffs).
+    # The quantization is recomputed deterministically from the f32 slab
+    # in forward AND backward, so both see identical dequantized values
+    # and the closed-form grads are grads of the dequantized operator
+    # (straight-through in the table params).  Cross-stage 2x2 mixes are
+    # O(n) elementwise XLA ops and stay f32.
+    quant_cf: bool = False
 
     @property
     def overlap(self) -> bool:
@@ -389,16 +398,20 @@ def _segment_fwd(z, cf, run: Tuple[int, ...], plan: ShardPlan, *,
     feature-complete (rows, in_width) operand ``z``."""
     if plan.use_kernel:
         runs = plan_runs(plan.n_local, run)
+        kcf, scf = (Q.quantize_coeffs(cf) if plan.quant_cf
+                    else (cf, None))
         off = 0
         for r, (run_strides, n_tile) in enumerate(runs):
             first, last = r == 0, r == len(runs) - 1
             z = K.spm_stack_kernel_call(
-                z, cf[off: off + len(run_strides)],
+                z, kcf[off: off + len(run_strides)],
                 d_in if first else None,
                 d_out if last else None,
                 bias if last else None,
                 _base_tiles(col_base, n_tile)
                 if (first and col_base is not None) else None,
+                coeff_scale=(scf[off: off + len(run_strides)]
+                             if plan.quant_cf else None),
                 strides=run_strides, block_rows=plan.block_rows,
                 n_tile=n_tile,
                 in_width=in_width if first else None,
@@ -428,16 +441,22 @@ def _segment_bwd(z_in, delta, cf, run: Tuple[int, ...], plan: ShardPlan, *,
     """
     if plan.use_kernel:
         runs = plan_runs(plan.n_local, run)
+        # recompute the SAME deterministic quantization as the forward so
+        # the remat and the grads see identical dequantized tables
+        kcf, scf = (Q.quantize_coeffs(cf) if plan.quant_cf
+                    else (cf, None))
         zs, z, off = [], z_in, 0
         for r, (run_strides, n_tile) in enumerate(runs):
             zs.append(z)
             if r < len(runs) - 1:    # the last output is never needed
                 z = K.spm_stack_kernel_call(
-                    z, cf[off: off + len(run_strides)],
+                    z, kcf[off: off + len(run_strides)],
                     d_in if r == 0 else None, None, None,
                     _base_tiles(col_base, n_tile)
                     if (r == 0 and in_width is not None
                         and col_base is not None) else None,
+                    coeff_scale=(scf[off: off + len(run_strides)]
+                                 if plan.quant_cf else None),
                     strides=run_strides, block_rows=plan.block_rows,
                     n_tile=n_tile,
                     in_width=in_width if r == 0 else None,
@@ -451,10 +470,12 @@ def _segment_bwd(z_in, delta, cf, run: Tuple[int, ...], plan: ShardPlan, *,
             first, last = r == 0, r == len(runs) - 1
             win_x = first and in_width is not None and col_base is not None
             out = K.spm_stack_bwd_kernel_call(
-                zs[r], cf[offs[r]: offs[r + 1]], delta,
+                zs[r], kcf[offs[r]: offs[r + 1]], delta,
                 d_in if first else None,
                 d_out if last else None,
                 _base_tiles(col_base, n_tile) if win_x else None,
+                coeff_scale=(scf[offs[r]: offs[r + 1]]
+                             if plan.quant_cf else None),
                 strides=run_strides, block_rows=plan.block_rows,
                 n_tile=n_tile, has_bias=last and has_bias,
                 in_width=in_width if first else None,
@@ -557,11 +578,14 @@ def _pair_rdma_fwd(z, li: int, ci: int, plan: ShardPlan, tabs,
     mix_a, mix_b = _cross_role_vecs(tabs[ci][0], k, low)
     (run_strides, n_tile), = plan_runs(plan.n_local, local_step[2])
     first = li == 0
+    kcf, scf = (Q.quantize_coeffs(tabs[li][0]) if plan.quant_cf
+                else (tabs[li][0], None))
     return K.spm_overlap_kernel_call(
-        z, tabs[li][0], mix_a, mix_b, _partner_coords(plan, k),
+        z, kcf, mix_a, mix_b, _partner_coords(plan, k),
         d_in=d_in if (first and plan.fold_din) else None,
         col_base=(_base_tiles(base_cols, n_tile)
                   if (first and plan.win_in) else None),
+        coeff_scale=scf,
         strides=run_strides, block_rows=plan.block_rows, n_tile=n_tile,
         in_width=plan.in_width if (first and plan.win_in) else None,
         collective_id=2 * ci)       # distinct per pair; bwd takes 2*ci+1
@@ -587,11 +611,14 @@ def _pair_rdma_bwd(z_in, delta, li: int, ci: int, plan: ShardPlan, tabs,
     v = jnp.where(low, cfc[:, 2], cfc[:, 1])
     (run_strides, n_tile), = plan_runs(plan.n_local, local_step[2])
     first = li == 0
+    kcf, scf = (Q.quantize_coeffs(tabs[li][0]) if plan.quant_cf
+                else (tabs[li][0], None))
     out = K.spm_overlap_bwd_kernel_call(
-        z_in, tabs[li][0], delta, u, v, _partner_coords(plan, k),
+        z_in, kcf, delta, u, v, _partner_coords(plan, k),
         d_in=d_in if (first and plan.fold_din) else None,
         col_base=(_base_tiles(base_cols, n_tile)
                   if (first and plan.win_in) else None),
+        coeff_scale=scf,
         strides=run_strides, block_rows=plan.block_rows, n_tile=n_tile,
         in_width=plan.in_width if (first and plan.win_in) else None,
         collective_id=2 * ci + 1)
@@ -1060,7 +1087,8 @@ def spm_apply_sharded(params: dict, x: jax.Array, cfg, mesh: Mesh, *,
         has_bias=cfg.use_bias, use_kernel=use_kernel,
         block_rows=block_rows, interpret=interpret, dp=dp,
         in_width=in_width, out_width=out_width,
-        row_blocks=row_blocks, rdma_crosses=rdma_crosses)
+        row_blocks=row_blocks, rdma_crosses=rdma_crosses,
+        quant_cf=use_kernel and bool(getattr(cfg, "quant_coeffs", False)))
 
     coeffs = spm_mod.stage_coeffs(params, cfg)
     tables = _step_tables(coeffs, steps, cfg.n_shards, n_local)

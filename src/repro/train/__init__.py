@@ -4,7 +4,9 @@ checkpointing, fault policy / recovery orchestration, chaos injection."""
 from repro.train.state import (  # noqa: F401
     make_train_state, param_count, tree_signature,
 )
-from repro.train.step import make_train_step, make_eval_step  # noqa: F401
+from repro.train.step import (  # noqa: F401
+    make_eval_step, make_pod_train_step, make_train_step, pod_residual,
+)
 from repro.train.checkpoint import (  # noqa: F401
     CheckpointCorruptError, latest_step, latest_valid_step,
     list_checkpoints, quarantine_checkpoint, restore_checkpoint,

@@ -18,10 +18,20 @@ from repro.optim.adamw import init_opt_state
 __all__ = ["make_train_state", "param_count", "tree_signature"]
 
 
-def make_train_state(params: Any) -> dict:
-    """Fresh training state for ``params``: AdamW moments zeroed, step 0."""
+def make_train_state(params: Any, ef_pod: int = 0) -> dict:
+    """Fresh training state for ``params``: AdamW moments zeroed, step 0.
+
+    ``ef_pod > 1`` adds the int8-gradient-compression error-feedback
+    residual ``opt["ef"]`` for a pod of that size (zeros shaped like
+    params with a leading member axis — ``train/step.pod_residual``);
+    it checkpoints, restores, and NaN-rolls-back with the rest of the
+    optimizer state."""
+    opt = init_opt_state(params)
+    if ef_pod > 1:
+        from repro.train.step import pod_residual
+        opt["ef"] = pod_residual(params, ef_pod)
     return {"params": params,
-            "opt": init_opt_state(params),
+            "opt": opt,
             "step": jnp.zeros((), jnp.int32)}
 
 

@@ -18,7 +18,15 @@
     it is nonzero — an in-graph fault injection that exercises the guard
     without recompiling (train/chaos.py plans WHEN it fires).  With
     ``poison == 0`` the factor is exactly 1.0, so the arithmetic is
-    bit-identical to a chaos-free step.
+    bit-identical to a chaos-free step,
+  * an optional data-parallel gradient reduction (``grad_axis``): the
+    step pmean-reduces gradients over that named axis (for use inside a
+    ``shard_map``), and with ``compress_grads=True`` the reduction runs
+    through the int8 error-feedback compressor
+    (``optim.compression.psum_compressed_ef``) with the per-member
+    residual carried in ``state["opt"]["ef"]`` — the
+    ``SPMConfig.compress_pod_grads`` knob.  ``make_pod_train_step`` wraps
+    the whole step in that shard_map over a ("pod",) mesh.
 """
 
 from __future__ import annotations
@@ -27,10 +35,13 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.optim.adamw import OptimizerConfig, adamw_update
+from repro.optim.compression import psum_compressed_ef
 
-__all__ = ["make_train_step", "make_eval_step"]
+__all__ = ["make_train_step", "make_pod_train_step", "pod_residual",
+           "make_eval_step"]
 
 
 def _split_microbatches(batch: Any, accum_steps: int) -> Any:
@@ -44,7 +55,9 @@ def _split_microbatches(batch: Any, accum_steps: int) -> Any:
 def make_train_step(loss_fn: Callable, opt_cfg: OptimizerConfig, *,
                     accum_steps: int = 1,
                     nan_guard: bool = True,
-                    chaos_guard: bool = False) -> Callable:
+                    chaos_guard: bool = False,
+                    grad_axis: Optional[str] = None,
+                    compress_grads: bool = False) -> Callable:
     """loss_fn(params, batch) -> (loss, metrics).
 
     With ``chaos_guard=True`` the returned step is
@@ -52,10 +65,23 @@ def make_train_step(loss_fn: Callable, opt_cfg: OptimizerConfig, *,
     nonzero poisons the gradients with NaN IN-GRAPH (the jitted step stays
     compiled across healthy and poisoned steps), zero multiplies by an
     exact 1.0 — the fault-injection port of train/chaos.py.  Requires
-    ``nan_guard`` so the poisoned update is skipped, not applied."""
+    ``nan_guard`` so the poisoned update is skipped, not applied.
+
+    With ``grad_axis`` the step reduces gradients (and loss/metrics) over
+    that named mesh axis — it must then run inside a ``shard_map`` that
+    binds the axis.  ``compress_grads=True`` swaps the pmean for the int8
+    error-feedback compressed psum; the per-member residual lives in
+    ``state["opt"]["ef"]`` (see ``pod_residual``) and rolls back with the
+    rest of the optimizer state on NaN-guarded skips.  The chaos poison
+    is applied AFTER the reduction so a NaN never enters the int8
+    quantizer — the residual update of a poisoned step stays finite and
+    is discarded by the same rollback."""
     if chaos_guard and not nan_guard:
         raise ValueError("chaos_guard requires nan_guard (a poisoned "
                          "update must be skipped, not applied)")
+    if compress_grads and grad_axis is None:
+        raise ValueError("compress_grads requires grad_axis (the int8 "
+                         "compressor reduces over a named mesh axis)")
 
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
@@ -96,6 +122,17 @@ def make_train_step(loss_fn: Callable, opt_cfg: OptimizerConfig, *,
 
     def step(state: dict, batch: Any, poison: Any = None):
         loss, metrics, grads = compute_grads(state["params"], batch)
+        new_ef = None
+        if grad_axis is not None:
+            if compress_grads:
+                grads, new_ef = psum_compressed_ef(
+                    grads, state["opt"]["ef"], grad_axis)
+            else:
+                grads = jax.tree.map(
+                    lambda g: jax.lax.pmean(g, grad_axis), grads)
+            loss = jax.lax.pmean(loss, grad_axis)
+            metrics = jax.tree.map(
+                lambda m: jax.lax.pmean(m, grad_axis), metrics)
         if chaos_guard:
             if poison is None:
                 raise TypeError("chaos_guard step requires the poison "
@@ -110,6 +147,11 @@ def make_train_step(loss_fn: Callable, opt_cfg: OptimizerConfig, *,
                                  grads)
         new_params, new_opt, info = adamw_update(
             state["params"], grads, state["opt"], opt_cfg)
+        if new_ef is not None:
+            # adamw passes "ef" through untouched; install the updated
+            # residual BEFORE the nan_guard select so a skipped step also
+            # rolls the residual back to its pre-step value.
+            new_opt = {**new_opt, "ef": new_ef}
         metrics = dict(metrics)
         metrics.update(info)
         if nan_guard:
@@ -125,6 +167,74 @@ def make_train_step(loss_fn: Callable, opt_cfg: OptimizerConfig, *,
         return new_state, metrics
 
     return step
+
+
+def pod_residual(params: Any, n_pod: int) -> Any:
+    """Per-member error-feedback residual for ``make_pod_train_step``.
+
+    Shaped like ``params`` with a leading ``(n_pod,)`` member axis — the
+    residual is LOCAL state (each pod member keeps the quantization error
+    of its own gradient shard), so it enters the pod step's ``shard_map``
+    under ``P(axis)`` while params/optimizer moments stay replicated.
+    Store it as ``state["opt"]["ef"]``; AdamW passes unknown optimizer
+    keys through untouched and the NaN guard rolls it back with the rest
+    of the optimizer state."""
+    return jax.tree.map(
+        lambda p: jnp.zeros((n_pod,) + p.shape, jnp.float32), params)
+
+
+def make_pod_train_step(loss_fn: Callable, opt_cfg: OptimizerConfig,
+                        mesh, *, axis: str = "pod",
+                        compress: bool = True,
+                        **step_kwargs) -> Callable:
+    """Data-parallel train step over mesh axis ``axis`` via ``shard_map``.
+
+    Wraps ``make_train_step(..., grad_axis=axis,
+    compress_grads=compress)`` in a ``shard_map`` over ``mesh``: the
+    batch is split along ``axis`` (leading dim), params / optimizer
+    moments / step counter are replicated, and — when ``compress`` is on
+    (the ``SPMConfig.compress_pod_grads`` knob) — the error-feedback
+    residual ``state["opt"]["ef"]`` carries a leading ``(n_pod,)`` member
+    axis (see ``pod_residual``) that is sliced to the local member inside
+    the body.  Gradients reduce with the int8 error-feedback compressed
+    psum (``compress=True``) or a plain pmean; loss and metrics are
+    pmean-reduced either way so the returned values are replicated.
+    Extra ``step_kwargs`` (``accum_steps``, ``nan_guard``,
+    ``chaos_guard``) pass through to ``make_train_step``."""
+    from jax.experimental.shard_map import shard_map
+
+    step = make_train_step(loss_fn, opt_cfg, grad_axis=axis,
+                           compress_grads=compress, **step_kwargs)
+
+    def body(state, batch, poison):
+        if compress:
+            opt = dict(state["opt"])
+            # (1, *shape) local slice of the member-axis residual
+            opt["ef"] = jax.tree.map(lambda r: r[0], opt["ef"])
+            state = {**state, "opt": opt}
+        new_state, metrics = step(state, batch, poison)
+        if compress:
+            new_opt = dict(new_state["opt"])
+            new_opt["ef"] = jax.tree.map(lambda r: r[None], new_opt["ef"])
+            new_state = {**new_state, "opt": new_opt}
+        return new_state, metrics
+
+    opt_spec = {"mu": P(), "nu": P(), "count": P()}
+    if compress:
+        opt_spec["ef"] = P(axis)
+    state_spec = {"params": P(), "opt": opt_spec, "step": P()}
+    sharded = shard_map(
+        body, mesh=mesh,
+        in_specs=(state_spec, P(axis), P()),
+        out_specs=(state_spec, P()),
+        check_rep=False)
+
+    def pod_step(state: dict, batch: Any, poison: Any = None):
+        if poison is None:
+            poison = jnp.zeros((), jnp.float32)
+        return sharded(state, batch, jnp.asarray(poison))
+
+    return pod_step
 
 
 def make_eval_step(loss_fn: Callable) -> Callable:

@@ -96,6 +96,35 @@ def test_gate_accepts_the_committed_baseline_against_itself():
     assert len(cr.gated_metrics(bench)) >= 10
 
 
+def test_quant_bytes_is_gated_and_growth_fails():
+    base = _payload()
+    base["rect_results"][0]["traffic"]["quant_bytes"] = 150
+    fresh = copy.deepcopy(base)
+    fresh["rect_results"][0]["traffic"]["quant_bytes"] = 200
+    regs, dropped, new = cr.compare(base, fresh)
+    assert len(regs) == 1 and regs[0][0][-1] == "quant_bytes"
+    # a payload without the key (pre-quant baseline) simply has no row
+    regs, dropped, new = cr.compare(_payload(), base)
+    assert regs == [] and dropped == []
+    assert [k for k in new if k[-1] == "quant_bytes"]
+
+
+def test_committed_rect_hot_shapes_meet_quant_reduction_floor():
+    """ISSUE 9 acceptance: every rect hot shape in the committed bench is
+    int8-eligible with >= 1.8x modeled HBM-byte reduction vs the f32
+    fused plan, and the gate actually carries those rows."""
+    with open(os.path.join(REPO, "BENCH_kernel.json")) as f:
+        bench = json.load(f)
+    assert bench["rect_results"], "baseline has no rect rows"
+    for r in bench["rect_results"]:
+        t = r["traffic"]
+        assert t["quant_eligible"], f"{r['shape']}: quant-ineligible plan"
+        assert t["quant_reduction"] >= 1.8, \
+            f"{r['shape']}: {t['quant_reduction']:.2f}x < 1.8x"
+    gated = cr.gated_metrics(bench)
+    assert [k for k in gated if k[-1] == "quant_bytes"]
+
+
 # ---------------------------------------------------------------------------
 # compile-contract report gating (repro.analysis driver output)
 # ---------------------------------------------------------------------------

@@ -29,6 +29,8 @@ API_MODULES = [
     "repro.configs.base",
     "repro.parallel",
     "repro.serve.engine",
+    "repro.kernels.quant",
+    "repro.optim.compression",
 ]
 
 DOC_FILES = ["README.md"] + sorted(

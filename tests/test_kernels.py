@@ -11,8 +11,12 @@ import pytest
 
 from repro.core import (SPMConfig, init_spm, kernel_eligible, spm_apply,
                         use_fused_kernel)
+from repro.core.eligibility import quant_acts_eligible
 from repro.core.linear import LinearConfig, init_linear, linear_apply
-from repro.kernels.ops import plan_runs, spm_stack_fused
+from repro.core.spm import stage_coeffs
+from repro.kernels import quant as Q
+from repro.kernels.ops import (plan_runs, spm_stack_fused, spm_stack_fused_q8,
+                               tile_cap_for_rows)
 from repro.kernels.ref import (spm_full_ref, spm_stack_grads_ref,
                                spm_stack_ref)
 from repro.kernels.spm_stack import (pick_block_rows, spm_stack_bwd_kernel_call,
@@ -564,3 +568,173 @@ def test_tiny_row_fused_matches_ref_and_grads():
     for a, b in zip(g, gr):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    atol=1e-3, rtol=1e-3)
+
+# ---------------------------------------------------------------------------
+# quantized fused path (test-pyramid layer 2): int8 activation I/O and
+# per-stage int8 coefficient tables vs the f32 XLA reference.  Layer 1
+# (quantizer primitives) is tests/test_quantization.py; layer 3 (sharded
+# parity + compressed-pod convergence) is tests/test_distributed.py.
+# ---------------------------------------------------------------------------
+
+
+def _operator_gain(coeffs, d_in=None, d_out=None):
+    """Row-sum-norm bound on the operator's amplification: every stage's
+    2x2 mix amplifies an elementwise bound by at most
+    max(|a|+|b|, |c|+|d|) over its pairs, the diagonals by their absmax.
+    An upper bound on |y|_inf / |x|_inf, and on the gain from any
+    internal point to the output."""
+    a, b, c, d = (jnp.abs(coeffs[..., i]) for i in range(4))
+    per_stage = jnp.max(jnp.maximum(a + b, c + d), axis=-1)   # (L,)
+    g = jnp.prod(per_stage)
+    for diag in (d_in, d_out):
+        if diag is not None:
+            g = g * jnp.max(jnp.abs(diag))
+    return float(g)
+
+
+def _quant_tol(x, coeffs, d_in=None, d_out=None):
+    """Derived worst-case output bound for the quantized fused path — no
+    magic constants, everything comes from the scale convention and the
+    operands themselves.
+
+    Each quantization event rounds to nearest on a grid with step
+    absmax/127 at that point, so it injects at most absmax/254
+    elementwise.  The magnitude anywhere in the chain is at most
+    G * max|x| (G = ``_operator_gain``), and the downstream gain on any
+    injected error is also at most G, so one event contributes at most
+    G * (G * max|x|) / 254 ... except G bounds the WHOLE chain, so
+    amplitude-at-event x gain-after-event is itself bounded by
+    G * max|x|.  Events: activation I/O quantizes the input plus every
+    run-boundary store (<= L + 1 of them, runs <= stages), coefficient
+    quantization perturbs each of the L stages' two row entries.  Total:
+
+        tol = 2 * (3 L + 2) * G * max|x| / 254
+
+    with a final factor 2 of headroom for f32 accumulation ordering.
+    Observed error sits ~20x below this bound while the bound stays well
+    below the output scale, so a wrong-scale / wrong-tile bug trips it.
+    """
+    L = coeffs.shape[0]
+    g = _operator_gain(coeffs, d_in, d_out)
+    return 2.0 * (3 * L + 2) * g * float(jnp.max(jnp.abs(x))) / 254.0
+
+
+QUANT_RECT = [
+    # (d_in, d_out): FFN-up-like, FFN-down-like, odd dims, square
+    (48, 128),
+    (128, 48),
+    (47, 33),
+    (64, 64),
+]
+
+
+@pytest.mark.parametrize("d_in,d_out", QUANT_RECT)
+@pytest.mark.parametrize("mode", ["acts", "coeffs", "both"])
+def test_linear_apply_quantized_parity(d_in, d_out, mode):
+    """Quantized fused linear vs the f32 XLA reference (use_kernel=False)
+    across rectangular widths, within the tolerance DERIVED from the
+    per-stage scale bound (``_quant_tol``) — not a magic constant.  Grads
+    through the quantized path stay finite (straight-through for coeffs,
+    dequantized cotangents for acts)."""
+    qa, qc = mode in ("acts", "both"), mode in ("coeffs", "both")
+    mk = lambda uk: LinearConfig(d_in=d_in, d_out=d_out, impl="spm_general",
+                                 backward="custom", use_kernel=uk,
+                                 quant_acts=uk and qa,
+                                 quant_coeffs=uk and qc)
+    lc_ref, lc_q = mk(False), mk(True)
+    p = init_linear(KEY, lc_ref)
+    p["bias"] = 0.1 * jax.random.normal(jax.random.PRNGKey(15), (lc_ref.n,))
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, d_in))
+    y_ref = linear_apply(p, x, lc_ref)
+    y_q = linear_apply(p, x, lc_q)
+    assert y_q.shape == y_ref.shape and y_q.dtype == y_ref.dtype
+    cf = stage_coeffs(p, lc_ref.spm_config())
+    tol = _quant_tol(x, cf, p.get("d_in"), p.get("d_out"))
+    err = float(jnp.max(jnp.abs(y_q - y_ref)))
+    assert err <= tol, (err, tol)
+    g = jax.grad(lambda p, x: jnp.sum(linear_apply(p, x, lc_q) ** 2),
+                 argnums=(0, 1))(p, x)
+    assert all(bool(jnp.all(jnp.isfinite(leaf)))
+               for leaf in jax.tree.leaves(g))
+
+
+def test_quant_coeffs_grads_match_predequantized_table():
+    """quant_coeffs=True is numerically the f32 operator over the
+    DEQUANTIZED table: outputs and grads (straight-through in coeffs)
+    match running the plain fused kernel on ``dequantize_coeffs(
+    quantize_coeffs(cf))`` to within a few ulp of f32 reassociation —
+    single-stage is bitwise, multi-stage XLA:CPU FMA ordering costs ~1
+    ulp per stage."""
+    B, n, strides = 8, 128, (1, 2, 4, 8)
+    x = jax.random.normal(KEY, (B, n))
+    cf = 0.4 * jax.random.normal(jax.random.PRNGKey(3),
+                                 (len(strides), n // 2, 4))
+    dq = Q.dequantize_coeffs(*Q.quantize_coeffs(cf), jnp.float32)
+    y_q = spm_stack_fused(x, cf, strides, quant_coeffs=True)
+    y_d = spm_stack_fused(x, dq, strides)
+    np.testing.assert_allclose(np.asarray(y_q), np.asarray(y_d),
+                               rtol=2e-6, atol=1e-6)
+    g_q = jax.grad(lambda x, cf: jnp.sum(
+        spm_stack_fused(x, cf, strides, quant_coeffs=True) ** 2),
+        argnums=(0, 1))(x, cf)
+    g_d = jax.grad(lambda x, cf: jnp.sum(
+        spm_stack_fused(x, cf, strides) ** 2),
+        argnums=(0, 1))(x, dq)
+    for a, b in zip(g_q, g_d):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_quant_acts_ineligible_plan_falls_back_bitwise():
+    """A non-uniform-tile training plan cannot chain int8 across runs:
+    quant_acts must silently fall back to f32 I/O — BITWISE equal to the
+    unquantized kernel path, not merely close."""
+    B, n, strides = 64, 4096, (1, 2048)
+    cap = tile_cap_for_rows(n, strides, B, dtype_bytes=4)
+    runs = plan_runs(n, strides, cap)
+    assert not quant_acts_eligible(runs), runs   # the premise of the test
+    x = jax.random.normal(KEY, (B, n))
+    cf = 0.4 * jax.random.normal(jax.random.PRNGKey(5),
+                                 (len(strides), n // 2, 4))
+    y_f32 = spm_stack_fused(x, cf, strides)
+    y_q = spm_stack_fused(x, cf, strides, quant_acts=True)
+    np.testing.assert_array_equal(np.asarray(y_f32), np.asarray(y_q))
+
+
+def test_spm_stack_fused_q8_int8_end_to_end():
+    """The inference entry: int8 rows in, int8 rows out, per-block scales
+    riding alongside — dequantizing the result lands within the derived
+    quantization bound of the f32 fused operator (which itself matches
+    the XLA reference elsewhere in this file)."""
+    B, n, strides = 16, 128, (1, 2, 4, 8, 16, 32, 64)
+    br = 8
+    x = jax.random.normal(KEY, (B, n))
+    cf = 0.4 * jax.random.normal(jax.random.PRNGKey(7),
+                                 (len(strides), n // 2, 4))
+    di = 1.0 + 0.1 * jax.random.normal(jax.random.PRNGKey(8), (n,))
+    do = 1.0 + 0.1 * jax.random.normal(jax.random.PRNGKey(9), (n,))
+    bias = 0.1 * jax.random.normal(jax.random.PRNGKey(10), (n,))
+    cap = tile_cap_for_rows(n, strides, B, dtype_bytes=1)
+    (run,) = plan_runs(n, strides, cap)      # single uniform-tile run
+    qx, xs = Q.quantize_blocks(x, br, run[1])
+    qy, ys = spm_stack_fused_q8(qx, xs, cf, strides,
+                                d_in=di, d_out=do, bias=bias)
+    assert qy.dtype == jnp.int8 and qy.shape == (B, n)
+    assert ys.shape == (B // br, n // run[1])
+    y = Q.dequantize_blocks(qy, ys, br, run[1], jnp.float32)
+    y_ref = spm_stack_fused(x, cf, strides, d_in=di, d_out=do, bias=bias)
+    tol = _quant_tol(x, cf, di, do)
+    err = float(jnp.max(jnp.abs(y - y_ref)))
+    assert err <= tol, (err, tol)
+
+
+def test_spm_stack_fused_q8_rejects_ineligible_plan():
+    """Unlike the training entry (graceful f32 fallback), the int8-native
+    entry has no f32 path to fall back to: a non-uniform-tile plan is a
+    loud ValueError, not silent garbage."""
+    B, n, strides = 64, 4096, (1, 2048)
+    qx = jnp.zeros((B, n), jnp.int8)
+    xs = jnp.ones((B // 8, 1), jnp.float32)
+    cf = jnp.zeros((len(strides), n // 2, 4), jnp.float32)
+    with pytest.raises(ValueError, match="uniform-tile"):
+        spm_stack_fused_q8(qx, xs, cf, strides)

@@ -1,0 +1,249 @@
+"""Quantization test pyramid, layer 1: the numeric primitives.
+
+Property-based tests (hypothesis; the conftest shim sweeps deterministic
+examples when it is absent) for the two quantizer families —
+``optim/compression.py`` (per-tensor, gradient all-reduce) and
+``kernels/quant.py`` (per-block activation / per-stage coefficient, kernel
+I/O) — plus the error-feedback accumulation identity and the
+``decompress_tree`` structural-2-tuple regression.  Layer 2 (kernel parity
+matrices) lives in tests/test_kernels.py, layer 3 (sharded parity +
+compressed-pod convergence) in tests/test_distributed.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.quant import (block_scale_bound, dequantize_blocks,
+                                 dequantize_coeffs, quantize_blocks,
+                                 quantize_coeffs)
+from repro.optim.compression import (_amax_scale, compress, compress_tree,
+                                     decompress, decompress_tree, ef_step,
+                                     init_residual, psum_compressed_ef)
+
+# ---------------------------------------------------------------------------
+# compress / decompress properties (per-tensor, optim/compression.py)
+# ---------------------------------------------------------------------------
+
+
+def _tensor(seed: int, shape, scale: float) -> jax.Array:
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+
+@settings(max_examples=24, deadline=None)
+@given(seed=st.integers(0, 3),
+       scale=st.floats(1e-3, 1e3),
+       rows=st.sampled_from([1, 7, 64]))
+def test_compress_roundtrip_error_bound(seed, scale, rows):
+    """Elementwise |dequant(quant(x)) - x| <= scale/2: round-to-nearest
+    against the amax grid never errs past half a quantization step."""
+    x = _tensor(seed, (rows, 33), scale)
+    q, s = compress(x)
+    err = jnp.abs(decompress(q, s) - x)
+    assert float(jnp.max(err)) <= float(s) / 2 + 1e-12
+
+
+def test_compress_all_zero_is_exact():
+    """An all-zero tensor survives the round trip exactly (scale is the
+    epsilon floor, payload all zeros)."""
+    x = jnp.zeros((5, 8), jnp.float32)
+    q, s = compress(x)
+    assert int(jnp.max(jnp.abs(q))) == 0
+    np.testing.assert_array_equal(np.asarray(decompress(q, s)), 0.0)
+    assert float(s) > 0.0 and np.isfinite(float(s))
+
+
+@settings(max_examples=12, deadline=None)
+@given(mag=st.sampled_from([1e-38, 1e-30, 1e30, 3e38]))
+def test_compress_scale_finite_positive_extremes(mag):
+    """Denormal-small and near-f32-max inputs produce a finite, strictly
+    positive scale and an in-range payload."""
+    x = jnp.asarray([[mag, -mag / 2, 0.0, mag / 3]], jnp.float32)
+    q, s = compress(x)
+    assert np.isfinite(float(s)) and float(s) > 0.0
+    assert int(jnp.max(q)) <= 127 and int(jnp.min(q)) >= -127
+
+
+@settings(max_examples=24, deadline=None)
+@given(seed=st.integers(0, 5), scale=st.floats(1e-6, 1e6))
+def test_compress_int8_range_never_exceeded(seed, scale):
+    x = _tensor(seed, (17,), scale)
+    q, _ = compress(x)
+    assert q.dtype == jnp.int8
+    assert int(jnp.max(q)) <= 127 and int(jnp.min(q)) >= -127
+
+
+# ---------------------------------------------------------------------------
+# error-feedback accumulation identity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype,steps,tol_ulps", [
+    (jnp.float32, 6, 4),        # identity is algebraically exact; f32
+                                # rounding of the running sums remains
+    (jnp.bfloat16, 6, None),    # output cast to bf16 adds per-step
+                                # rounding ~2^-8 of the step magnitude
+])
+def test_ef_step_accumulation_identity(dtype, steps, tol_ulps):
+    """Over K steps, sum(decompressed) + final residual == sum(true grads):
+    EF recycles exactly what quantization dropped, so nothing is ever lost
+    — the Karimireddy-style unbiasedness the train step relies on."""
+    rng = np.random.default_rng(7)
+    gs = [jnp.asarray(rng.standard_normal((4, 9)) * 0.3, dtype)
+          for _ in range(steps)]
+    g_tree = {"a": gs[0], "b": (gs[0] * 0,)}   # nested, incl. a 1-tuple
+    r = init_residual(g_tree)
+    acc = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), g_tree)
+    true = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), g_tree)
+    for k in range(steps):
+        g_tree = {"a": gs[k], "b": (gs[(k * 2 + 1) % steps],)}
+        dq, r = ef_step(g_tree, r)
+        acc = jax.tree.map(lambda a, d: a + d.astype(jnp.float32), acc, dq)
+        true = jax.tree.map(lambda t, g: t + g.astype(jnp.float32),
+                            true, g_tree)
+    total = jax.tree.map(lambda a, rr: a + rr, acc, r)
+    err = jax.tree.reduce(
+        jnp.maximum,
+        jax.tree.map(lambda t, o: jnp.max(jnp.abs(t - o)), true, total))
+    if tol_ulps is not None:
+        tol = tol_ulps * np.finfo(np.float32).eps * steps
+    else:
+        # bf16 output rounding: each returned step is rounded to 8
+        # mantissa bits before accumulation
+        mx = max(float(jnp.max(jnp.abs(g.astype(jnp.float32))))
+                 for g in gs)
+        tol = steps * mx * 2.0 ** -8
+    assert float(err) <= tol, (float(err), tol)
+
+
+def test_ef_step_bf16_residual_stays_f32():
+    g = {"w": jnp.ones((3, 3), jnp.bfloat16)}
+    r = init_residual(g)
+    dq, r2 = ef_step(g, r)
+    assert dq["w"].dtype == jnp.bfloat16
+    assert r2["w"].dtype == jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# decompress_tree structural-2-tuple regression
+# ---------------------------------------------------------------------------
+
+
+def test_decompress_tree_nested_two_tuple_state():
+    """Regression: a structural 2-tuple (e.g. a (mu, nu) moment pair) must
+    DESCEND, not be mistaken for a (int8, scale) compressed leaf."""
+    state = {"moments": (jnp.ones((4, 4)) * 0.5, jnp.ones((4, 4)) * 2.0),
+             "w": jnp.linspace(-1.0, 1.0, 16).reshape(4, 4)}
+    ctree = compress_tree(state)
+    # the compressed moments pair is a 2-tuple OF 2-tuples — the leaf
+    # predicate must look at content to stop at the right depth
+    out = decompress_tree(ctree, state)
+    assert isinstance(out["moments"], tuple) and len(out["moments"]) == 2
+    for got, want in ((out["moments"][0], state["moments"][0]),
+                      (out["moments"][1], state["moments"][1]),
+                      (out["w"], state["w"])):
+        q_err = float(_amax_scale(want)) / 2 + 1e-12
+        assert float(jnp.max(jnp.abs(got - want))) <= q_err
+        assert got.dtype == want.dtype
+
+
+# ---------------------------------------------------------------------------
+# psum_compressed_ef semantics (vmap stands in for the named axis)
+# ---------------------------------------------------------------------------
+
+
+def test_psum_compressed_ef_mean_and_residual():
+    """Under a 4-member axis: the output equals the mean of the shared-grid
+    dequantized member grads, and each member's residual is exactly its own
+    pre-quantization value minus its dequantized payload."""
+    rng = np.random.default_rng(3)
+    g = jnp.asarray(rng.standard_normal((4, 6, 5)), jnp.float32)
+    r0 = jnp.asarray(rng.standard_normal((4, 6, 5)) * 1e-3, jnp.float32)
+
+    out, r1 = jax.vmap(
+        lambda gi, ri: psum_compressed_ef({"w": gi}, {"w": ri}, "i"),
+        axis_name="i")(g, r0)
+
+    gf = g + r0
+    s = jnp.max(jnp.abs(gf)) / 127.0 + 1e-12         # axis-max shared scale
+    q = jnp.clip(jnp.round(gf / s), -127, 127)
+    want_mean = jnp.mean(q * s, axis=0)
+    for m in range(4):
+        np.testing.assert_allclose(np.asarray(out["w"][m]),
+                                   np.asarray(want_mean), rtol=0, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(r1["w"][m]),
+                                   np.asarray(gf[m] - q[m] * s),
+                                   rtol=0, atol=1e-7)
+
+
+def test_psum_compressed_ef_sum_mode():
+    g = jnp.asarray(np.random.default_rng(0).standard_normal((2, 8)),
+                    jnp.float32)
+    r0 = jnp.zeros_like(g)
+    out_sum, _ = jax.vmap(
+        lambda gi, ri: psum_compressed_ef({"w": gi}, {"w": ri}, "i",
+                                          mean=False),
+        axis_name="i")(g, r0)
+    out_mean, _ = jax.vmap(
+        lambda gi, ri: psum_compressed_ef({"w": gi}, {"w": ri}, "i"),
+        axis_name="i")(g, r0)
+    np.testing.assert_allclose(np.asarray(out_sum["w"]),
+                               np.asarray(out_mean["w"]) * 2,
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# kernels/quant.py: per-block activation + per-stage coefficient quantizers
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=24, deadline=None)
+@given(rows=st.sampled_from([8, 24]),
+       width=st.sampled_from([16, 48, 50]),
+       block_rows=st.sampled_from([8]),
+       n_tile=st.sampled_from([16, 32]))
+def test_quantize_blocks_roundtrip_bound(rows, width, block_rows, n_tile):
+    """Per-(row-block, feature-tile) round trip stays within half the
+    block's own quantization step — ``block_scale_bound`` is the exact
+    worst case the kernel parity tests derive their tolerance from."""
+    rng = np.random.default_rng(rows * 1000 + width)
+    x = jnp.asarray(rng.standard_normal((rows, width)), jnp.float32)
+    q, scales = quantize_blocks(x, block_rows, n_tile)
+    assert q.dtype == jnp.int8
+    assert int(jnp.max(jnp.abs(q))) <= 127
+    assert scales.shape == (rows // block_rows, -(-width // n_tile))
+    assert bool(jnp.all(scales > 0)) and bool(jnp.all(jnp.isfinite(scales)))
+    back = dequantize_blocks(q, scales, block_rows, n_tile, jnp.float32)
+    bound = block_scale_bound(x, block_rows, n_tile) / 2 + 1e-9
+    assert float(jnp.max(jnp.abs(back - x))) <= bound
+
+
+def test_quantize_blocks_zero_exact():
+    x = jnp.zeros((16, 32), jnp.float32)
+    q, s = quantize_blocks(x, 8, 16)
+    back = dequantize_blocks(q, s, 8, 16, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(back), 0.0)
+
+
+@settings(max_examples=12, deadline=None)
+@given(L=st.sampled_from([1, 5]), half=st.sampled_from([8, 24]))
+def test_quantize_coeffs_roundtrip_bound(L, half):
+    rng = np.random.default_rng(L * 31 + half)
+    cf = jnp.asarray(rng.standard_normal((L, half, 4)), jnp.float32)
+    q, scales = quantize_coeffs(cf)
+    assert q.dtype == jnp.int8 and scales.shape == (L, 1)
+    back = dequantize_coeffs(q, scales, jnp.float32)
+    per_stage_bound = scales.reshape(L, 1, 1) / 2 + 1e-9
+    assert bool(jnp.all(jnp.abs(back - cf) <= per_stage_bound))
+
+
+def test_quantize_coeffs_per_stage_scales_independent():
+    """A huge stage must not destroy a tiny stage's precision: scales are
+    per-stage, so stage 1's round-trip error is bounded by ITS amax."""
+    cf = jnp.stack([jnp.full((4, 4), 1000.0), jnp.full((4, 4), 1e-3)])
+    q, s = quantize_coeffs(cf)
+    back = dequantize_coeffs(q, s, jnp.float32)
+    assert float(jnp.max(jnp.abs(back[1] - cf[1]))) <= 1e-3 / 127 + 1e-9
