@@ -15,6 +15,11 @@ committed smoke baseline): records are matched on their identity keys
 including the batch sizes, and a top-level batch mismatch is an error
 rather than a vacuous pass.
 
+One ABSOLUTE floor rides along: every ``block_results`` row (the residual
+-block megakernel) must model at least a 1.5x HBM-bytes reduction over
+its per-linear fused plan — the block-fusion acceptance bar, enforced on
+the fresh file regardless of what the baseline says.
+
 The gate can ALSO consume the compile-contract report
 (``python -m repro.analysis check`` -> ``ANALYSIS_contracts.json``): any
 contract failure fails the gate, and a cell present in the committed
@@ -69,6 +74,11 @@ def gated_metrics(bench: dict) -> Dict[Tuple, float]:
         out[base + ("fused_bytes",)] = t["fused_bytes"]
         if "quant_bytes" in t:
             out[base + ("quant_bytes",)] = t["quant_bytes"]
+    for r in bench.get("block_results", []):
+        t = r["traffic"]
+        base = ("block", r["shape"], r["d_model"], r["d_ff"], lb)
+        out[base + ("block_bytes",)] = t["block_bytes"]
+        out[base + ("perlinear_bytes",)] = t["perlinear_bytes"]
     for r in bench.get("sharded_results", []):
         base = ("sharded", r["n"], r["L"], r["n_shards"],
                 r.get("in_width"), r.get("out_width"), batch)
@@ -181,6 +191,18 @@ def main(argv=None) -> int:
               f"{fresh.get('linear_batch')}; regenerate at the same scale")
         return 2
     regressions, dropped, new = compare(baseline, fresh, args.tol)
+    # absolute acceptance floor (not just no-worse-than-baseline): the
+    # block megakernel must model >= 1.5x fewer HBM bytes than the
+    # per-linear fused plan on every residual-block hot shape
+    block_floor = []
+    for r in fresh.get("block_results", []):
+        t = r["traffic"]
+        if t["block_bytes"] * 1.5 > t["perlinear_bytes"]:
+            block_floor.append((r["shape"], t["perlinear_bytes"],
+                                t["block_bytes"]))
+    for shape, pb, bb in block_floor:
+        print(f"FAIL: block fusion floor: {shape}: block {bb:,} bytes vs "
+              f"perlinear {pb:,} ({pb / bb:.2f}x < 1.5x)")
     for key in new:
         print(f"note: new bench row (no baseline, not gated): {key}")
     for key in dropped:
@@ -228,9 +250,11 @@ def main(argv=None) -> int:
         for d in c_dropped:
             print(f"FAIL: contract coverage: {d}")
     if regressions or (dropped and not args.allow_dropped) \
-            or c_failures or c_dropped or s_regressions or s_dropped:
+            or c_failures or c_dropped or s_regressions or s_dropped \
+            or block_floor:
         print(f"bench regression gate FAILED "
               f"({len(regressions)} regressions, {len(dropped)} dropped, "
+              f"{len(block_floor)} block-fusion floor misses, "
               f"{len(s_regressions)} serve regressions, "
               f"{len(s_dropped)} serve rows dropped, "
               f"{len(c_failures)} contract failures, "

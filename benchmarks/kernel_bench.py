@@ -171,6 +171,79 @@ def rect_traffic(d_in: int, d_out: int, n: int, batch: int, L: int) -> dict:
             "quant_reduction": fused / quant}
 
 
+# Residual-block hot shapes (d_model, d_ff = 4 * d_model): the
+# norm -> up -> activation -> down -> residual chain the block megakernel
+# lowers as ONE Pallas region.  Smoke halves them like RECT_SHAPES.
+BLOCK_SHAPES = [
+    ("ffn_d256", 256, 1024),
+    ("ffn_d512", 512, 2048),
+]
+
+
+def block_traffic(d_model: int, d_ff: int, rows: int,
+                  L: int | None = None) -> dict:
+    """Modeled HBM bytes of one residual FFN block (norm -> SPM up ->
+    activation -> SPM down -> residual add), f32 activations.
+
+    perlinear — the per-linear fused plan (the pre-block baseline): the
+    RMSNorm round-trips the (rows, d_model) activation, each SPM operator
+    runs the rectangular-native fused kernel (``rect_traffic``'s fused
+    accounting, coefficients included), the activation is one elementwise
+    round-trip of the (rows, d_ff) hidden, and the residual add reads two
+    (rows, d_model) operands and writes one.
+
+    block — the megakernel: reads x once, writes y once, plus the (rows,)
+    f32 row statistics, both stacks' O(nL) coefficient tables and the
+    diag/bias/gamma vectors.  The normalized input, the mid activation,
+    and the second stack's input never touch HBM — they live in VMEM for
+    the whole chain (``kernels/ops.spm_block_fused``)."""
+    n = LinearConfig(d_in=d_model, d_out=d_ff, impl="spm_general").n
+    L = L if L is not None else default_n_stages(n)
+    up = rect_traffic(d_model, d_ff, n, rows, L)
+    down = rect_traffic(d_ff, d_model, n, rows, L)
+    act_d = rows * d_model * 4
+    act_ff = rows * d_ff * 4
+    perlinear = (2 * act_d                   # norm round-trip
+                 + up["fused_bytes"]
+                 + 2 * act_ff                # activation round-trip
+                 + down["fused_bytes"]
+                 + 3 * act_d)                # residual: read y + x, write
+    coeff = L * (n // 2) * 16 + 3 * n * 4    # one stack's tables + vecs
+    block = 2 * act_d + rows * 4 + 2 * coeff + n * 4   # + rstd + gamma
+    return {"n": n, "L": L,
+            "perlinear_bytes": perlinear, "block_bytes": block,
+            "reduction": perlinear / block}
+
+
+def bench_block(d_model: int, d_ff: int, batch: int = 16):
+    """End-to-end residual FFN block (norm -> up -> gelu -> down ->
+    residual): the block megakernel vs the per-linear fused composition,
+    fwd and fwd+bwd.  Off-TPU the fused path runs in interpret mode —
+    validation wall-clock only (the HBM claim rides ``block_traffic``)."""
+    from repro.layers.ffn import FFNConfig, ffn_block_apply, init_ffn
+    from repro.layers.norms import init_rms_norm
+
+    mk = lambda fuse: FFNConfig(
+        d_model=d_model, d_ff=d_ff, linear_impl="spm_general",
+        activation="gelu", spm_backward="custom", spm_use_kernel=True,
+        spm_block_fuse=fuse)
+    cfg0, cfg1 = mk(False), mk(True)
+    p = init_ffn(KEY, cfg0)
+    np_ = init_rms_norm(d_model)
+    x = jax.random.normal(KEY, (batch, d_model))
+
+    res = {}
+    for tag, cfg in (("perlinear", cfg0), ("block", cfg1)):
+        f = jax.jit(lambda x, cfg=cfg: ffn_block_apply(p, np_, x, cfg))
+        g = jax.jit(jax.grad(
+            lambda p, x, cfg=cfg: jnp.sum(
+                ffn_block_apply(p, np_, x, cfg) ** 2)))
+        with assert_compiles(1, fwd=f, bwd=g):
+            res[f"block_fwd_{tag}_us"] = time_step(f, x) * 1e6
+            res[f"block_fwdbwd_{tag}_us"] = time_step(g, p, x) * 1e6
+    return res
+
+
 def traffic_model(n: int, batch: int, L: int,
                   kernel_rows: int | None = None) -> dict:
     """HBM bytes per SQUARE full-operator call (f32 activations).
@@ -425,6 +498,38 @@ def main(argv=None) -> None:
                  f"unfused={rr['linear_fwd_unfused_us']:.0f}us "
                  f"(interpret={backend != 'tpu'})")
 
+    # residual-block fusion: the whole norm -> up -> act -> down ->
+    # residual chain as ONE Pallas region vs the per-linear fused plan
+    print("# residual-block fusion (shape,d_model,d_ff,n,L,"
+          "fwd_perlinear_us,fwd_block_us,fwdbwd_perlinear_us,"
+          "fwdbwd_block_us,perlinear_bytes,block_bytes,hbm_reduction)")
+    block_shapes = BLOCK_SHAPES
+    if args.smoke:
+        block_shapes = [(t, d // 2, f // 2) for t, d, f in BLOCK_SHAPES]
+    block_records = []
+    for tag, d_model, d_ff in block_shapes:
+        br = {"shape": tag, "d_model": d_model, "d_ff": d_ff}
+        br["traffic"] = block_traffic(d_model, d_ff, args.linear_batch)
+        if not args.skip_fused_timing:
+            br.update(bench_block(d_model, d_ff, args.linear_batch))
+        block_records.append(br)
+        t = br["traffic"]
+        if not args.skip_fused_timing:
+            print(f"{tag},{d_model},{d_ff},{t['n']},{t['L']},"
+                  f"{br['block_fwd_perlinear_us']:.0f},"
+                  f"{br['block_fwd_block_us']:.0f},"
+                  f"{br['block_fwdbwd_perlinear_us']:.0f},"
+                  f"{br['block_fwdbwd_block_us']:.0f},"
+                  f"{t['perlinear_bytes']},{t['block_bytes']},"
+                  f"{t['reduction']:.2f}x")
+            emit(f"kernel/block_{tag}/fused_fwd", br["block_fwd_block_us"],
+                 f"perlinear={br['block_fwd_perlinear_us']:.0f}us "
+                 f"(interpret={backend != 'tpu'})")
+        else:
+            print(f"{tag},{d_model},{d_ff},{t['n']},{t['L']},,,,,"
+                  f"{t['perlinear_bytes']},{t['block_bytes']},"
+                  f"{t['reduction']:.2f}x")
+
     # sharded (two_level over 8 virtual devices) vs replicated: modeled
     # per-stage collective_permute bytes next to the HBM traffic model,
     # plus an interpret-safe wall-clock from a forced-device-count child
@@ -438,10 +543,11 @@ def main(argv=None) -> None:
     # one rectangular sharded row (FFN-up-like proportions): the windowed
     # kernel boundaries drop the PR 3 pad/slice terms entirely
     shapes.append((widths[0], widths[0] - widths[0] // 4, widths[0], None))
-    # and one fold-both row: L padded to end the two_level cycle on a
-    # LOCAL step, so d_out/bias fold too (the default-L schedules end on
-    # a cross stage and keep the explicit elementwise ops on that side —
-    # the model charges them; this row shows the full fold win)
+    # and one local-ending row: L padded to end the two_level cycle on a
+    # LOCAL step, so d_out/bias fold into the last kernel run (the
+    # default-L schedules end on a cross stage and fold them into the mix
+    # epilogue's role vectors instead — both shapes are output-fold-free
+    # in the model; this row keeps the kernel-run fold covered)
     n0 = widths[0]
     for L_fold in range(default_n_stages(n0), default_n_stages(n0) + 16):
         st = plan_steps(n0, tuple(two_level_schedule(
@@ -484,6 +590,7 @@ def main(argv=None) -> None:
                      "off-TPU; the traffic model carries the HBM claim"),
             "results": records,
             "rect_results": rect_records,
+            "block_results": block_records,
             "sharded_results": sharded_records,
         }
         with open(args.out, "w") as f:

@@ -61,6 +61,22 @@ def render(bench: dict) -> str:
             f"{t['fused_bytes']:,} / {t['unfused_bytes']:,} | "
             f"{t['reduction']:.1f}x | {_quant_cell(t)} |")
     out.append("")
+    out.append("Residual-block fusion (norm → SPM up → activation → SPM "
+               "down → residual-add as ONE Pallas region, "
+               "docs/kernels.md § Block fusion) on the FFN hot shapes: "
+               "modeled HBM bytes for the whole block vs the per-linear "
+               "fused plan (each linear its own kernel; norm, activation "
+               "and residual round-tripping in XLA):\n")
+    out.append("| shape | d_model → d_ff | n | L per stack | HBM bytes "
+               "(block / per-linear) | reduction |")
+    out.append("|---|---|---|---|---|---|")
+    for r in bench.get("block_results", []):
+        t = r["traffic"]
+        out.append(
+            f"| {r['shape']} | {r['d_model']} → {r['d_ff']} | {t['n']} | "
+            f"{t['L']} | {t['block_bytes']:,} / {t['perlinear_bytes']:,} | "
+            f"{t['reduction']:.1f}x |")
+    out.append("")
     out.append("Feature-sharded two_level executor, per chip "
                f"({bench['sharded_results'][0]['n_shards']}-way): "
                "kernel-native boundaries vs the pre-fold executor, and "
@@ -85,10 +101,13 @@ def render(bench: dict) -> str:
             f"{m['hbm_bytes_per_chip']:,} / {m3['hbm_bytes_per_chip']:,} | "
             f"{r['boundary_reduction']:.2f}x |")
     out.append("")
-    out.append("(A two_level schedule whose cycle ends on a cross stage "
-               "keeps explicit d_out/bias ops on that side and the model "
-               "charges them; the last row pads L to end on a local step, "
-               "folding BOTH boundaries into kernel runs.  Exposed comm "
+    out.append("(Both boundary sides fold on EVERY schedule shape: d_in "
+               "into the first local kernel run, and d_out/bias into the "
+               "last kernel run on a local ending or onto the final "
+               "cross-mix epilogue's store on a cross ending — an "
+               "O(n_local) vector cost the model no longer charges as "
+               "slab traffic.  The last row pads L to end on a local "
+               "step, covering the kernel-run fold.  Exposed comm "
                "is the modeled non-hidden share of the permute bytes: the "
                "overlap schedule pipelines row blocks so a block's "
                "exchange hides under other blocks' compute and under "

@@ -189,6 +189,36 @@ class Artifacts:
         return jax.make_jaxpr(fn)(qx, xs, cf, p["d_in"], p["d_out"],
                                   p["bias"])
 
+    @functools.cached_property
+    def jaxpr_block(self):
+        """Trace of the fused residual block built around this cell's
+        operator (``kernels/ops.spm_block_fused``): RMS-norm prologue ->
+        this operator as the up stack -> gelu epilogue -> the mirror
+        operator (d_out x d_in) as the down stack -> residual-add on the
+        store.  Only built for cells the block-fusion eligibility rule
+        admits for BOTH stacks (single full-width run each, see
+        ``core/eligibility.block_fusion_eligible``)."""
+        from repro.core.linear import spm_block_operands
+        from repro.kernels.ops import spm_block_fused
+        cell = self.cell
+        lc2 = _mirror_config(cell)
+        up = spm_block_operands(self.params, self.lc)
+        down = spm_block_operands(init_linear(jax.random.PRNGKey(1), lc2),
+                                  lc2)
+        s1, s2 = up["strides"], down["strides"]
+        mid, out = cell.d_out, cell.d_in
+        fn = lambda x, g, c1, di1, do1, b1, c2, di2, do2, b2: \
+            spm_block_fused(
+                x, coeffs1=c1, d_in1=di1, d_out1=do1, bias1=b1,
+                strides1=s1, gamma=g, coeffs2=c2, d_in2=di2, d_out2=do2,
+                bias2=b2, strides2=s2, activation="gelu", residual=True,
+                mid_width=mid, out_width=out)
+        gamma = jnp.ones((cell.d_in,), jnp.float32)
+        return jax.make_jaxpr(fn)(
+            self.x, gamma, up["coeffs"], up["d_in"], up["d_out"],
+            up["bias"], down["coeffs"], down["d_in"], down["d_out"],
+            down["bias"])
+
     # -- HLO artifacts (compiled; compile_hlo cells only) ----------------
 
     @functools.cached_property
@@ -251,6 +281,33 @@ def run_cell(cell: Cell, art: Optional[Artifacts] = None) -> Dict[str, str]:
 
 def _kernel_variant(cell: Cell) -> bool:
     return cell.variant != "unfused"
+
+
+def _mirror_config(cell: Cell) -> LinearConfig:
+    """The down-stack operator of the block built around ``cell``: the
+    same schedule family transposed to (d_out -> d_in)."""
+    return LinearConfig(
+        d_in=cell.d_out, d_out=cell.d_in, impl="spm_general",
+        n_stages=cell.n_stages, schedule=cell.schedule,
+        backward=cell.backward)
+
+
+def _block_cell(cell: Cell) -> bool:
+    """Cells whose operator can anchor a fused residual block: the fused
+    unsharded variant, with both the operator and its mirror structurally
+    block-fusible at the same kernel width."""
+    if cell.variant != "fused":
+        return False
+    lc1 = cell.linear_config()
+    lc2 = _mirror_config(cell)
+    if lc1.n != lc2.n:
+        return False
+    s1, s2 = lc1.spm_config(), lc2.spm_config()
+    if not (eligibility.kernel_eligible(s1, s1.pairing)
+            and eligibility.kernel_eligible(s2, s2.pairing)):
+        return False
+    return eligibility.block_fusion_eligible(
+        lc1.n, s1.pairing.strides(), s2.pairing.strides(), "gelu")
 
 
 def _hlo_sharded(cell: Cell) -> bool:
@@ -485,6 +542,59 @@ def _c_quant_no_f32(cell: Cell, art: Artifacts) -> List[str]:
     out0 = art.jaxpr_q8.jaxpr.outvars[0]
     if str(out0.aval.dtype) != "int8":
         bad.append(f"q8 payload dtype {out0.aval.dtype} != int8")
+    return bad
+
+
+def _result_var_ids(jaxpr) -> set:
+    """ids of every var that is a result of some (sub-)jaxpr on the walk
+    — the block contract excludes these from the intermediate check (the
+    final (rows, out_width) extraction IS the block's return value, not
+    an inter-op round trip)."""
+    if hasattr(jaxpr, "jaxpr"):
+        jaxpr = jaxpr.jaxpr
+    out = set(map(id, jaxpr.outvars))
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            continue
+        for sub in jaxpr_walk._sub_jaxprs(eqn):
+            out |= _result_var_ids(sub)
+    return out
+
+
+@contract("block-no-interop-roundtrip", applies=_block_cell)
+def _c_block_roundtrip(cell: Cell, art: Artifacts) -> List[str]:
+    """The fused residual block (norm -> SPM -> activation -> mirror SPM
+    -> residual-add) lowers as ONE Pallas region with no inter-op HBM
+    round trips: exactly one pallas_call equation; no batch-wide
+    ``(rows, k>1)`` float array produced by any other equation (the
+    ``(rows, 1)`` row-statistic the backward remats from is the only
+    per-row array allowed to leave the kernel, and the block's own
+    return value doesn't count); and — at the zoo's row count, a
+    multiple of every block tile — no XLA ``pad`` anywhere on the path."""
+    bad = []
+    jx = art.jaxpr_block
+    rows = cell.rows
+    n_pallas = sum(1 for we in jaxpr_walk.iter_eqns(jx)
+                   if we.name == "pallas_call")
+    if n_pallas != 1:
+        bad.append(f"block trace lowered {n_pallas} pallas_call "
+                   "equations != 1")
+    results = _result_var_ids(jx)
+    for we in jaxpr_walk.iter_eqns(jx):
+        if we.name == "pad":
+            bad.append("XLA pad on the block path: "
+                       f"{tuple(we.eqn.outvars[0].aval.shape)}")
+        if we.name == "pallas_call":
+            continue
+        for v in we.eqn.outvars:
+            aval = getattr(v, "aval", None)
+            shape = tuple(getattr(aval, "shape", ()))
+            if (len(shape) == 2 and shape[0] == rows and shape[1] > 1
+                    and aval is not None
+                    and jnp.issubdtype(aval.dtype, jnp.floating)
+                    and id(v) not in results):
+                bad.append(f"batch-wide float intermediate {shape} from "
+                           f"'{we.name}' outside the fused region")
     return bad
 
 

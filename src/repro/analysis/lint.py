@@ -29,6 +29,13 @@ SPM005   no wall-clock or unseeded-global-RNG nondeterminism in chaos /
          ``np.random.*`` module-state calls are not.)
 SPM006   every ``__all__`` name is actually bound at module top level, and
          every public module has a docstring.
+SPM007   no norm/activation composed directly around an SPM entry point
+         (``rms_norm(...)`` / ``silu|gelu|relu`` wrapping ``spm_apply`` /
+         ``linear_apply`` / ``ffn_apply``, or fed into one) outside
+         ``layers/`` and ``kernels/`` — those compositions belong to the
+         fused block entries (``ffn_block_apply``, the fused-qkv path),
+         where ``resolve_block_fuse`` can lower them as ONE Pallas
+         region; inlining them elsewhere silently forfeits the fusion.
 =======  ==================================================================
 
 Suppress a finding with a line pragma: ``# spmlint: allow[SPM002]``
@@ -54,6 +61,7 @@ RULES = {
     "SPM004": "Python branch on a traced jnp/lax expression",
     "SPM005": "wall-clock / global-RNG nondeterminism in chaos or bench code",
     "SPM006": "__all__ name unbound at module top level, or missing docstring",
+    "SPM007": "norm/activation composed around an SPM entry outside layers/",
 }
 
 # names whose definitions must live in core/eligibility.py only
@@ -61,7 +69,13 @@ ELIGIBILITY_NAMES = frozenset({
     "kernel_eligible", "use_fused_kernel", "sharded_eligible",
     "resolve_shard_kernel", "resolve_overlap", "resolve_rdma",
     "plan_steps", "overlap_segments",
+    "block_fusion_eligible", "resolve_block_fuse",
 })
+
+# SPM007: SPM operator entry points and the norm/activation wrappers the
+# block megakernel fuses around them
+_SPM_ENTRY_CALLS = frozenset({"spm_apply", "linear_apply", "ffn_apply"})
+_SPM_WRAPPER_CALLS = frozenset({"rms_norm", "silu", "gelu", "relu"})
 
 # SPM002 scope: the modules whose perf story is "no XLA pad/slice"
 _KERNEL_PATH_PARTS = ("core/spm.py", "parallel/spm_shard.py")
@@ -131,6 +145,14 @@ def _in_kernel_path(rel: str) -> bool:
 
 def _in_kernels_dir(rel: str) -> bool:
     return "/kernels/" in rel or rel.startswith("kernels/")
+
+
+def _in_block_entry_scope(rel: str) -> bool:
+    """Paths allowed to compose norm/activation around SPM entries: the
+    layer modules that own the fused block entries, and kernels/ itself
+    (the fused implementations + their fallback mirrors)."""
+    return ("/layers/" in rel or rel.startswith("layers/")
+            or _in_kernels_dir(rel))
 
 
 def _in_chaos_or_bench(rel: str) -> bool:
@@ -208,7 +230,37 @@ class _Checker(ast.NodeVisitor):
                                f"{dotted}(...) uses global RNG state in "
                                "chaos/bench logic (use "
                                "np.random.default_rng(seed))")
+            if (_in_src_repro(self.rel)
+                    and not _in_block_entry_scope(self.rel)):
+                self._check_block_composition(node, dotted)
         self.generic_visit(node)
+
+    # -- SPM007: norm/activation around SPM entries outside layers/ ------
+
+    def _check_block_composition(self, node: ast.Call, dotted: str) -> None:
+        leaf = dotted.rsplit(".", 1)[-1]
+        if leaf not in _SPM_ENTRY_CALLS | _SPM_WRAPPER_CALLS:
+            return
+        inner = set()
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            for sub in ast.walk(arg):
+                if isinstance(sub, ast.Call):
+                    d = _dotted(sub.func)
+                    if d:
+                        inner.add(d.rsplit(".", 1)[-1])
+        if leaf in _SPM_WRAPPER_CALLS and inner & _SPM_ENTRY_CALLS:
+            self._emit("SPM007", node,
+                       f"{leaf}() wraps {sorted(inner & _SPM_ENTRY_CALLS)} "
+                       "outside layers/ — this composition belongs to a "
+                       "fused block entry (ffn_block_apply / fused-qkv) so "
+                       "block fusion can engage")
+        elif leaf in _SPM_ENTRY_CALLS and inner & _SPM_WRAPPER_CALLS:
+            self._emit("SPM007", node,
+                       f"{leaf}() consumes "
+                       f"{sorted(inner & _SPM_WRAPPER_CALLS)} output "
+                       "outside layers/ — this composition belongs to a "
+                       "fused block entry (ffn_block_apply / fused-qkv) so "
+                       "block fusion can engage")
 
     # -- SPM003: pallas outside kernels/ ---------------------------------
 
@@ -379,7 +431,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis lint",
         description="spmlint: repo-specific AST rules "
-                    "(SPM001..SPM006; see repro/analysis/lint.py)")
+                    "(SPM001..SPM007; see repro/analysis/lint.py)")
     ap.add_argument("paths", nargs="*",
                     help="files or directories (default: src/repro, "
                          "benchmarks)")

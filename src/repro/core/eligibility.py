@@ -37,6 +37,12 @@ and the two tri-state engagement knobs resolved here:
   a real TPU backend: ``pltpu.make_async_remote_copy`` has no interpret
   realization, so off-TPU the overlap schedule always transports blocks
   via ``jax.lax.ppermute``.
+* ``spm_block_fuse`` — the residual-block megakernel (norm prologue ->
+  SPM -> activation -> SPM -> residual store in one Pallas chain,
+  ``kernels/ops.spm_block_fused``).  Same tri-state: ``None`` = auto
+  (on-TPU only), ``True`` = force (interpret off-TPU — how the parity
+  tests run it), ``False`` = keep the per-linear fused composition.
+  Resolved by ``resolve_block_fuse`` over ``block_fusion_eligible``.
 
 All predicates take the ``SPMConfig`` duck-typed (attributes ``n``,
 ``odd``, ``n_shards``, ``backward``, ``pairing``, ``use_kernel``,
@@ -55,7 +61,9 @@ from repro.core.pairings import Schedule
 __all__ = ["plan_steps", "kernel_eligible", "use_fused_kernel",
            "sharded_eligible", "resolve_shard_kernel", "resolve_overlap",
            "resolve_rdma", "overlap_segments", "OVERLAP_ROW_BLOCKS",
-           "TINY_ROW_THRESHOLD", "tiny_row_call", "quant_acts_eligible"]
+           "TINY_ROW_THRESHOLD", "tiny_row_call", "quant_acts_eligible",
+           "BLOCK_MAX_TILE", "BLOCK_ACTIVATIONS", "block_fusion_eligible",
+           "resolve_block_fuse"]
 
 # Row blocks per shard slab under the overlap schedule: block i's partner
 # exchange hides under block i+1's compute, so >= 2 blocks are needed for
@@ -264,6 +272,61 @@ def resolve_overlap(cfg, steps, backend_tpu: bool) -> bool:
     if getattr(cfg, "overlap", None):
         return True
     return backend_tpu
+
+
+# ---------------------------------------------------------------------------
+# residual-block fusion (megakernel) eligibility
+# ---------------------------------------------------------------------------
+
+# Mirrors kernels/ops.MAX_TILE without importing the kernels package (this
+# module must stay import-light: core/pairings only).  Block fusion keeps a
+# whole residual block's working set in VMEM, so the feature axis must fit
+# ONE tile — the block kernel never re-tiles between the two stacks.
+BLOCK_MAX_TILE = 2048
+
+# Activations the block kernel's epilogue expresses closed-form (forward
+# AND derivative, for the remat backward).  ``None`` is the norm-prologue
+# -only entry (fused qkv).  swiglu is structurally excluded: its gate is a
+# SECOND independent SPM operator over the same input, not a chainable
+# elementwise epilogue.
+BLOCK_ACTIVATIONS = (None, "relu", "silu", "gelu")
+
+
+def block_fusion_eligible(n: int, strides1, strides2=None,
+                          activation=None) -> bool:
+    """Whether a residual block around SPM can lower as ONE fused Pallas
+    kernel (norm prologue -> stack 1 -> activation -> stack 2 -> residual
+    store).
+
+    The structural condition is that both stacks run as a SINGLE full-width
+    kernel run: every stride ``s`` of either stack must satisfy
+    ``n % (2s) == 0`` (so the greedy run planner's lcm tile equals ``n``)
+    and ``n`` must fit one VMEM tile (``BLOCK_MAX_TILE``).  With those, the
+    mid-activation never leaves VMEM between the stacks.  The activation
+    must be one the epilogue expresses closed-form both ways
+    (``BLOCK_ACTIVATIONS``)."""
+    if n <= 0 or n % 2 or n > BLOCK_MAX_TILE:
+        return False
+    for s in tuple(strides1) + tuple(strides2 if strides2 else ()):
+        if n % (2 * int(s)):
+            return False
+    return activation in BLOCK_ACTIVATIONS
+
+
+def resolve_block_fuse(block_fuse, eligible: bool,
+                       backend_tpu: bool) -> bool:
+    """Resolve the tri-state ``spm_block_fuse`` knob (layer configs).
+
+    ``False`` — never fuse the block.  ``True`` — force (off-TPU the block
+    kernel runs in interpret mode, the parity-test configuration).
+    ``None`` — auto: fuse only on a TPU backend, where the saved HBM
+    round-trips are real.  Ineligible blocks fall back gracefully even
+    when forced on, mirroring ``use_fused_kernel``."""
+    if not eligible:
+        return False
+    if block_fuse is None:
+        return bool(backend_tpu)
+    return bool(block_fuse)
 
 
 def resolve_rdma(use_kernel: bool, backend_tpu: bool,

@@ -47,7 +47,8 @@ from repro.core import spm as spm_mod
 from repro.core.pairings import default_n_stages
 from repro.core.spm import SPMConfig
 
-__all__ = ["LinearConfig", "init_linear", "linear_apply", "linear_param_count"]
+__all__ = ["LinearConfig", "init_linear", "linear_apply",
+           "linear_param_count", "spm_block_operands"]
 
 SPM_IMPLS = ("spm_general", "spm_rotation")
 LINEAR_IMPLS = ("dense",) + SPM_IMPLS
@@ -139,6 +140,45 @@ def linear_apply(params: dict, x: jax.Array, cfg: LinearConfig) -> jax.Array:
         raise ValueError(f"expected (..., {cfg.d_in}), got {x.shape}")
     return spm_mod.spm_apply(params, x, cfg.spm_config(),
                              in_width=cfg.d_in, out_width=cfg.d_out)
+
+
+def spm_block_operands(params: dict, cfg: LinearConfig) -> Optional[dict]:
+    """Kernel operands for routing this linear through the residual-block
+    megakernel (``kernels/ops.spm_block_fused``), or ``None`` when this
+    linear cannot be one stack of a fused block.
+
+    A linear qualifies when it is SPM-parameterized, unsharded, unquantized
+    (the block kernel moves f32 tiles), kernel-expressible (all-structured
+    stride stages, even n, no ``custom_inverse``), and structurally
+    block-fusible (``core/eligibility.block_fusion_eligible`` — single
+    full-width run, so its output never leaves VMEM).  The returned dict
+    carries everything the block entry needs for ONE stack: ``coeffs``
+    (L, n//2, 4), ``d_in``/``d_out``/``bias`` vectors (bias ``None`` when
+    unused), ``strides``, and ``n``.  Layer entries
+    (``layers/ffn.ffn_block_apply``, the fused-qkv path) combine two
+    bundles (or one, for norm-prologue-only fusion) and resolve the
+    tri-state ``spm_block_fuse`` knob before calling the kernel."""
+    if not cfg.is_spm or cfg.n_shards > 1:
+        return None
+    if cfg.quant_acts or cfg.quant_coeffs:
+        return None
+    scfg = cfg.spm_config()
+    sched = scfg.pairing
+    from repro.core.eligibility import (block_fusion_eligible,
+                                        kernel_eligible)
+    if not kernel_eligible(scfg, sched):
+        return None
+    strides = sched.strides()
+    if not block_fusion_eligible(scfg.n, strides):
+        return None
+    return {
+        "coeffs": spm_mod.stage_coeffs(params, scfg),
+        "d_in": params["d_in"],
+        "d_out": params["d_out"],
+        "bias": params["bias"] if scfg.use_bias else None,
+        "strides": strides,
+        "n": scfg.n,
+    }
 
 
 def linear_param_count(cfg: LinearConfig) -> int:

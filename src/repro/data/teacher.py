@@ -45,6 +45,7 @@ def teacher_batch(teacher: dict, cfg: TeacherConfig, key: jax.Array,
                   batch: int) -> dict:
     """Draw x ~ N(0, I), label = argmax(W2 ReLU(SPM(x)))."""
     x = jax.random.normal(key, (batch, cfg.width))
+    # spmlint: allow[SPM007] paper's teacher spec, not a fusible block
     h = jax.nn.relu(spm_apply(teacher["spm"], x, cfg.spm_cfg()))
     y = jnp.argmax(h @ teacher["w2"], axis=-1).astype(jnp.int32)
     return {"x": x, "y": y}

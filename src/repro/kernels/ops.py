@@ -61,12 +61,13 @@ from typing import Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.eligibility import quant_acts_eligible, tiny_row_call
+from repro.core.eligibility import (block_fusion_eligible,
+                                    quant_acts_eligible, tiny_row_call)
 from repro.kernels import spm_stack as K
 from repro.kernels import quant as Q
 
-__all__ = ["spm_stack_fused", "spm_stack_fused_q8", "plan_runs",
-           "plan_runs_for_rows", "tile_cap_for_rows",
+__all__ = ["spm_stack_fused", "spm_stack_fused_q8", "spm_block_fused",
+           "plan_runs", "plan_runs_for_rows", "tile_cap_for_rows",
            "pick_block_rows_for_plan", "default_interpret"]
 
 MAX_TILE = 2048  # lane-dim tile cap: 16 VREG lanes x 128; VMEM-comfortable
@@ -170,7 +171,8 @@ def _pad_rows(x2: jax.Array, block_rows: int) -> Tuple[jax.Array, int]:
 
 
 def pick_block_rows_for_plan(runs, n_rows: int, dtype_bytes: int, *,
-                             overlap_bufs: bool = False) -> int:
+                             overlap_bufs: bool = False,
+                             block_bufs: bool = False) -> int:
     """One uniform row-block for every run of a plan (uniform row padding),
     budgeted per run: run r only keeps its OWN L_r + 2 tiles of its OWN
     width resident, so the binding constraint is the min over runs — not
@@ -179,10 +181,16 @@ def pick_block_rows_for_plan(runs, n_rows: int, dtype_bytes: int, *,
     reserves the overlap (RDMA) kernels' per-block send/recv double
     buffers in the same budget (``spm_stack.overlap_vmem_bytes``) — set by
     the sharded executor whenever the in-kernel transport may engage, so
-    a row block never outgrows VMEM once the comm slots move in."""
+    a row block never outgrows VMEM once the comm slots move in.
+    ``block_bufs`` budgets for the residual-BLOCK kernels instead
+    (``spm_stack.block_vmem_bytes``): the norm-stat, activation, and
+    residual buffers the block kernel keeps live on top of the per-run
+    working set.  For the block entry, pass ONE pseudo-run holding both
+    stacks' strides at the full width n — the block kernel never re-tiles
+    between the stacks, so its binding run is the whole chain."""
     br = min(K.pick_block_rows(n_tile, len(run_strides),
                                dtype_bytes=dtype_bytes,
-                               overlap=overlap_bufs)
+                               overlap=overlap_bufs, block=block_bufs)
              for run_strides, n_tile in runs)
     return min(br, max(8, 1 << (n_rows - 1).bit_length()))
 
@@ -496,3 +504,196 @@ def spm_stack_fused_q8(qx: jax.Array, x_scale: jax.Array,
             **_boundary_kw(r, len(runs), flags, d_in, d_out, bias))
         off += nL
     return z, zscale
+
+
+# ---------------------------------------------------------------------------
+# residual-block (megakernel) custom_vjp core + public entry
+# ---------------------------------------------------------------------------
+#
+# Diff args: (x2, gamma, cf1, din1, dout1, bias1, cf2, din2, dout2,
+# bias2) — size-1 placeholders when absent, exactly the _fused_core
+# convention.  The static tuple rides one nondiff slot: (strides1,
+# strides2, activation, flags, block_rows, residual, widths, eps,
+# interpret) with flags = (has_norm, has_bias1, has_stack2, has_bias2).
+# The ONLY forward residuals beyond the operands are the (B, 1) row
+# statistics — the backward kernel remats the normalized input, both
+# stacks' stage inputs, and the mid activation in VMEM from (x, rstd).
+
+def _block_args(gamma, cf1, din1, dout1, bias1, cf2, din2, dout2, bias2,
+                statics):
+    """Expand the placeholder convention into the kernel-call kwargs
+    shared by the block forward and backward wrappers."""
+    (strides1, strides2, activation, flags, block_rows, residual,
+     in_width, mid_width, out_width, eps, interpret) = statics
+    has_norm, has_bias1, has_stack2, has_bias2 = flags
+    return dict(
+        bias1=bias1 if has_bias1 else None,
+        gamma=gamma if has_norm else None,
+        coeffs2=cf2 if has_stack2 else None,
+        d_in2=din2 if has_stack2 else None,
+        d_out2=dout2 if has_stack2 else None,
+        bias2=bias2 if (has_stack2 and has_bias2) else None,
+        strides1=strides1,
+        strides2=strides2 if has_stack2 else None,
+        activation=activation, block_rows=block_rows, residual=residual,
+        in_width=in_width, mid_width=mid_width, out_width=out_width,
+        interpret=interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(10,))
+def _block_core(x2, gamma, cf1, din1, dout1, bias1,
+                cf2, din2, dout2, bias2, statics):
+    """x2: (B, in_width) row-major; gamma/diag/bias: (n,) (placeholders
+    when the matching flag is off); cf1/cf2: (L, n//2, 4).  Returns
+    (B, out_width)."""
+    return _block_fwd(x2, gamma, cf1, din1, dout1, bias1,
+                      cf2, din2, dout2, bias2, statics)[0]
+
+
+def _block_fwd(x2, gamma, cf1, din1, dout1, bias1,
+               cf2, din2, dout2, bias2, statics):
+    kw = _block_args(gamma, cf1, din1, dout1, bias1,
+                     cf2, din2, dout2, bias2, statics)
+    out = K.spm_block_kernel_call(x2, cf1, din1, dout1, eps=statics[9],
+                                  **kw)
+    rstd = out[1] if kw["gamma"] is not None else None
+    return out[0], (x2, rstd, gamma, cf1, din1, dout1, bias1,
+                    cf2, din2, dout2, bias2)
+
+
+def _block_bwd(statics, res, gy):
+    (x2, rstd, gamma, cf1, din1, dout1, bias1,
+     cf2, din2, dout2, bias2) = res
+    flags = statics[3]
+    has_norm, has_bias1, has_stack2, has_bias2 = flags
+    kw = _block_args(gamma, cf1, din1, dout1, bias1,
+                     cf2, din2, dout2, bias2, statics)
+    kw.pop("interpret")
+    out = list(K.spm_block_bwd_kernel_call(
+        x2, gy, cf1, din1, dout1, rstd=rstd, interpret=statics[10], **kw))
+    gx = out.pop(0)
+    g_gamma = out.pop(0) if has_norm else None
+    g_cf1, g_din1, g_dout1 = out.pop(0), out.pop(0), out.pop(0)
+    g_bias1 = out.pop(0) if has_bias1 else None
+    g_cf2 = g_din2 = g_dout2 = g_bias2 = None
+    if has_stack2:
+        g_cf2, g_din2, g_dout2 = out.pop(0), out.pop(0), out.pop(0)
+        if has_bias2:
+            g_bias2 = out.pop(0)
+
+    def _g(g, like):
+        if g is None:
+            return jnp.zeros_like(like)
+        return g.astype(like.dtype)
+
+    return (gx, _g(g_gamma, gamma), g_cf1.astype(cf1.dtype),
+            _g(g_din1, din1), _g(g_dout1, dout1), _g(g_bias1, bias1),
+            _g(g_cf2, cf2), _g(g_din2, din2), _g(g_dout2, dout2),
+            _g(g_bias2, bias2))
+
+
+_block_core.defvjp(_block_fwd, _block_bwd)
+
+
+def spm_block_fused(x: jax.Array, *,
+                    coeffs1: jax.Array, d_in1: jax.Array,
+                    d_out1: jax.Array, strides1: Sequence[int],
+                    bias1: Optional[jax.Array] = None,
+                    gamma: Optional[jax.Array] = None,
+                    coeffs2: Optional[jax.Array] = None,
+                    d_in2: Optional[jax.Array] = None,
+                    d_out2: Optional[jax.Array] = None,
+                    bias2: Optional[jax.Array] = None,
+                    strides2: Optional[Sequence[int]] = None,
+                    activation: Optional[str] = None,
+                    residual: bool = False,
+                    in_width: Optional[int] = None,
+                    mid_width: Optional[int] = None,
+                    out_width: Optional[int] = None,
+                    eps: float = 1e-6,
+                    block_rows: Optional[int] = None,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Residual-block megakernel over the last axis of ``x``: ONE fused
+    Pallas region lowering
+
+        y = [x +] stack2(act(stack1(rms_norm(x))))
+
+    where each stack is a complete SPM operator (d_in -> stages ->
+    d_out [+ bias]) and every piece is optional — ``gamma=None`` skips
+    the norm prologue, ``strides2=None`` ends after stack 1 (the
+    norm-prologue-only fused-qkv entry), ``activation=None`` is the
+    identity, ``residual`` adds x on the store (requires out_width ==
+    in_width).
+
+    ``gamma`` is the (in_width,) RMS scale (``eps`` matching
+    ``layers/norms.rms_norm``); widths default to ``in_width =
+    x.shape[-1]``, ``out_width = n``, and ``mid_width`` (the true width
+    between the stacks — d_ff for an FFN) to ``n`` with a second stack,
+    ``out_width`` without.  Both stacks must satisfy
+    ``core/eligibility.block_fusion_eligible`` — single full-width run
+    each, so the mid activation never leaves VMEM (raises otherwise; the
+    layer entries resolve eligibility BEFORE calling this).
+    Differentiable in every array operand: the closed-form custom_vjp
+    saves only x and the (rows, 1) row statistics and remats the rest in
+    VMEM (remat-from-row-stats).
+    """
+    strides1 = tuple(int(s) for s in strides1)
+    strides2 = (tuple(int(s) for s in strides2)
+                if strides2 is not None else None)
+    n = 2 * coeffs1.shape[1]
+    if not block_fusion_eligible(n, strides1, strides2, activation):
+        raise ValueError(
+            f"block fusion ineligible: n={n}, strides1={strides1}, "
+            f"strides2={strides2}, activation={activation!r}")
+    if in_width is None:
+        in_width = x.shape[-1]
+    if out_width is None:
+        out_width = n
+    if mid_width is None:
+        mid_width = n if strides2 is not None else out_width
+    for w, name in ((in_width, "in_width"), (mid_width, "mid_width"),
+                    (out_width, "out_width")):
+        if not 0 < w <= n:
+            raise ValueError(f"{name}={w} outside (0, {n}]")
+    if x.shape[-1] != in_width:
+        raise ValueError(f"expected (..., {in_width}), got {x.shape}")
+    if residual and out_width != in_width:
+        raise ValueError(f"residual needs out_width == in_width, got "
+                         f"{out_width} != {in_width}")
+    if (strides2 is not None) != (coeffs2 is not None):
+        raise ValueError("strides2 and coeffs2 must be given together")
+    if interpret is None:
+        interpret = default_interpret()
+    if gamma is not None and gamma.shape[-1] != n:
+        # zero-fill the RMS scale to operator width in O(n) (dead lanes
+        # multiply exact zeros either way)
+        gamma = jnp.zeros((n,), gamma.dtype).at[:in_width].set(gamma)
+    x2, lead = _flatten_rows(x)
+    if block_rows is None:
+        # ONE pseudo-run with both stacks' strides at full width: the
+        # block kernel never re-tiles, and block_bufs reserves the
+        # norm/activation/residual buffers it keeps live
+        runs = ((strides1 + (strides2 or ()), n),)
+        block_rows = pick_block_rows_for_plan(
+            runs, x2.shape[0], dtype_bytes=x.dtype.itemsize,
+            block_bufs=True)
+    x2p, rows = _pad_rows(x2, block_rows)
+    flags = (gamma is not None, bias1 is not None, strides2 is not None,
+             bias2 is not None)
+    statics = (strides1, strides2, activation, flags, block_rows,
+               residual, in_width, mid_width, out_width, eps,
+               bool(interpret))
+    ph = jnp.zeros((1,), x.dtype)
+    y2 = _block_core(
+        x2p,
+        gamma if gamma is not None else ph,
+        coeffs1, d_in1, d_out1,
+        bias1 if bias1 is not None else ph,
+        coeffs2 if coeffs2 is not None else ph,
+        d_in2 if d_in2 is not None else ph,
+        d_out2 if d_out2 is not None else ph,
+        bias2 if bias2 is not None else ph,
+        statics)
+    if y2.shape[0] != rows:       # row padding only; never a feature slice
+        y2 = y2[:rows]
+    return y2.reshape(lead + (out_width,))

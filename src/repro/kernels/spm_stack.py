@@ -110,7 +110,9 @@ from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["spm_stack_kernel_call", "spm_stack_bwd_kernel_call",
            "spm_overlap_kernel_call", "spm_overlap_bwd_kernel_call",
-           "pick_block_rows", "vmem_bytes", "overlap_vmem_bytes"]
+           "spm_block_kernel_call", "spm_block_bwd_kernel_call",
+           "pick_block_rows", "vmem_bytes", "overlap_vmem_bytes",
+           "block_vmem_bytes"]
 
 _F32 = jnp.float32
 
@@ -259,13 +261,36 @@ def overlap_vmem_bytes(block_rows: int, n_tile: int, n_stages: int,
         + comm + x_walk
 
 
+def block_vmem_bytes(block_rows: int, n_tile: int, n_stages: int,
+                     dtype_bytes: int = 4) -> int:
+    """VMEM working set of the residual-BLOCK kernels (norm prologue ->
+    stack 1 -> activation -> stack 2 -> residual store) — the binding one
+    is again the backward, which remats the whole chain in VMEM:
+    ``vmem_bytes`` with ``n_stages = L1 + L2`` covers the two stacks'
+    stage-input tiles, and on top of that the block keeps THREE more f32
+    activation tiles live across the chain — the normalized x-hat tile
+    (the norm backward re-reads it after both stage walks), and the
+    mid-boundary pre-activation u / post-activation h pair (u feeds the
+    activation derivative, h feeds the second stack's d_in grad) — plus
+    the (block_rows, 1) row statistics.  Per-linear budgeting
+    (``ops.pick_block_rows_for_plan`` without ``block_bufs``) misses
+    these and would overcommit VMEM by ~3 tiles."""
+    extra = 3 * block_rows * n_tile * 4 + block_rows * 4
+    return vmem_bytes(block_rows, n_tile, n_stages, dtype_bytes) + extra
+
+
 def pick_block_rows(n_tile: int, n_stages: int, dtype_bytes: int = 4,
                     budget: int = 12 * 2**20, *,
-                    overlap: bool = False) -> int:
+                    overlap: bool = False, block: bool = False) -> int:
     """Largest power-of-two row-block (>=8) within the VMEM budget;
     ``overlap`` budgets against ``overlap_vmem_bytes`` (the RDMA kernels'
-    send/recv double buffers ride the same VMEM)."""
-    cost = overlap_vmem_bytes if overlap else vmem_bytes
+    send/recv double buffers ride the same VMEM), ``block`` against
+    ``block_vmem_bytes`` (the residual-block kernels' norm/activation/
+    residual live buffers)."""
+    if block:
+        cost = block_vmem_bytes
+    else:
+        cost = overlap_vmem_bytes if overlap else vmem_bytes
     bb = 8
     while bb < 1024 and cost(bb * 2, n_tile, n_stages,
                              dtype_bytes) <= budget:
@@ -768,6 +793,438 @@ def spm_stack_bwd_kernel_call(x: jax.Array, coeffs: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# residual-block (megakernel) pair: norm -> SPM -> act -> SPM -> residual
+# ---------------------------------------------------------------------------
+#
+# The per-linear fused operator still pays an HBM round-trip at every
+# block boundary: norm reads+writes the activation before the up
+# projection, the activation reads+writes between the two linears, and
+# the residual add reads+writes after the down projection — >=2 extra
+# full-activation round-trips per transformer block that the O(nL)
+# operator itself no longer needs.  These kernels lower the WHOLE
+# residual block as one fused region:
+#
+#   prologue   RMS row statistics + gamma scale, in VMEM
+#   stack 1    d_in -> stages -> d_out (+bias): the up projection
+#   epilogue   activation (relu / silu / gelu, closed form both ways)
+#   stack 2    the down projection, fed without leaving VMEM
+#   store      + residual, masked to out_width
+#
+# Eligibility (core/eligibility.block_fusion_eligible) guarantees both
+# stacks plan to a SINGLE full-width run (every stride s of either stack
+# has n % (2s) == 0 and n <= BLOCK_MAX_TILE), so the grid is row blocks
+# only — the feature axis never re-tiles between the stacks and the mid
+# activation never touches HBM.
+#
+# Backward remats from row statistics: the forward saves ONLY the raw x
+# and the (rows, 1) rstd — the normalized input, both stacks' stage
+# inputs, and the mid activation are all recomputed in VMEM (the Pallas
+# remat idiom of the per-linear backward, extended over the whole
+# chain), then one reverse walk produces every grad closed-form:
+# bias2/dout2 from gy, the eq. 12-14 walk of stack 2, the activation
+# derivative at the rematted u, bias1/dout1/stack 1, gamma from the
+# rematted x-hat, and the RMS-norm input grad
+#
+#   g_x = rstd * (g_xhat - xhat * mean(g_xhat * xhat))  (+ gy residual)
+#
+# Dead-lane discipline: x is masked to in_width before the row
+# statistics (the mean divides by in_width, not n), the mid boundary is
+# masked to mid_width before the activation (act(0) = 0 for every
+# BLOCK_ACTIVATIONS member, so dead lanes enter stack 2 as exact zeros —
+# bitwise what the unfused rectangular composition feeds it), and gy is
+# masked to out_width; every parameter grad is therefore exactly zero on
+# padded lanes.  The grid is 1-D over row blocks, so the parameter-grad
+# outputs (indexed to block 0) are revisited on consecutive iterations —
+# the same documented TPU reduction pattern as the per-linear backward,
+# with no zero-init aliasing needed (block 0 is always visited at i=0).
+
+def _act_fwd(u, activation: Optional[str]):
+    """Closed-form block-epilogue activation on a resident f32 tile.
+    ``None`` is the identity (norm-prologue-only entries, e.g. fused
+    qkv).  Every member maps 0 -> 0, which the dead-lane masking relies
+    on."""
+    if activation == "relu":
+        return jnp.maximum(u, 0.0)
+    if activation == "silu":
+        return u * jax.nn.sigmoid(u)
+    if activation == "gelu":
+        return jax.nn.gelu(u)       # tanh approximation (jax default)
+    return u
+
+
+def _act_grad(u, activation: Optional[str]):
+    """Closed-form derivative of ``_act_fwd`` at the rematted
+    pre-activation ``u`` — the backward never stores the activation."""
+    if activation == "relu":
+        return jnp.where(u > 0, 1.0, 0.0)
+    if activation == "silu":
+        sg = jax.nn.sigmoid(u)
+        return sg * (1.0 + u * (1.0 - sg))
+    if activation == "gelu":
+        # d/du of the tanh-approx gelu 0.5*u*(1 + tanh(k*(u + 0.044715 u^3)))
+        k = 0.7978845608028654      # sqrt(2/pi)
+        t = jnp.tanh(k * (u + 0.044715 * u * u * u))
+        return (0.5 * (1.0 + t)
+                + 0.5 * u * (1.0 - t * t) * k
+                * (1.0 + 3 * 0.044715 * u * u))
+    return jnp.ones_like(u)
+
+
+def _block_kernel(*refs,
+                  strides1: Tuple[int, ...],
+                  strides2: Optional[Tuple[int, ...]],
+                  activation: Optional[str],
+                  has_norm: bool, has_bias1: bool, has_bias2: bool,
+                  residual: bool, in_width: int, mid_width: int,
+                  out_width: int, eps: float):
+    refs = list(refs)
+    x_ref = refs.pop(0)
+    g_ref = refs.pop(0) if has_norm else None
+    cf1_ref = refs.pop(0)
+    din1_ref, dout1_ref = refs.pop(0), refs.pop(0)
+    bias1_ref = refs.pop(0) if has_bias1 else None
+    if strides2 is not None:
+        cf2_ref = refs.pop(0)
+        din2_ref, dout2_ref = refs.pop(0), refs.pop(0)
+        bias2_ref = refs.pop(0) if has_bias2 else None
+    if has_norm:
+        o_ref, rstd_ref = refs
+    else:
+        (o_ref,) = refs
+
+    x_raw = _mask_cols(x_ref[...].astype(_F32), 0, in_width)
+    if has_norm:
+        # row statistics over the TRUE input width (padded lanes are 0)
+        var = jnp.sum(x_raw * x_raw, axis=1, keepdims=True) / in_width
+        rstd = jax.lax.rsqrt(var + eps)
+        rstd_ref[...] = rstd
+        z = x_raw * rstd * g_ref[...].astype(_F32)
+    else:
+        z = x_raw
+    z = z * din1_ref[...].astype(_F32)
+    z = _apply_stages_fwd(z, cf1_ref, strides1)
+    z = z * dout1_ref[...].astype(_F32)
+    if has_bias1:
+        z = z + bias1_ref[...].astype(_F32)
+    if strides2 is not None:
+        # mask BEFORE the activation: bias1 contaminates lanes past
+        # mid_width, and act(0) = 0 keeps them exact zeros into stack 2
+        z = _act_fwd(_mask_cols(z, 0, mid_width), activation)
+        z = z * din2_ref[...].astype(_F32)
+        z = _apply_stages_fwd(z, cf2_ref, strides2)
+        z = z * dout2_ref[...].astype(_F32)
+        if has_bias2:
+            z = z + bias2_ref[...].astype(_F32)
+    elif activation is not None:
+        z = _act_fwd(_mask_cols(z, 0, mid_width), activation)
+    if residual:
+        z = z + x_raw
+    o_ref[...] = z.astype(o_ref.dtype)
+
+
+def _block_bwd_kernel(*refs,
+                      strides1: Tuple[int, ...],
+                      strides2: Optional[Tuple[int, ...]],
+                      activation: Optional[str],
+                      has_norm: bool, has_bias1: bool, has_bias2: bool,
+                      residual: bool, in_width: int, mid_width: int,
+                      out_width: int):
+    refs = list(refs)
+    x_ref = refs.pop(0)
+    g_ref = refs.pop(0) if has_norm else None
+    rstd_ref = refs.pop(0) if has_norm else None
+    cf1_ref = refs.pop(0)
+    din1_ref, dout1_ref = refs.pop(0), refs.pop(0)
+    bias1_ref = refs.pop(0) if has_bias1 else None
+    if strides2 is not None:
+        cf2_ref = refs.pop(0)
+        din2_ref, dout2_ref = refs.pop(0), refs.pop(0)
+        bias2_ref = refs.pop(0) if has_bias2 else None
+    gy_ref = refs.pop(0)
+    gx_ref = refs.pop(0)
+    ggam_ref = refs.pop(0) if has_norm else None
+    gcf1_ref, gdin1_ref, gdout1_ref = (refs.pop(0), refs.pop(0),
+                                       refs.pop(0))
+    gbias1_ref = refs.pop(0) if has_bias1 else None
+    if strides2 is not None:
+        gcf2_ref, gdin2_ref, gdout2_ref = (refs.pop(0), refs.pop(0),
+                                           refs.pop(0))
+        gbias2_ref = refs.pop(0) if has_bias2 else None
+
+    i = pl.program_id(0)
+    bb, nt = x_ref.shape
+
+    def _acc(ref, tile):
+        @pl.when(i == 0)
+        def _init():
+            ref[...] = tile
+
+        @pl.when(i > 0)
+        def _add():
+            ref[...] += tile
+
+    # ---- remat the whole block forward in VMEM (norm from saved rstd) ----
+    x_raw = _mask_cols(x_ref[...].astype(_F32), 0, in_width)
+    if has_norm:
+        rstd = rstd_ref[...]                       # (bb, 1) f32, saved
+        xh = x_raw * rstd
+        z0 = xh * g_ref[...].astype(_F32)
+    else:
+        z0 = x_raw
+    t1 = z0 * din1_ref[...].astype(_F32)
+    z1_last, zs1 = _apply_stages_fwd(t1, cf1_ref, strides1, collect=True)
+    u = z1_last * dout1_ref[...].astype(_F32)
+    if has_bias1:
+        u = u + bias1_ref[...].astype(_F32)
+    if strides2 is not None:
+        u = _mask_cols(u, 0, mid_width)
+        h = _act_fwd(u, activation)
+        t2 = h * din2_ref[...].astype(_F32)
+        z2_last, zs2 = _apply_stages_fwd(t2, cf2_ref, strides2,
+                                         collect=True)
+    elif activation is not None:
+        u = _mask_cols(u, 0, mid_width)
+
+    gy = _mask_cols(gy_ref[...].astype(_F32), 0, out_width)
+
+    # ---- reverse walk ----
+    if strides2 is not None:
+        if has_bias2:
+            _acc(gbias2_ref, jnp.sum(gy, axis=0).reshape(1, nt))
+        _acc(gdout2_ref, jnp.sum(gy * z2_last, axis=0).reshape(1, nt))
+        delta = gy * dout2_ref[...].astype(_F32)
+        delta, gcf2 = _stage_walk_bwd(zs2, delta, cf2_ref, strides2)
+        _acc(gcf2_ref, gcf2)
+        _acc(gdin2_ref, jnp.sum(delta * h, axis=0).reshape(1, nt))
+        dh = _mask_cols(delta * din2_ref[...].astype(_F32), 0, mid_width)
+        du = dh * _act_grad(u, activation)
+    elif activation is not None:
+        du = gy * _act_grad(u, activation)
+    else:
+        du = gy
+    if has_bias1:
+        _acc(gbias1_ref, jnp.sum(du, axis=0).reshape(1, nt))
+    _acc(gdout1_ref, jnp.sum(du * z1_last, axis=0).reshape(1, nt))
+    delta = du * dout1_ref[...].astype(_F32)
+    delta, gcf1 = _stage_walk_bwd(zs1, delta, cf1_ref, strides1)
+    _acc(gcf1_ref, gcf1)
+    _acc(gdin1_ref, jnp.sum(delta * z0, axis=0).reshape(1, nt))
+    dz0 = _mask_cols(delta * din1_ref[...].astype(_F32), 0, in_width)
+    if has_norm:
+        _acc(ggam_ref, jnp.sum(dz0 * xh, axis=0).reshape(1, nt))
+        gxh = dz0 * g_ref[...].astype(_F32)
+        mean = jnp.sum(gxh * xh, axis=1, keepdims=True) / in_width
+        gx = rstd * (gxh - xh * mean)
+    else:
+        gx = dz0
+    if residual:
+        gx = gx + gy
+    gx_ref[...] = gx.astype(gx_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "strides1", "strides2", "activation", "block_rows", "residual",
+    "in_width", "mid_width", "out_width", "eps", "interpret"))
+def spm_block_kernel_call(x: jax.Array, coeffs1: jax.Array,
+                          d_in1: jax.Array, d_out1: jax.Array,
+                          bias1: Optional[jax.Array] = None,
+                          gamma: Optional[jax.Array] = None,
+                          coeffs2: Optional[jax.Array] = None,
+                          d_in2: Optional[jax.Array] = None,
+                          d_out2: Optional[jax.Array] = None,
+                          bias2: Optional[jax.Array] = None, *,
+                          strides1: Tuple[int, ...],
+                          strides2: Optional[Tuple[int, ...]] = None,
+                          activation: Optional[str] = None,
+                          block_rows: int,
+                          residual: bool = False,
+                          in_width: int, mid_width: int, out_width: int,
+                          eps: float = 1e-6,
+                          interpret: bool = False):
+    """Residual-block megakernel forward: ONE pallas_call lowering
+    norm -> stack 1 -> activation -> stack 2 -> (+residual) store.
+
+    x: (B, in_width); gamma: (n,) RMS scale zero-padded past ``in_width``
+    (None skips the norm prologue); coeffs1/coeffs2: (L, n//2, 4) stage
+    slabs of the up / down projections, with their (n,) d_in / d_out /
+    optional bias; ``strides2=None`` ends the chain after stack 1 (the
+    norm-prologue-only fused-qkv entry).  Both stacks must satisfy
+    ``block_fusion_eligible`` (single full-width run each) — asserted
+    here.  Returns ``y (B, out_width)`` or ``(y, rstd (B, 1) f32)`` with
+    the norm prologue; rstd is the ONLY extra forward residual the
+    backward needs (remat-from-row-stats).
+    """
+    B = x.shape[0]
+    L1, n = coeffs1.shape[0], 2 * coeffs1.shape[1]
+    assert x.shape[-1] == in_width and B % block_rows == 0
+    for s in strides1 + (strides2 or ()):
+        assert n % (2 * s) == 0, (s, n)
+    if strides2 is not None:
+        assert 2 * coeffs2.shape[1] == n
+    if residual:
+        assert out_width == in_width, (out_width, in_width)
+    has_norm = gamma is not None
+    grid = (B // block_rows,)
+
+    row_spec = pl.BlockSpec((block_rows, n), lambda i: (i, 0))
+    vec_spec = pl.BlockSpec((1, n), lambda i: (0, 0))
+
+    def _cf_spec(L):
+        return pl.BlockSpec((L, n // 2, 4), lambda i: (0, 0, 0))
+
+    operands, in_specs = [x], [row_spec]
+    if has_norm:
+        operands.append(gamma.reshape(1, n))
+        in_specs.append(vec_spec)
+    operands += [coeffs1, d_in1.reshape(1, n), d_out1.reshape(1, n)]
+    in_specs += [_cf_spec(L1), vec_spec, vec_spec]
+    if bias1 is not None:
+        operands.append(bias1.reshape(1, n))
+        in_specs.append(vec_spec)
+    if strides2 is not None:
+        operands += [coeffs2, d_in2.reshape(1, n), d_out2.reshape(1, n)]
+        in_specs += [_cf_spec(coeffs2.shape[0]), vec_spec, vec_spec]
+        if bias2 is not None:
+            operands.append(bias2.reshape(1, n))
+            in_specs.append(vec_spec)
+
+    out_specs = [row_spec]
+    out_shape = [jax.ShapeDtypeStruct((B, out_width), x.dtype)]
+    if has_norm:
+        out_specs.append(pl.BlockSpec((block_rows, 1), lambda i: (i, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((B, 1), jnp.float32))
+
+    kernel = functools.partial(
+        _block_kernel, strides1=strides1, strides2=strides2,
+        activation=activation, has_norm=has_norm,
+        has_bias1=bias1 is not None, has_bias2=bias2 is not None,
+        residual=residual, in_width=in_width, mid_width=mid_width,
+        out_width=out_width, eps=eps)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs if has_norm else out_specs[0],
+        out_shape=out_shape if has_norm else out_shape[0],
+        interpret=interpret,
+    )(*operands)
+    return out if has_norm else (out,)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "strides1", "strides2", "activation", "block_rows", "residual",
+    "in_width", "mid_width", "out_width", "interpret"))
+def spm_block_bwd_kernel_call(x: jax.Array, gy: jax.Array,
+                              coeffs1: jax.Array,
+                              d_in1: jax.Array, d_out1: jax.Array,
+                              bias1: Optional[jax.Array] = None,
+                              gamma: Optional[jax.Array] = None,
+                              rstd: Optional[jax.Array] = None,
+                              coeffs2: Optional[jax.Array] = None,
+                              d_in2: Optional[jax.Array] = None,
+                              d_out2: Optional[jax.Array] = None,
+                              bias2: Optional[jax.Array] = None, *,
+                              strides1: Tuple[int, ...],
+                              strides2: Optional[Tuple[int, ...]] = None,
+                              activation: Optional[str] = None,
+                              block_rows: int,
+                              residual: bool = False,
+                              in_width: int, mid_width: int,
+                              out_width: int,
+                              interpret: bool = False):
+    """Residual-block megakernel backward: ONE pallas_call from the raw
+    saved x and the (B, 1) row statistics — the normalized input, both
+    stacks' stage inputs, and the mid activation are all rematted in
+    VMEM (never stored by the forward), then one reverse walk emits
+    every grad closed-form.  ``bias1``/``bias2`` are needed as INPUTS
+    (the rematted pre-activation includes them); ``rstd`` is required
+    iff ``gamma`` is given.
+
+    Returns ``(g_x (B, in_width), [g_gamma (n,)], g_coeffs1, g_din1,
+    g_dout1, [g_bias1], [g_coeffs2, g_din2, g_dout2, [g_bias2]])`` —
+    bracketed entries present when the matching operand was.  All
+    parameter grads are f32, exactly zero on padded lanes.
+    """
+    B = x.shape[0]
+    L1, n = coeffs1.shape[0], 2 * coeffs1.shape[1]
+    assert x.shape[-1] == in_width and gy.shape[-1] == out_width
+    assert B % block_rows == 0
+    has_norm = gamma is not None
+    assert has_norm == (rstd is not None)
+    grid = (B // block_rows,)
+
+    row_spec = pl.BlockSpec((block_rows, n), lambda i: (i, 0))
+    vec_spec = pl.BlockSpec((1, n), lambda i: (0, 0))
+    rs_spec = pl.BlockSpec((block_rows, 1), lambda i: (i, 0))
+
+    def _cf_spec(L):
+        return pl.BlockSpec((L, n // 2, 4), lambda i: (0, 0, 0))
+
+    operands, in_specs = [x], [row_spec]
+    if has_norm:
+        operands += [gamma.reshape(1, n), rstd.astype(jnp.float32)]
+        in_specs += [vec_spec, rs_spec]
+    operands += [coeffs1, d_in1.reshape(1, n), d_out1.reshape(1, n)]
+    in_specs += [_cf_spec(L1), vec_spec, vec_spec]
+    if bias1 is not None:
+        operands.append(bias1.reshape(1, n))
+        in_specs.append(vec_spec)
+    if strides2 is not None:
+        operands += [coeffs2, d_in2.reshape(1, n), d_out2.reshape(1, n)]
+        in_specs += [_cf_spec(coeffs2.shape[0]), vec_spec, vec_spec]
+        if bias2 is not None:
+            operands.append(bias2.reshape(1, n))
+            in_specs.append(vec_spec)
+    operands.append(gy)
+    in_specs.append(row_spec)
+
+    # g_x first, then parameter grads (all indexed to block 0 — the 1-D
+    # row grid revisits them every iteration, accumulation-safe)
+    out_specs = [row_spec]
+    out_shape = [jax.ShapeDtypeStruct((B, in_width), x.dtype)]
+
+    def _vec_out():
+        out_specs.append(vec_spec)
+        out_shape.append(jax.ShapeDtypeStruct((1, n), jnp.float32))
+
+    if has_norm:
+        _vec_out()                                 # g_gamma
+    out_specs.append(_cf_spec(L1))
+    out_shape.append(jax.ShapeDtypeStruct((L1, n // 2, 4), jnp.float32))
+    _vec_out()                                     # g_din1
+    _vec_out()                                     # g_dout1
+    if bias1 is not None:
+        _vec_out()
+    if strides2 is not None:
+        L2 = coeffs2.shape[0]
+        out_specs.append(_cf_spec(L2))
+        out_shape.append(jax.ShapeDtypeStruct((L2, n // 2, 4),
+                                              jnp.float32))
+        _vec_out()                                 # g_din2
+        _vec_out()                                 # g_dout2
+        if bias2 is not None:
+            _vec_out()
+
+    kernel = functools.partial(
+        _block_bwd_kernel, strides1=strides1, strides2=strides2,
+        activation=activation, has_norm=has_norm,
+        has_bias1=bias1 is not None, has_bias2=bias2 is not None,
+        residual=residual, in_width=in_width, mid_width=mid_width,
+        out_width=out_width)
+    out = list(pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*operands))
+    # flatten the (1, n) vector grads to (n,); cf grads (ndim 3) stay
+    return (out[0],) + tuple(v.reshape(n) if v.ndim == 2 else v
+                             for v in out[1:])
+
+
+# ---------------------------------------------------------------------------
 # overlap (RDMA) kernels: fused {local run -> cross exchange -> 2x2 mix}
 # ---------------------------------------------------------------------------
 #
@@ -861,13 +1318,16 @@ def _drain_epilogue(rdma, cap_sem, n_blocks: int):
 
 def _overlap_kernel(partner_ref, base_ref, *refs,
                     strides: Tuple[int, ...], n_blocks: int,
-                    mesh_ndim: int, has_din: bool,
-                    in_width: Optional[int], quant_cf: bool = False):
+                    mesh_ndim: int, has_din: bool, has_dout: bool,
+                    has_bias: bool, in_width: Optional[int],
+                    quant_cf: bool = False):
     refs = list(refs)
     x_ref, cf_ref = refs.pop(0), refs.pop(0)
     scf_ref = refs.pop(0) if quant_cf else None
     ma_ref, mb_ref = refs.pop(0), refs.pop(0)
     din_ref = refs.pop(0) if has_din else None
+    dout_ref = refs.pop(0) if has_dout else None
+    bias_ref = refs.pop(0) if has_bias else None
     o_ref, send_buf, recv_buf, send_sem, recv_sem, cap_sem = refs
 
     i = pl.program_id(0)
@@ -897,6 +1357,14 @@ def _overlap_kernel(partner_ref, base_ref, *refs,
         zm = send_buf[slot].astype(_F32)
         zp = recv_buf[slot].astype(_F32)
         y = ma_ref[...].astype(_F32) * zm + mb_ref[...].astype(_F32) * zp
+        if has_dout:
+            # operator-boundary fold, scale-ON-STORE: d_out multiplies
+            # the mixed result AFTER the add — bitwise the unfolded
+            # post-stack elementwise op, which elastic re-sharding
+            # depends on (see parallel/spm_shard._cross_mix)
+            y = y * dout_ref[...].astype(_F32)
+        if has_bias:
+            y = y + bias_ref[...].astype(_F32)
         o_ref[...] = y.astype(o_ref.dtype)
         pltpu.semaphore_signal(cap_sem, inc=1,
                                device_id=_partner_device_id(partner_ref,
@@ -915,6 +1383,8 @@ def spm_overlap_kernel_call(x: jax.Array, coeffs: jax.Array,
                             mix_a: jax.Array, mix_b: jax.Array,
                             partner: jax.Array,
                             d_in: Optional[jax.Array] = None,
+                            d_out: Optional[jax.Array] = None,
+                            bias: Optional[jax.Array] = None,
                             col_base: Optional[jax.Array] = None,
                             coeff_scale: Optional[jax.Array] = None, *,
                             strides: Tuple[int, ...],
@@ -932,7 +1402,11 @@ def spm_overlap_kernel_call(x: jax.Array, coeffs: jax.Array,
     (y = mix_a * z + mix_b * z_partner); partner: (mesh_ndim,) int32
     logical mesh coordinates of the XOR partner (scalar prefetch);
     optional d_in: (n_tile,) this shard's diagonal slice, folded before
-    the first stage.  Pipelines ``B // block_rows`` row blocks with
+    the first stage; optional d_out / bias: (n_tile,) this shard's
+    output-boundary slices, applied by the mix epilogue when the schedule
+    ENDS on this cross stage — d_out scales the mixed result AFTER the
+    add (scale-on-store, bitwise the unfolded post-stack op) and bias
+    follows.  Pipelines ``B // block_rows`` row blocks with
     double-buffered VMEM send/recv slots (budgeted by
     ``overlap_vmem_bytes``); returns the mixed (B, n_tile) slab.
 
@@ -970,10 +1444,19 @@ def spm_overlap_kernel_call(x: jax.Array, coeffs: jax.Array,
     if d_in is not None:
         operands.append(d_in.reshape(1, n_tile))
         in_specs.append(vec_spec)
+    if d_out is not None:
+        operands.append(d_out.reshape(1, n_tile))
+        in_specs.append(vec_spec)
+    if bias is not None:
+        operands.append(bias.reshape(1, n_tile))
+        in_specs.append(vec_spec)
 
     kernel = functools.partial(_overlap_kernel, strides=strides,
                                n_blocks=nb, mesh_ndim=mesh_ndim,
-                               has_din=d_in is not None, in_width=in_width,
+                               has_din=d_in is not None,
+                               has_dout=d_out is not None,
+                               has_bias=bias is not None,
+                               in_width=in_width,
                                quant_cf=coeff_scale is not None)
     return pl.pallas_call(
         kernel,
@@ -995,7 +1478,7 @@ def spm_overlap_kernel_call(x: jax.Array, coeffs: jax.Array,
 
 def _overlap_bwd_kernel(partner_ref, base_ref, *refs,
                         strides: Tuple[int, ...], n_blocks: int,
-                        mesh_ndim: int, has_din: bool,
+                        mesh_ndim: int, has_din: bool, has_dout: bool,
                         in_width: Optional[int], quant_cf: bool = False):
     refs = list(refs)
     x_ref, xw_ref, cf_ref = refs.pop(0), refs.pop(0), refs.pop(0)
@@ -1003,8 +1486,15 @@ def _overlap_bwd_kernel(partner_ref, base_ref, *refs,
     gy_ref = refs.pop(0)
     u_ref, v_ref = refs.pop(0), refs.pop(0)
     din_ref = refs.pop(0) if has_din else None
+    # folded-boundary mode (schedule ends on this cross stage): the raw
+    # gy streams through a SECOND walk-side window (block i-1, like x),
+    # and this shard's d_out slab pre-scales the delta it SENDS
+    gyw_ref = refs.pop(0) if has_dout else None
+    dout_ref = refs.pop(0) if has_dout else None
     gx_ref, gcf_ref, gso_ref, gsw_ref = (refs.pop(0), refs.pop(0),
                                          refs.pop(0), refs.pop(0))
+    gto_ref = refs.pop(0) if has_dout else None
+    gtw_ref = refs.pop(0) if has_dout else None
     gdin_ref = refs.pop(0) if has_din else None
     send_buf, recv_buf, send_sem, recv_sem, cap_sem = refs
 
@@ -1030,7 +1520,14 @@ def _overlap_bwd_kernel(partner_ref, base_ref, *refs,
         if has_din:
             z = z * din_ref[...].astype(_F32)
         z_out = _apply_stages_fwd(z, cf_ref, strides, scf_ref=scf_ref)
-        send_buf[slot, 0] = gy_ref[...].astype(send_buf.dtype)
+        if has_dout:
+            # scale-before-exchange: each shard scales its OWN cotangent
+            # by its OWN d_out slab, so the partner's delta arrives
+            # correctly scaled without ever shipping the remote slab
+            g = gy_ref[...].astype(_F32) * dout_ref[...].astype(_F32)
+            send_buf[slot, 0] = g.astype(send_buf.dtype)
+        else:
+            send_buf[slot, 0] = gy_ref[...].astype(send_buf.dtype)
         send_buf[slot, 1] = z_out.astype(send_buf.dtype)
         _rdma(slot).start()
 
@@ -1055,6 +1552,14 @@ def _overlap_bwd_kernel(partner_ref, base_ref, *refs,
         # role-owned cross-coefficient sums (slot placement by the caller)
         _acc(gso_ref, jnp.sum(delta * z_out, axis=0).reshape(1, nt))
         _acc(gsw_ref, jnp.sum(delta * zp, axis=0).reshape(1, nt))
+        if has_dout:
+            # raw-cotangent sums for the folded d_out grad: g_dout =
+            # mix_a*t_own + mix_b*t_swp outside the kernel (exact — no
+            # division remat).  The packaged delta is pre-scaled, so the
+            # raw gy comes from its own walk-side window.
+            gy_raw = gyw_ref[...].astype(_F32)
+            _acc(gto_ref, jnp.sum(gy_raw * z_out, axis=0).reshape(1, nt))
+            _acc(gtw_ref, jnp.sum(gy_raw * zp, axis=0).reshape(1, nt))
         # transpose-mix prologue, then the local stage walk (collect remat)
         dmid = (u_ref[...].astype(_F32) * delta
                 + v_ref[...].astype(_F32) * delta_p)
@@ -1087,6 +1592,7 @@ def spm_overlap_bwd_kernel_call(x: jax.Array, coeffs: jax.Array,
                                 u: jax.Array, v: jax.Array,
                                 partner: jax.Array,
                                 d_in: Optional[jax.Array] = None,
+                                d_out: Optional[jax.Array] = None,
                                 col_base: Optional[jax.Array] = None,
                                 coeff_scale: Optional[jax.Array] = None, *,
                                 strides: Tuple[int, ...],
@@ -1109,10 +1615,19 @@ def spm_overlap_bwd_kernel_call(x: jax.Array, coeffs: jax.Array,
     local stages in reverse.
 
     Returns ``(g_x (B, n_tile), g_coeffs (L, n_tile//2, 4) f32,
-    s_own (n_tile,), s_swp (n_tile,)[, g_din (n_tile,)])`` with
+    s_own (n_tile,), s_swp (n_tile,)[, g_din (n_tile,)]
+    [, t_own (n_tile,), t_swp (n_tile,)])`` with
     s_own = sum_B delta * z_out and s_swp = sum_B delta * z_partner — the
-    caller places them into the (a, b) / (c, d) slots by role.  TPU-only,
-    like the forward."""
+    caller places them into the (a, b) / (c, d) slots by role.
+
+    ``d_out`` engages the folded-boundary mode (the schedule ENDS on
+    this cross stage — _pair_rdma_fwd folded d_out/bias into the mix
+    epilogue): each block's SENT delta is pre-scaled by the shard's own
+    d_out slab in VMEM (u/v stay the raw transpose-mix vectors), and two
+    extra raw-cotangent sums t_own = sum_B gy * z_out / t_swp =
+    sum_B gy * z_partner come back for the caller's exact
+    ``g_dout = mix_a * t_own + mix_b * t_swp``.  TPU-only, like the
+    forward."""
     assert not interpret, "RDMA overlap kernel has no interpret mode"
     B = gy.shape[0]
     L = coeffs.shape[0]
@@ -1149,19 +1664,32 @@ def spm_overlap_bwd_kernel_call(x: jax.Array, coeffs: jax.Array,
     if d_in is not None:
         operands.append(d_in.reshape(1, n_tile))
         in_specs.append(vec_spec)
+    if d_out is not None:
+        # folded-boundary mode: raw gy through a walk-side window
+        # (block i-1, like x_walk_spec) + this shard's d_out slab
+        gyw_spec = pl.BlockSpec((block_rows, n_tile),
+                                lambda i, p, b: (jnp.maximum(i - 1, 0), 0))
+        operands += [gy, d_out.reshape(1, n_tile)]
+        in_specs += [gyw_spec, vec_spec]
 
     out_specs = [gx_spec, cf_spec, vec_spec, vec_spec]
     out_shape = [jax.ShapeDtypeStruct((B, n_tile), io_dt),
                  jax.ShapeDtypeStruct((L, n_tile // 2, 4), jnp.float32),
                  jax.ShapeDtypeStruct((1, n_tile), jnp.float32),
                  jax.ShapeDtypeStruct((1, n_tile), jnp.float32)]
+    if d_out is not None:
+        out_specs += [vec_spec, vec_spec]          # t_own, t_swp
+        out_shape += [jax.ShapeDtypeStruct((1, n_tile), jnp.float32),
+                      jax.ShapeDtypeStruct((1, n_tile), jnp.float32)]
     if d_in is not None:
         out_specs.append(vec_spec)
         out_shape.append(jax.ShapeDtypeStruct((1, n_tile), jnp.float32))
 
     kernel = functools.partial(_overlap_bwd_kernel, strides=strides,
                                n_blocks=nb, mesh_ndim=mesh_ndim,
-                               has_din=d_in is not None, in_width=in_width,
+                               has_din=d_in is not None,
+                               has_dout=d_out is not None,
+                               in_width=in_width,
                                quant_cf=coeff_scale is not None)
     out = pl.pallas_call(
         kernel,
@@ -1181,6 +1709,10 @@ def spm_overlap_bwd_kernel_call(x: jax.Array, coeffs: jax.Array,
     )(partner.astype(jnp.int32), base, *operands)
     gx, gcf, s_own, s_swp = out[0], out[1], out[2], out[3]
     res = (gx, gcf, s_own.reshape(n_tile), s_swp.reshape(n_tile))
+    rest = list(out[4:])
+    t_pair = ()
+    if d_out is not None:
+        t_pair = (rest.pop(0).reshape(n_tile), rest.pop(0).reshape(n_tile))
     if d_in is not None:
-        res = res + (out[4].reshape(n_tile),)
-    return res
+        res = res + (rest.pop(0).reshape(n_tile),)
+    return res + t_pair

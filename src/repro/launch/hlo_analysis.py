@@ -94,15 +94,19 @@ def sharded_stage_traffic(n_local: int, batch_rows: int, steps,
 
     Boundary terms: with ``fold_boundaries=True`` (the executor since the
     kernel-native-boundaries PR) the diag multiplies / bias add ride the
-    boundary kernel runs and a rectangular input is window-read straight
-    from the (rows, in_width) operand — but ONLY where the matching
-    boundary step is a local run (``ShardPlan.fold_din`` requires the
-    first step local, ``fold_dout``/``fold_bias``/the windowed cotangent
-    read the last): a schedule whose cycle ends on a cross stage keeps
-    the explicit elementwise d_out/bias (and the gathered gy window) for
-    that side, and the model charges them accordingly.  The always-paid
-    remainder is the single local slice cutting the assembled output to
-    ``out_width`` (one slab-portion read + write).
+    schedule's boundary steps and a rectangular input is window-read
+    straight from the (rows, in_width) operand.  ``ShardPlan.fold_din``
+    and the windowed read still require the FIRST step local (a
+    cross-starting schedule keeps the explicit d_in elementwise op and
+    the gather-fallback window build, charged here), but the OUTPUT side
+    folds on every schedule shape: a local ending absorbs d_out/bias into
+    its last kernel run, and a cross ending folds them into the 2x2 mix
+    epilogue itself (two O(n_local) vector operands applied on the store,
+    d_out scaling the mixed result AFTER the add — no batch-wide
+    elementwise op, no extra slab round-trip), so the model charges NO
+    output-boundary bytes.  The
+    always-paid remainder is the single local slice cutting the assembled
+    output to ``out_width`` (one slab-portion read + write).
     ``fold_boundaries=False`` reproduces the PRE-fold executor for
     comparison: every enabled diag/bias term is one extra elementwise
     round-trip of the slab regardless of boundary kinds, and rectangular
@@ -186,13 +190,13 @@ def sharded_stage_traffic(n_local: int, batch_rows: int, steps,
         crosses[-1]["exposed_bytes"] += exposed - shared
     boundary = 0
     first_local = bool(steps) and steps[0][0] == "local"
-    last_local = bool(steps) and steps[-1][0] == "local"
     if fold_boundaries:
         if use_diag and not first_local:
             boundary += 2 * slab               # explicit d_in elementwise
-        if not last_local:
-            boundary += (2 * slab if use_diag else 0)   # explicit d_out
-            boundary += (2 * slab if use_bias else 0)   # explicit bias
+        # d_out/bias fold on EVERY schedule shape: into the last kernel
+        # run on a local ending, into the mix epilogue's role vectors on
+        # a cross ending (O(n_local) vector cost — not modeled as slab
+        # traffic)
         if in_width is not None and not first_local:
             # gather-fallback window build instead of the in-kernel read
             boundary += slab + batch_rows * min(n_local, in_width) \

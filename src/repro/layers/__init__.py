@@ -1,13 +1,17 @@
 """Neural-net building blocks; every projection routes through the
 ``linear_impl`` factory so SPM can replace any dense map (paper §6–7)."""
 
-from repro.layers.norms import rms_norm, init_rms_norm, qk_norm  # noqa: F401
+from repro.layers.norms import (  # noqa: F401
+    rms_norm, init_rms_norm, qk_norm, norm_linear_apply,
+)
 from repro.layers.rope import rope_angles, mrope_angles, apply_rope  # noqa: F401
 from repro.layers.attention import (  # noqa: F401
     AttentionConfig, init_attention, attention_apply, init_kv_cache,
     chunked_causal_attention,
 )
-from repro.layers.ffn import FFNConfig, init_ffn, ffn_apply  # noqa: F401
+from repro.layers.ffn import (  # noqa: F401
+    FFNConfig, init_ffn, ffn_apply, ffn_block_apply,
+)
 from repro.layers.moe import MoEConfig, init_moe, moe_apply  # noqa: F401
 from repro.layers.mamba2 import (  # noqa: F401
     Mamba2Config, init_mamba2, mamba2_apply, init_ssm_cache,

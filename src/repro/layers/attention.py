@@ -19,8 +19,10 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.linear import LinearConfig, init_linear, linear_apply
-from repro.layers.norms import qk_norm
+from repro.core.eligibility import resolve_block_fuse
+from repro.core.linear import (LinearConfig, init_linear, linear_apply,
+                               spm_block_operands)
+from repro.layers.norms import qk_norm, rms_norm
 from repro.layers.rope import apply_rope
 from repro.parallel.ctx import constrain
 
@@ -47,6 +49,13 @@ class AttentionConfig:
     spm_overlap: Optional[bool] = None
     spm_quant_acts: bool = False
     spm_quant_coeffs: bool = False
+    # Fused-qkv norm prologue: when ``attention_apply`` receives
+    # ``norm_params`` and ALL THREE q/k/v projections are block-fusible
+    # SPM stacks, each projection lowers as one norm -> SPM Pallas region
+    # (kernels/ops.spm_block_fused, no second stack).  Tri-state like
+    # spm_use_kernel; ineligible layers fall back to one explicit
+    # rms_norm + the per-linear path (bitwise).
+    spm_block_fuse: Optional[bool] = None
     q_chunk: int = 1024
     k_chunk: int = 1024
     param_dtype: Any = jnp.float32
@@ -196,9 +205,16 @@ def attention_apply(params: dict, x: jax.Array, cfg: AttentionConfig, *,
                     cos: jax.Array, sin: jax.Array,
                     cache: Optional[dict] = None,
                     cache_index: Optional[jax.Array] = None,
-                    fill_len: Optional[jax.Array] = None
+                    fill_len: Optional[jax.Array] = None,
+                    norm_params: Optional[dict] = None
                     ) -> Tuple[jax.Array, Optional[dict]]:
-    """x: (B, T, d).  Three modes:
+    """x: (B, T, d).  ``norm_params`` (the pre-attention RMSNorm scale)
+    moves the input norm INSIDE this layer: when ``cfg.spm_block_fuse``
+    resolves on and all three q/k/v projections are block-fusible SPM
+    stacks, each projection runs as one fused norm -> SPM Pallas region
+    (the norm never round-trips HBM); otherwise one explicit ``rms_norm``
+    is applied up front — bitwise the caller-side composition.  Three
+    modes:
 
     * **training** — ``cache is None``: chunked causal attention, no cache.
     * **prefill-into-cache** — cache given with ``T > 1``: the fresh
@@ -220,12 +236,41 @@ def attention_apply(params: dict, x: jax.Array, cfg: AttentionConfig, *,
     B, T, _ = x.shape
     H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
 
-    q = constrain(linear_apply(params["q"], x, cfg.q_proj)
-                  .reshape(B, T, H, dh), "heads")
-    k = constrain(linear_apply(params["k"], x, cfg.kv_proj)
-                  .reshape(B, T, Hkv, dh), "kv_heads")
-    v = constrain(linear_apply(params["v"], x, cfg.kv_proj)
-                  .reshape(B, T, Hkv, dh), "kv_heads")
+    bundles = None
+    if norm_params is not None:
+        bq = spm_block_operands(params["q"], cfg.q_proj)
+        bk = spm_block_operands(params["k"], cfg.kv_proj)
+        bv = spm_block_operands(params["v"], cfg.kv_proj)
+        if bq is not None and bk is not None and bv is not None:
+            bundles = (bq, bk, bv)
+    fuse = (norm_params is not None
+            and resolve_block_fuse(cfg.spm_block_fuse, bundles is not None,
+                                   jax.default_backend() == "tpu"))
+    if fuse:
+        from repro.kernels import ops as kernel_ops  # lazy: keeps layers light
+        gamma = norm_params["scale"]
+
+        def _norm_proj(b, lcfg):
+            return kernel_ops.spm_block_fused(
+                x, coeffs1=b["coeffs"], d_in1=b["d_in"], d_out1=b["d_out"],
+                bias1=b["bias"], strides1=b["strides"], gamma=gamma,
+                out_width=lcfg.d_out)
+
+        q = constrain(_norm_proj(bq, cfg.q_proj)
+                      .reshape(B, T, H, dh), "heads")
+        k = constrain(_norm_proj(bk, cfg.kv_proj)
+                      .reshape(B, T, Hkv, dh), "kv_heads")
+        v = constrain(_norm_proj(bv, cfg.kv_proj)
+                      .reshape(B, T, Hkv, dh), "kv_heads")
+    else:
+        if norm_params is not None:
+            x = rms_norm(norm_params, x)
+        q = constrain(linear_apply(params["q"], x, cfg.q_proj)
+                      .reshape(B, T, H, dh), "heads")
+        k = constrain(linear_apply(params["k"], x, cfg.kv_proj)
+                      .reshape(B, T, Hkv, dh), "kv_heads")
+        v = constrain(linear_apply(params["v"], x, cfg.kv_proj)
+                      .reshape(B, T, Hkv, dh), "kv_heads")
 
     if cfg.use_qk_norm:
         q = qk_norm(params["q_norm"], q)

@@ -1,11 +1,24 @@
-"""Normalization layers (RMSNorm and per-head qk-norm)."""
+"""Normalization layers (RMSNorm, per-head qk-norm) and the fused
+norm -> linear entry.
+
+``norm_linear_apply`` is the single-stack face of the residual-block
+megakernel: RMSNorm prologue computed in VMEM feeding one SPM operator in
+the same Pallas region (``kernels/ops.spm_block_fused`` with no second
+stack, no residual) — used wherever a norm directly feeds a projection
+(the fused-qkv entry in ``layers/attention``, a final norm -> head).  The
+fallback is literally ``linear_apply(params, rms_norm(x))`` (bitwise)."""
 
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["rms_norm", "init_rms_norm", "qk_norm"]
+from repro.core.eligibility import resolve_block_fuse
+from repro.core.linear import LinearConfig, linear_apply, spm_block_operands
+
+__all__ = ["rms_norm", "init_rms_norm", "qk_norm", "norm_linear_apply"]
 
 
 def init_rms_norm(d: int, dtype=jnp.float32) -> dict:
@@ -18,6 +31,30 @@ def rms_norm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)
     y = xf * jax.lax.rsqrt(var + eps)
     return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_linear_apply(norm_params: dict, params: dict, x: jax.Array,
+                      cfg: LinearConfig,
+                      block_fuse: Optional[bool] = None,
+                      eps: float = 1e-6) -> jax.Array:
+    """``linear_apply(params, rms_norm(norm_params, x))`` with the norm
+    fused into the SPM kernel's prologue when the tri-state ``block_fuse``
+    knob resolves on (``core/eligibility.resolve_block_fuse``): row stats
+    and scale computed in VMEM feeding the operator's first run, so the
+    normalized activation never round-trips HBM.  Falls back bitwise to
+    the explicit composition for dense/sharded/quantized/ineligible
+    linears."""
+    bundle = spm_block_operands(params, cfg)
+    fuse = resolve_block_fuse(block_fuse, bundle is not None,
+                              jax.default_backend() == "tpu")
+    if fuse:
+        from repro.kernels import ops as kernel_ops  # lazy: keeps layers light
+        return kernel_ops.spm_block_fused(
+            x, coeffs1=bundle["coeffs"], d_in1=bundle["d_in"],
+            d_out1=bundle["d_out"], bias1=bundle["bias"],
+            strides1=bundle["strides"], gamma=norm_params["scale"],
+            out_width=cfg.d_out, eps=eps)
+    return linear_apply(params, rms_norm(norm_params, x, eps=eps), cfg)
 
 
 def qk_norm(scale: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:

@@ -56,6 +56,7 @@ def init_mlp(key: jax.Array, cfg: MLPConfig) -> dict:
 
 
 def mlp_apply(params: dict, x: jax.Array, cfg: MLPConfig) -> jax.Array:
+    # spmlint: allow[SPM007] paper's §9.1 student spec, not a fusible block
     h = jax.nn.relu(linear_apply(params["mix"], x, cfg.mix))
     return linear_apply(params["head"], h, cfg.head)
 

@@ -24,7 +24,7 @@ from repro.layers.attention import (AttentionConfig, attention_apply,
                                     init_attention, init_kv_cache)
 from repro.layers.embedding import (EmbeddingConfig, embed, init_embedding,
                                     unembed)
-from repro.layers.ffn import FFNConfig, ffn_apply, init_ffn
+from repro.layers.ffn import FFNConfig, ffn_block_apply, init_ffn
 from repro.layers.mamba2 import (Mamba2Config, init_mamba2, init_ssm_cache,
                                  mamba2_apply)
 from repro.layers.moe import MoEConfig, init_moe, moe_apply
@@ -95,6 +95,15 @@ class ModelConfig:
                                            # kernel path (per-block scales)
     spm_quant_coeffs: bool = False         # int8 per-stage-scaled coefficient
                                            # tables dequantized in VMEM
+    ffn_activation: str = "swiglu"         # "swiglu" (gated) or an ungated
+                                           # "relu"/"silu"/"gelu" — the
+                                           # shapes the residual-block
+                                           # megakernel can fuse
+    spm_block_fuse: Optional[bool] = None  # residual-block megakernel
+                                           # (norm -> SPM -> act -> SPM ->
+                                           # residual in one Pallas chain):
+                                           # None=auto/on-TPU, True=force
+                                           # (interpret off-TPU), False=off
     compress_pod_grads: bool = False       # int8 error-feedback pod-DP grad
                                            # reduction (train/step.py
                                            # make_pod_train_step)
@@ -122,19 +131,22 @@ class ModelConfig:
             spm_overlap=self.spm_overlap,
             spm_quant_acts=self.spm_quant_acts,
             spm_quant_coeffs=self.spm_quant_coeffs,
+            spm_block_fuse=self.spm_block_fuse,
             q_chunk=self.q_chunk,
             k_chunk=self.k_chunk, param_dtype=self.param_dtype)
 
     def ffn_cfg(self) -> FFNConfig:
         return FFNConfig(
             d_model=self.d_model, d_ff=self.d_ff,
-            linear_impl=self.linear_impl, spm_stages=self.spm_stages,
+            linear_impl=self.linear_impl,
+            activation=self.ffn_activation, spm_stages=self.spm_stages,
             spm_backward=self.spm_backward,
             spm_use_kernel=self.spm_use_kernel,
             spm_schedule=self.spm_schedule, spm_n_shards=self.spm_n_shards,
             spm_overlap=self.spm_overlap,
             spm_quant_acts=self.spm_quant_acts,
             spm_quant_coeffs=self.spm_quant_coeffs,
+            spm_block_fuse=self.spm_block_fuse,
             param_dtype=self.param_dtype)
 
     def moe_cfg(self) -> MoEConfig:
@@ -170,13 +182,15 @@ class ModelConfig:
     def shared_ffn_cfg(self) -> FFNConfig:
         return FFNConfig(
             d_model=self.d_model, d_ff=self.shared_attn_d_ff,
-            linear_impl=self.linear_impl, spm_stages=self.spm_stages,
+            linear_impl=self.linear_impl,
+            activation=self.ffn_activation, spm_stages=self.spm_stages,
             spm_backward=self.spm_backward,
             spm_use_kernel=self.spm_use_kernel,
             spm_schedule=self.spm_schedule, spm_n_shards=self.spm_n_shards,
             spm_overlap=self.spm_overlap,
             spm_quant_acts=self.spm_quant_acts,
             spm_quant_coeffs=self.spm_quant_coeffs,
+            spm_block_fuse=self.spm_block_fuse,
             param_dtype=self.param_dtype)
 
     def embed_cfg(self) -> EmbeddingConfig:
@@ -342,13 +356,13 @@ def _apply_shared(shared_params: dict, h: jax.Array, cfg: ModelConfig,
                   rope: dict, cache, cache_index, fill_len=None):
     cos, sin = rope["default"]
     a, new_cache = attention_apply(
-        shared_params["attn"], rms_norm(shared_params["norm1"], h),
+        shared_params["attn"], h,
         cfg.shared_attn_cfg(), cos=cos, sin=sin,
-        cache=cache, cache_index=cache_index, fill_len=fill_len)
+        cache=cache, cache_index=cache_index, fill_len=fill_len,
+        norm_params=shared_params["norm1"])
     h = h + a
-    f = ffn_apply(shared_params["ffn"], rms_norm(shared_params["norm2"], h),
-                  cfg.shared_ffn_cfg())
-    return h + f, new_cache
+    return ffn_block_apply(shared_params["ffn"], shared_params["norm2"], h,
+                           cfg.shared_ffn_cfg()), new_cache
 
 
 def _apply_layer(lp: dict, spec: LayerSpec, cfg: ModelConfig, h: jax.Array,
@@ -362,20 +376,24 @@ def _apply_layer(lp: dict, spec: LayerSpec, cfg: ModelConfig, h: jax.Array,
                                fill_len)
         if cache is not None:
             new_cache["shared"] = nsc
-    x = rms_norm(lp["norm1"], h)
     mc = None if cache is None else cache["mixer"]
     if spec.mixer == "attn":
+        # pre-attention norm applied INSIDE the layer (norm_params): the
+        # fused-qkv path folds it into the projection kernels' prologue,
+        # the fallback is bitwise the old rms_norm-then-apply composition.
         cos, sin = rope[spec.rope]
-        y, nmc = attention_apply(lp["mixer"], x, cfg.attn_cfg(spec),
+        y, nmc = attention_apply(lp["mixer"], h, cfg.attn_cfg(spec),
                                  cos=cos, sin=sin, cache=mc,
-                                 cache_index=cache_index, fill_len=fill_len)
+                                 cache_index=cache_index, fill_len=fill_len,
+                                 norm_params=lp["norm1"])
     else:
-        y, nmc = mamba2_apply(lp["mixer"], x, cfg.mamba_cfg(), cache=mc)
+        y, nmc = mamba2_apply(lp["mixer"], rms_norm(lp["norm1"], h),
+                              cfg.mamba_cfg(), cache=mc)
     if cache is not None:
         new_cache["mixer"] = nmc
     h = h + y
     if spec.mlp == "dense":
-        h = h + ffn_apply(lp["mlp"], rms_norm(lp["norm2"], h), cfg.ffn_cfg())
+        h = ffn_block_apply(lp["mlp"], lp["norm2"], h, cfg.ffn_cfg())
     elif spec.mlp == "moe":
         y, aux = moe_apply(lp["mlp"], rms_norm(lp["norm2"], h), cfg.moe_cfg())
         h = h + y

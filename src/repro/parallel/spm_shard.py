@@ -223,12 +223,24 @@ class ShardPlan:
 
     @property
     def fold_dout(self) -> bool:
-        """D_out folds into the last kernel run of the last local step."""
-        return self.has_dout and self.use_kernel and self.last_local
+        """D_out folds into the schedule's last step: into the last kernel
+        run when the schedule ends on a local step, or — when it ends on a
+        CROSS stage — into the mix epilogue itself, scaling the mixed
+        result ON THE STORE (after the mix add, bitwise the unfolded
+        post-stack op — elastic re-sharding depends on that order; on the
+        RDMA path the kernel's receive-mix applies it as one extra vector
+        operand, so the slab never round-trips HBM for the boundary).
+        Only a kernel-off local ending still applies d_out as an explicit
+        batch-wide elementwise op."""
+        return self.has_dout and (self.use_kernel if self.last_local
+                                  else True)
 
     @property
     def fold_bias(self) -> bool:
-        return self.has_bias and self.use_kernel and self.last_local
+        """Bias folds exactly like ``fold_dout`` (one fused add in the mix
+        epilogue on a cross ending)."""
+        return self.has_bias and (self.use_kernel if self.last_local
+                                  else True)
 
     @property
     def win_in(self) -> bool:
@@ -339,32 +351,73 @@ def _window_slab(x_full: jax.Array, base_cols: jax.Array, n_local: int,
 # shard-local stage math
 # ---------------------------------------------------------------------------
 
-def _cross_mix(z, zp, cf, k: int):
+def _cross_mix(z, zp, cf, k: int, d_out=None, bias=None):
     """The local 2x2 half of a cross stage, once the partner slab ``zp``
     is in hand: the low partner (``j & k == 0``) holds the x0 role and
     computes ``y0 = a*z + b*zp``, the high partner ``y1 = c*zp + d*z``.
+    The OPERAND ORDER of each two-term form is load-bearing: XLA
+    contracts ``p*q + r`` into an fma whose rounding depends on which
+    product stays exact, and an elastic execution classifies this same
+    pinned stage LOCAL on a wider-``n_local`` mesh — where the pair math
+    computes exactly these forms — so any re-association here breaks
+    bitwise re-shard parity.  When the schedule ENDS on this stage the
+    operator boundary folds in ON THE STORE: ``d_out`` scales the mixed
+    result AFTER the add (never pre-scaled into the mix coefficients, for
+    the same bitwise reason) and ``bias`` rides the same fused region.
     Factored out of ``_cross_fwd`` so the overlap schedule can apply it
-    per row block (and the RDMA kernel as its in-VMEM epilogue)."""
+    per row block (and the RDMA kernel as its in-VMEM epilogue, with the
+    same scale-on-store order)."""
     low = (jax.lax.axis_index(AXIS) & k) == 0
     a, b, c, d = (cf[:, i].astype(z.dtype) for i in range(4))
-    return jnp.where(low, a * z + b * zp, c * zp + d * z)
+    y = jnp.where(low, a * z + b * zp, c * zp + d * z)
+    if d_out is not None:
+        y = y * d_out.astype(z.dtype)
+    if bias is not None:
+        y = y + bias.astype(z.dtype)
+    return y
 
 
-def _cross_fwd(z, cf, k: int, plan: ShardPlan):
+def _cross_fwd(z, cf, k: int, plan: ShardPlan, d_out=None, bias=None):
     """One partner exchange + local 2x2 mix.  z: (rows, n_local);
-    cf: (n_local, 4) rows shared with the partner shard."""
+    cf: (n_local, 4) rows shared with the partner shard.  ``d_out`` /
+    ``bias`` fold the operator boundary into the mix (schedule-ending
+    cross stage — see ``_cross_mix``)."""
     zp = jax.lax.ppermute(z, AXIS, cross_partner_perm(plan.n_shards, k))
-    return _cross_mix(z, zp, cf, k)
+    return _cross_mix(z, zp, cf, k, d_out=d_out, bias=bias)
 
 
-def _cross_bwd(z_in, delta, cf, k: int, plan: ShardPlan):
+def _cross_bwd(z_in, delta, cf, k: int, plan: ShardPlan,
+               d_out=None, has_bias: bool = False):
     """Transpose of the partner exchange is the same exchange.  Each shard
     emits only the coefficient-grad components its role owns (low: a, b;
-    high: c, d); the table gather's scatter-add merges the partners."""
+    high: c, d); the table gather's scatter-add merges the partners.
+
+    With ``d_out`` (folded boundary — this cross stage ended the
+    schedule), ``delta`` arrives RAW (the output cotangent): ``g_bias``
+    sums it as-is, ``g_dout`` contracts it against the rematerialized mix
+    output ``u*z + v*zp`` (no stored pre-d_out activation needed), and the
+    mix cotangent is ``d_out * delta`` — scaled by the shard's OWN d_out
+    slice BEFORE the partner exchange, so the partner's arrives pre-scaled
+    by ITS slice.  Returns ``(g_in, g_cf, extras)`` with extras ordered
+    [g_dout?, g_bias?]."""
     perm = cross_partner_perm(plan.n_shards, k)
     zp = jax.lax.ppermute(z_in, AXIS, perm)
-    dp = jax.lax.ppermute(delta, AXIS, perm)
     low = (jax.lax.axis_index(AXIS) & k) == 0
+    extras = []
+    if d_out is not None or has_bias:
+        if has_bias:
+            g_bias = jnp.sum(delta.astype(_F32), axis=0)
+        if d_out is not None:
+            # remat the mix output in the forward's exact operand order
+            # (see _cross_mix — the two-sided form is the bitwise anchor)
+            af, bf, cf_, df = (cf[:, i].astype(_F32) for i in range(4))
+            zf, zpf = z_in.astype(_F32), zp.astype(_F32)
+            m = jnp.where(low, af * zf + bf * zpf, cf_ * zpf + df * zf)
+            extras.append(jnp.sum(delta.astype(_F32) * m, axis=0))
+            delta = delta * d_out.astype(delta.dtype)
+        if has_bias:
+            extras.append(g_bias)
+    dp = jax.lax.ppermute(delta, AXIS, perm)
     a, b, c, d = (cf[:, i].astype(delta.dtype) for i in range(4))
     # g_x0 = a d0 + c d1 on the low shard; g_x1 = b d0 + d d1 on the high.
     g_in = jnp.where(low, a * delta + c * dp, b * dp + d * delta)
@@ -376,7 +429,7 @@ def _cross_bwd(z_in, delta, cf, k: int, plan: ShardPlan):
     g_cf = jnp.where(low,
                      jnp.stack([s_own, s_swp, zero, zero], axis=-1),
                      jnp.stack([zero, zero, s_swp, s_own], axis=-1))
-    return g_in, g_cf.astype(cf.dtype)
+    return g_in, g_cf.astype(cf.dtype), extras
 
 
 def _base_tiles(col_base, n_tile: int):
@@ -567,15 +620,21 @@ def _cross_role_vecs(cf, k: int, low):
 
 
 def _pair_rdma_fwd(z, li: int, ci: int, plan: ShardPlan, tabs,
-                   d_in, base_cols):
+                   d_in, d_out, bias, base_cols):
     """One fused {local run -> cross exchange -> mix epilogue} pallas_call
     over the whole slab: the kernel row-block-pipelines internally, a
     block's partner-half remote copy starting as soon as its local mix
-    finishes (kernels/spm_stack.spm_overlap_kernel_call)."""
+    finishes (kernels/spm_stack.spm_overlap_kernel_call).  When this pair's
+    cross stage ENDS the schedule, the operator boundary folds into the
+    receive-mix epilogue as two extra vector operands: ``d_out`` scales
+    the mixed result AFTER the add (scale-on-store — bitwise the unfolded
+    post-stack op, which elastic re-sharding depends on) and ``bias``
+    rides the same store."""
     local_step, cross_step = plan.steps[li], plan.steps[ci]
     k = cross_step[2]
     low = (jax.lax.axis_index(AXIS) & k) == 0
     mix_a, mix_b = _cross_role_vecs(tabs[ci][0], k, low)
+    last = ci == len(plan.steps) - 1
     (run_strides, n_tile), = plan_runs(plan.n_local, local_step[2])
     first = li == 0
     kcf, scf = (Q.quantize_coeffs(tabs[li][0]) if plan.quant_cf
@@ -583,6 +642,8 @@ def _pair_rdma_fwd(z, li: int, ci: int, plan: ShardPlan, tabs,
     return K.spm_overlap_kernel_call(
         z, kcf, mix_a, mix_b, _partner_coords(plan, k),
         d_in=d_in if (first and plan.fold_din) else None,
+        d_out=d_out if (last and plan.fold_dout) else None,
+        bias=bias if (last and plan.fold_bias) else None,
         col_base=(_base_tiles(base_cols, n_tile)
                   if (first and plan.win_in) else None),
         coeff_scale=scf,
@@ -592,7 +653,7 @@ def _pair_rdma_fwd(z, li: int, ci: int, plan: ShardPlan, tabs,
 
 
 def _pair_rdma_bwd(z_in, delta, li: int, ci: int, plan: ShardPlan, tabs,
-                   d_in, base_cols):
+                   d_in, d_out, base_cols):
     """Backward of an RDMA pair from the LOCAL step's saved input: the
     kernel remats the local run's output in VMEM (the forward sent it
     without ever writing HBM), exchanges (delta, z_out) blocks with the
@@ -600,7 +661,15 @@ def _pair_rdma_bwd(z_in, delta, li: int, ci: int, plan: ShardPlan, tabs,
     cross-backward mix as its prologue and walks the local stages in
     reverse.  Returns (delta, g_local_coeffs, g_cross_coeffs, vec_grads)
     with the cross grads placed into the role-owned (a,b)/(c,d) slots
-    exactly as ``_cross_bwd`` does."""
+    exactly as ``_cross_bwd`` does and ``vec_grads`` ordered
+    [g_din?, g_dout?, g_bias?].
+
+    When this pair's cross stage ENDED the schedule with a folded
+    boundary, ``delta`` arrives RAW: ``g_bias`` sums it in the shard body,
+    the kernel pre-scales each SENT block by the shard's own d_out slice
+    and returns the raw-cotangent sums (t_own, t_swp), and
+    ``g_dout = mix_a * t_own + mix_b * t_swp`` with the UNSCALED forward
+    role vectors — exact, no division remat."""
     local_step, cross_step = plan.steps[li], plan.steps[ci]
     k = cross_step[2]
     low = (jax.lax.axis_index(AXIS) & k) == 0
@@ -611,19 +680,31 @@ def _pair_rdma_bwd(z_in, delta, li: int, ci: int, plan: ShardPlan, tabs,
     v = jnp.where(low, cfc[:, 2], cfc[:, 1])
     (run_strides, n_tile), = plan_runs(plan.n_local, local_step[2])
     first = li == 0
+    last = ci == len(plan.steps) - 1
+    fold_dout = last and plan.fold_dout
     kcf, scf = (Q.quantize_coeffs(tabs[li][0]) if plan.quant_cf
                 else (tabs[li][0], None))
     out = K.spm_overlap_bwd_kernel_call(
         z_in, kcf, delta, u, v, _partner_coords(plan, k),
         d_in=d_in if (first and plan.fold_din) else None,
+        d_out=d_out if fold_dout else None,
         col_base=(_base_tiles(base_cols, n_tile)
                   if (first and plan.win_in) else None),
         coeff_scale=scf,
         strides=run_strides, block_rows=plan.block_rows, n_tile=n_tile,
         in_width=plan.in_width if (first and plan.win_in) else None,
         collective_id=2 * ci + 1)
-    delta, g_local, s_own, s_swp = out[:4]
-    vecs = list(out[4:])
+    gx, g_local, s_own, s_swp = out[:4]
+    vecs = list(out[4:])           # [g_din?] + [t_own, t_swp]?
+    if fold_dout:
+        t_swp = vecs.pop()
+        t_own = vecs.pop()
+        mix_a, mix_b = _cross_role_vecs(cfc, k, low)
+        vecs.append(mix_a.astype(_F32) * t_own
+                    + mix_b.astype(_F32) * t_swp)
+    if last and plan.fold_bias:
+        vecs.append(jnp.sum(delta.astype(_F32), axis=0))
+    delta = gx
     zero = jnp.zeros_like(s_own)
     g_cross = jnp.where(low,
                         jnp.stack([s_own, s_swp, zero, zero], axis=-1),
@@ -656,7 +737,8 @@ def _overlap_steps_fwd(plan: ShardPlan, tabs, d_in, d_out, bias, z,
             li, ci = i, i + 1
             if collect and not (li == 0 and plan.win_in):
                 step_ins[li] = z
-            z = _pair_rdma_fwd(z, li, ci, plan, tabs, d_in, base_cols)
+            z = _pair_rdma_fwd(z, li, ci, plan, tabs, d_in, d_out, bias,
+                               base_cols)
             i += 2
             continue
         for step in (seg[1:] if seg[0] == "pair" else (seg[1],)):
@@ -668,8 +750,11 @@ def _overlap_steps_fwd(plan: ShardPlan, tabs, d_in, d_out, bias, z,
             if step[0] == "cross":
                 perm = cross_partner_perm(plan.n_shards, step[2])
                 zps = [jax.lax.ppermute(b, AXIS, perm) for b in blocks]
-                outs = [_cross_mix(b, p, cf, step[2])
-                        for b, p in zip(blocks, zps)]
+                outs = [_cross_mix(
+                    b, p, cf, step[2],
+                    d_out=d_out if (last and plan.fold_dout) else None,
+                    bias=bias if (last and plan.fold_bias) else None)
+                    for b, p in zip(blocks, zps)]
             else:
                 outs = [_segment_fwd(
                     b, cf, step[2], plan,
@@ -714,10 +799,14 @@ def _overlap_steps_bwd(plan: ShardPlan, tabs, d_in, d_out, res, delta,
             li, ci = i0, i0 + 1
             z_in = x_res if (li == 0 and plan.win_in) else step_ins[li]
             delta, g_l, g_c, vecs = _pair_rdma_bwd(
-                z_in, delta, li, ci, plan, tabs, d_in, base_cols)
+                z_in, delta, li, ci, plan, tabs, d_in, d_out, base_cols)
             g_tabs[li], g_tabs[ci] = g_l, g_c
             if li == 0 and plan.fold_din:
                 folded["din"] = vecs.pop(0)
+            if ci == n_steps - 1 and plan.fold_dout:
+                folded["dout"] = vecs.pop(0)
+            if ci == n_steps - 1 and plan.fold_bias:
+                folded["bias"] = vecs.pop(0)
             continue
         steps_here = seg[1:] if seg[0] == "pair" else (seg[1],)
         for off in range(len(steps_here) - 1, -1, -1):
@@ -728,10 +817,18 @@ def _overlap_steps_bwd(plan: ShardPlan, tabs, d_in, d_out, res, delta,
             d_blocks = _overlap_split(delta, plan.row_blocks)
             if step[0] == "cross":
                 z_blocks = _overlap_split(step_ins[i], plan.row_blocks)
-                outs = [_cross_bwd(zb, db, cf, step[2], plan)
-                        for zb, db in zip(z_blocks, d_blocks)]
+                outs = [_cross_bwd(
+                    zb, db, cf, step[2], plan,
+                    d_out=d_out if (last and plan.fold_dout) else None,
+                    has_bias=last and plan.fold_bias)
+                    for zb, db in zip(z_blocks, d_blocks)]
                 delta = jnp.concatenate([o[0] for o in outs], axis=0)
                 g_tabs[i] = functools.reduce(jnp.add, [o[1] for o in outs])
+                extras = _sum_vec_lists([o[2] for o in outs])
+                if last and plan.fold_dout:
+                    folded["dout"] = extras.pop(0)
+                if last and plan.fold_bias:
+                    folded["bias"] = extras.pop(0)
             else:
                 z_in = x_res if (first and plan.win_in) else step_ins[i]
                 z_blocks = _overlap_split(z_in, plan.row_blocks)
@@ -785,7 +882,10 @@ def _shard_fwd(plan: ShardPlan, tabs, d_in, d_out, bias, x2, collect: bool):
                 step_ins.append(ph if (first and plan.win_in) else z)
             cf = tab[0]                  # drop the (1,) local shard axis
             if step[0] == "cross":
-                z = _cross_fwd(z, cf, step[2], plan)
+                z = _cross_fwd(
+                    z, cf, step[2], plan,
+                    d_out=d_out if (last and plan.fold_dout) else None,
+                    bias=bias if (last and plan.fold_bias) else None)
             else:
                 z = _segment_fwd(
                     z, cf, step[2], plan,
@@ -843,7 +943,14 @@ def _shard_bwd(plan: ShardPlan, tabs, d_in, d_out, bias, res, gy):
             cf = tabs[i][0]
             first, last = i == 0, i == n_steps - 1
             if step[0] == "cross":
-                delta, g = _cross_bwd(step_ins[i], delta, cf, step[2], plan)
+                delta, g, extras = _cross_bwd(
+                    step_ins[i], delta, cf, step[2], plan,
+                    d_out=d_out if (last and plan.fold_dout) else None,
+                    has_bias=last and plan.fold_bias)
+                if last and plan.fold_dout:
+                    g_dout = extras.pop(0)
+                if last and plan.fold_bias:
+                    g_bias = extras.pop(0)
             else:
                 z_in = x_res if (first and plan.win_in) else step_ins[i]
                 delta, g, vecs = _segment_bwd(

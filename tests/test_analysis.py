@@ -134,6 +134,39 @@ def test_contract_catches_silent_kernel_fallback():
     assert results["pallas-call-count-matches-plan"].startswith("fail")
 
 
+def test_contract_catches_block_interop_roundtrip():
+    """Seeded violation: a 'block' artifact assembled from per-linear
+    pieces — norm and activation in XLA between two kernel calls — must
+    trip block-no-interop-roundtrip on every prong (call count, batch-wide
+    float intermediates outside the fused region)."""
+    cell = contracts.Cell(cell_id="64x64/fused", d_in=64, d_out=64,
+                          variant="fused")
+    assert contracts.CONTRACTS["block-no-interop-roundtrip"].applies(cell)
+    art = contracts.Artifacts(cell)
+    lc = cell.linear_config()
+
+    def bad(p, x):
+        h = x * jax.lax.rsqrt(jnp.mean(x * x, -1, keepdims=True) + 1e-6)
+        h = jax.nn.gelu(linear_apply(p, h, lc))
+        return x + linear_apply(p, h, lc)   # spmlint: allow[SPM007]
+
+    art.jaxpr_block = jax.make_jaxpr(bad)(art.params, art.x)
+    results = contracts.run_cell(cell, art)
+    verdict = results["block-no-interop-roundtrip"]
+    assert verdict.startswith("fail"), results
+    assert "pallas_call" in verdict and "intermediate" in verdict
+
+
+def test_block_contract_passes_on_healthy_cells():
+    """The real block artifact (one fused region) passes on a square and
+    a rectangular cell."""
+    for d_in, d_out in [(64, 64), (96, 256)]:
+        cell = contracts.Cell(cell_id=f"{d_in}x{d_out}/fused", d_in=d_in,
+                              d_out=d_out, variant="fused")
+        results = contracts.run_cell(cell)
+        assert results.get("block-no-interop-roundtrip") == "pass", results
+
+
 def test_contract_reports_error_not_skip_on_broken_artifact():
     """An artifact that cannot build is a finding, not a silent skip."""
     cell = _fused_cell()
@@ -219,6 +252,26 @@ def test_spm006_all_and_docstring_consistency(tmp_path):
     nodoc = "x = 1\n"
     found = _lint_src(tmp_path, "src/repro/core/mod2.py", nodoc)
     assert [v.rule for v in found] == ["SPM006"]
+
+
+def test_spm007_composition_outside_layers(tmp_path):
+    wrapped = '"""doc."""\n\n\ndef f(p, x, cfg):\n' \
+              '    return silu(spm_apply(p, x, cfg))\n'
+    found = _lint_src(tmp_path, "src/repro/models/custom.py", wrapped)
+    assert [v.rule for v in found] == ["SPM007"]
+    fed = '"""doc."""\n\n\ndef f(p, np_, x, cfg):\n' \
+          '    return linear_apply(p, rms_norm(np_, x), cfg)\n'
+    found = _lint_src(tmp_path, "src/repro/models/custom.py", fed)
+    assert [v.rule for v in found] == ["SPM007"]
+    # layers/ owns the fused block entries; kernels/ hosts the fused
+    # implementations and their fallback mirrors — both exempt
+    assert _lint_src(tmp_path, "src/repro/layers/custom.py", wrapped) == []
+    assert _lint_src(tmp_path, "src/repro/kernels/custom.py", wrapped) == []
+    # pragma for spec-mandated compositions (the paper's teacher/student)
+    ok = wrapped.replace("    return silu",
+                         "    # spmlint: allow[SPM007] teacher spec\n"
+                         "    return silu")
+    assert _lint_src(tmp_path, "src/repro/models/custom.py", ok) == []
 
 
 def test_spmlint_tree_is_clean():

@@ -1,0 +1,292 @@
+"""Residual-block megakernel parity + grad sweeps (interpret mode on CPU).
+
+Two comparison regimes, per the acceptance spec:
+
+* the NON-fused layer path must equal the explicit norm/ffn/residual
+  composition BITWISE (it is literally that composition), and
+* the fused kernel path must land within a bound DERIVED from machine
+  epsilon and the chain depth against the pure-jnp f32 oracle — no
+  hand-tuned tolerances.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.linear import LinearConfig, init_linear, linear_apply
+from repro.kernels.ops import spm_block_fused
+from repro.kernels.ref import spm_full_ref
+from repro.layers.ffn import FFNConfig, ffn_apply, ffn_block_apply, init_ffn
+from repro.layers.norms import init_rms_norm, norm_linear_apply, rms_norm
+
+KEY = jax.random.PRNGKey(0)
+
+_ACTS = {"relu": jax.nn.relu, "silu": jax.nn.silu, "gelu": jax.nn.gelu}
+
+N, L = 128, 7
+STRIDES = (1, 2, 4, 8, 16, 32, 64)
+
+
+def _operands(key, n, n_stages, scale=0.4):
+    ks = jax.random.split(key, 4)
+    cf = scale * jax.random.normal(ks[0], (n_stages, n // 2, 4))
+    d_in = 1.0 + 0.1 * jax.random.normal(ks[1], (n,))
+    d_out = 1.0 + 0.1 * jax.random.normal(ks[2], (n,))
+    bias = 0.1 * jax.random.normal(ks[3], (n,))
+    return cf, d_in, d_out, bias
+
+
+def _tol(dtype, depth, ref):
+    """Rounding bound derived from machine epsilon, not tuned: ``depth``
+    dependent multiply-add levels each contribute O(eps_f32) relative
+    error (Higham §3.1: the accumulated factor gamma_k ≈ k·eps for
+    k·eps << 1) on top of one I/O-dtype store rounding, measured against
+    the oracle's own magnitude scale.  The constant 8 covers the
+    reassociation freedom between the VMEM chain and the oracle's
+    op-by-op order (each reassociation is worth a small multiple of one
+    rounding, never a new error class)."""
+    eps_io = float(jnp.finfo(dtype).eps)
+    eps_f32 = float(jnp.finfo(jnp.float32).eps)
+    scale = float(np.max(np.abs(np.asarray(ref, np.float32)))) + 1.0
+    return 8 * (depth * eps_f32 + eps_io) * scale
+
+
+def _assert_close(got, ref, dtype, depth):
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32),
+        atol=_tol(dtype, depth, ref), rtol=0)
+
+
+def _block_ref(x, ops1, ops2, gamma, activation, residual,
+               in_w, mid_w, out_w, eps=1e-6):
+    """Pure-jnp f32 oracle of the whole block, masking dead lanes exactly
+    where the kernel does: x to in_width before the row stats, the mid
+    boundary to mid_width BEFORE the activation (act(0) = 0 keeps dead
+    lanes dead), the store to out_width."""
+    cf1, di1, do1, b1 = ops1
+    cf2, di2, do2, b2 = ops2
+    n = cf1.shape[1] * 2
+    xf = x.astype(jnp.float32)
+    h = xf
+    if gamma is not None:
+        var = jnp.mean(h * h, axis=-1, keepdims=True)
+        h = h * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32)
+    h = jnp.pad(h, ((0, 0), (0, n - in_w)))
+    h = spm_full_ref(h, cf1, STRIDES, d_in=di1, d_out=do1, bias=b1)
+    h = jnp.where(jnp.arange(n) < mid_w, h, 0.0)
+    if activation is not None:
+        h = _ACTS[activation](h)
+    h = spm_full_ref(h, cf2, STRIDES, d_in=di2, d_out=do2, bias=b2)
+    y = h[:, :out_w]
+    if residual:
+        y = y + xf
+    return y.astype(x.dtype)
+
+
+@pytest.mark.parametrize("activation", [None, "relu", "silu", "gelu"])
+@pytest.mark.parametrize("norm", [True, False], ids=["norm", "nonorm"])
+@pytest.mark.parametrize("residual", [True, False], ids=["res", "nores"])
+def test_block_fused_fwd_and_grads_match_oracle(activation, norm, residual):
+    """Square full-width sweep: forward and every operand grad of the
+    fused block against the f32 oracle, f32 I/O."""
+    ops1 = _operands(jax.random.PRNGKey(1), N, L)
+    ops2 = _operands(jax.random.PRNGKey(2), N, L)
+    gamma = (1.0 + 0.1 * jax.random.normal(jax.random.PRNGKey(3), (N,))
+             if norm else None)
+    x = jax.random.normal(KEY, (8, N))
+
+    def fused(x, gamma, ops1, ops2):
+        return spm_block_fused(
+            x, coeffs1=ops1[0], d_in1=ops1[1], d_out1=ops1[2],
+            bias1=ops1[3], strides1=STRIDES, gamma=gamma,
+            coeffs2=ops2[0], d_in2=ops2[1], d_out2=ops2[2],
+            bias2=ops2[3], strides2=STRIDES, activation=activation,
+            residual=residual)
+
+    def oracle(x, gamma, ops1, ops2):
+        return _block_ref(x, ops1, ops2, gamma, activation, residual,
+                          N, N, N)
+
+    y = fused(x, gamma, ops1, ops2)
+    ref = oracle(x, gamma, ops1, ops2)
+    depth = 2 * L + 8                  # stages + norm/diag/act/residual
+    _assert_close(y, ref, jnp.float32, depth)
+
+    def loss(fn):
+        return lambda *a: jnp.sum(fn(*a).astype(jnp.float32) ** 2)
+
+    args = (x, gamma, ops1, ops2) if norm else (x, ops1, ops2)
+    arg_ix = tuple(range(len(args)))
+    wrap = (lambda f: f) if norm else (
+        lambda f: (lambda x, o1, o2: f(x, None, o1, o2)))
+    g = jax.grad(loss(wrap(fused)), argnums=arg_ix)(*args)
+    gr = jax.grad(loss(wrap(oracle)), argnums=arg_ix)(*args)
+    for a, b in zip(jax.tree.leaves(g), jax.tree.leaves(gr)):
+        _assert_close(a, b, jnp.float32, 2 * depth)
+
+
+@pytest.mark.parametrize("activation", ["gelu", "relu"])
+def test_block_fused_bf16_io(activation):
+    """bf16 activation I/O, f32 interior: the derived bound collapses to
+    one bf16 store rounding on top of the f32 chain."""
+    ops1 = _operands(jax.random.PRNGKey(1), N, L)
+    ops2 = _operands(jax.random.PRNGKey(2), N, L)
+    gamma = 1.0 + 0.1 * jax.random.normal(jax.random.PRNGKey(3), (N,))
+    x = jax.random.normal(KEY, (8, N)).astype(jnp.bfloat16)
+    y = spm_block_fused(
+        x, coeffs1=ops1[0], d_in1=ops1[1], d_out1=ops1[2], bias1=ops1[3],
+        strides1=STRIDES, gamma=gamma, coeffs2=ops2[0], d_in2=ops2[1],
+        d_out2=ops2[2], bias2=ops2[3], strides2=STRIDES,
+        activation=activation, residual=True)
+    assert y.dtype == jnp.bfloat16
+    ref = _block_ref(x, ops1, ops2, gamma, activation, True, N, N, N)
+    _assert_close(y, ref, jnp.bfloat16, 2 * L + 8)
+
+
+def test_block_fused_rect_widths_and_dead_lane_grads():
+    """Rectangular widths: norm stats over the true in_width lanes, mid
+    masked before the activation, residual on the store — and every
+    dead-lane operand grad comes back EXACTLY zero (never computed, not
+    small)."""
+    in_w, mid_w, out_w = 96, 100, 96   # residual requires out_w == in_w
+    ops1 = _operands(jax.random.PRNGKey(1), N, L)
+    ops2 = _operands(jax.random.PRNGKey(2), N, L)
+    gamma = 1.0 + 0.1 * jax.random.normal(jax.random.PRNGKey(3), (in_w,))
+    x = jax.random.normal(KEY, (8, in_w))
+
+    def fused(x, gamma, ops1, ops2):
+        return spm_block_fused(
+            x, coeffs1=ops1[0], d_in1=ops1[1], d_out1=ops1[2],
+            bias1=ops1[3], strides1=STRIDES, gamma=gamma,
+            coeffs2=ops2[0], d_in2=ops2[1], d_out2=ops2[2],
+            bias2=ops2[3], strides2=STRIDES, activation="gelu",
+            residual=True, in_width=in_w, mid_width=mid_w,
+            out_width=out_w)
+
+    y = fused(x, gamma, ops1, ops2)
+    assert y.shape == (8, out_w)
+    ref = _block_ref(x, ops1, ops2, gamma, "gelu", True, in_w, mid_w, out_w)
+    depth = 2 * L + 8
+    _assert_close(y, ref, jnp.float32, depth)
+
+    def loss(fn):
+        return lambda *a: jnp.sum(fn(*a) ** 2)
+
+    def oracle(x, gamma, ops1, ops2):
+        return _block_ref(x, ops1, ops2, gamma, "gelu", True,
+                          in_w, mid_w, out_w)
+
+    g = jax.grad(loss(fused), argnums=(0, 1, 2, 3))(x, gamma, ops1, ops2)
+    gr = jax.grad(loss(oracle), argnums=(0, 1, 2, 3))(x, gamma, ops1, ops2)
+    for a, b in zip(jax.tree.leaves(g), jax.tree.leaves(gr)):
+        _assert_close(a, b, jnp.float32, 2 * depth)
+    _, _, g1, g2 = g
+    assert np.all(np.asarray(g1[1][in_w:]) == 0)    # g_din1 past in_w
+    assert np.all(np.asarray(g1[2][mid_w:]) == 0)   # g_dout1 past mid_w
+    assert np.all(np.asarray(g1[3][mid_w:]) == 0)   # g_bias1 past mid_w
+    assert np.all(np.asarray(g2[1][mid_w:]) == 0)   # g_din2 past mid_w
+    assert np.all(np.asarray(g2[2][out_w:]) == 0)   # g_dout2 past out_w
+    assert np.all(np.asarray(g2[3][out_w:]) == 0)   # g_bias2 past out_w
+
+
+def _ffn_cfg(fuse, activation="gelu", d_model=64, d_ff=256):
+    return FFNConfig(d_model=d_model, d_ff=d_ff, linear_impl="spm_general",
+                     activation=activation, spm_backward="custom",
+                     spm_use_kernel=True, spm_block_fuse=fuse)
+
+
+def test_ffn_block_fallback_is_bitwise_the_composition():
+    """spm_block_fuse=False IS the explicit composition — bitwise, both
+    with and without the norm prologue."""
+    cfg = _ffn_cfg(False)
+    p = init_ffn(KEY, cfg)
+    np_ = init_rms_norm(cfg.d_model)
+    x = jax.random.normal(KEY, (4, 10, cfg.d_model))
+    y = ffn_block_apply(p, np_, x, cfg)
+    ref = x + ffn_apply(p, rms_norm(np_, x), cfg)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(ref))
+    y2 = ffn_block_apply(p, None, x, cfg)
+    np.testing.assert_array_equal(np.asarray(y2),
+                                  np.asarray(x + ffn_apply(p, x, cfg)))
+
+
+@pytest.mark.parametrize("activation", ["relu", "silu", "gelu"])
+def test_ffn_block_fused_matches_fallback(activation):
+    """Layer-level fused-vs-fallback parity, forward and parameter grads,
+    within the derived bound (both interiors are f32; the fallback
+    round-trips bf16-free f32 arrays between ops, so only reassociation
+    separates them)."""
+    cfg_f = _ffn_cfg(True, activation)
+    cfg_o = _ffn_cfg(False, activation)
+    p = init_ffn(KEY, cfg_f)
+    np_ = init_rms_norm(cfg_f.d_model)
+    x = jax.random.normal(KEY, (4, 10, cfg_f.d_model))
+    y = ffn_block_apply(p, np_, x, cfg_f)
+    ref = ffn_block_apply(p, np_, x, cfg_o)
+    n = LinearConfig(d_in=cfg_f.d_model, d_out=cfg_f.d_ff,
+                     impl="spm_general").n
+    depth = 2 * len(LinearConfig(d_in=cfg_f.d_model, d_out=cfg_f.d_ff,
+                                 impl="spm_general",
+                                 use_kernel=True).spm_config()
+                    .pairing.strides()) + 8
+    assert n == 256
+    _assert_close(y, ref, jnp.float32, depth)
+
+    def loss(cfg):
+        return lambda p, np_, x: jnp.sum(
+            ffn_block_apply(p, np_, x, cfg) ** 2)
+
+    g = jax.grad(loss(cfg_f), argnums=(0, 1, 2))(p, np_, x)
+    gr = jax.grad(loss(cfg_o), argnums=(0, 1, 2))(p, np_, x)
+    for a, b in zip(jax.tree.leaves(g), jax.tree.leaves(gr)):
+        _assert_close(a, b, jnp.float32, 2 * depth)
+
+
+def test_ffn_block_swiglu_never_fuses():
+    """swiglu is structurally excluded (the gate is a second operator on
+    the same input, not a chainable epilogue): even forced on, the layer
+    takes the bitwise composition path."""
+    cfg = _ffn_cfg(True, "swiglu")
+    p = init_ffn(KEY, cfg)
+    np_ = init_rms_norm(cfg.d_model)
+    x = jax.random.normal(KEY, (4, 10, cfg.d_model))
+    y = ffn_block_apply(p, np_, x, cfg)
+    ref = x + ffn_apply(p, rms_norm(np_, x), cfg)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(ref))
+    jx = jax.make_jaxpr(lambda p, x: ffn_block_apply(p, np_, x, cfg))(p, x)
+    from repro.analysis.jaxpr_walk import count_primitive
+    assert count_primitive(jx, "pallas_call") > 1   # per-linear path
+
+
+def test_ffn_block_fused_single_pallas_call():
+    """The fused layer forward lowers the whole residual block as exactly
+    ONE pallas_call — the megakernel acceptance shape, asserted at the
+    layer entry (the contract checker proves it per zoo cell)."""
+    from repro.analysis.jaxpr_walk import count_primitive, primitive_names
+    cfg = _ffn_cfg(True)
+    p = init_ffn(KEY, cfg)
+    np_ = init_rms_norm(cfg.d_model)
+    x = jax.random.normal(KEY, (8, cfg.d_model))
+    jx = jax.make_jaxpr(lambda p, np_, x: ffn_block_apply(p, np_, x, cfg))(
+        p, np_, x)
+    assert count_primitive(jx, "pallas_call") == 1
+    assert "pad" not in primitive_names(jx)
+
+
+def test_norm_linear_apply_fused_and_fallback():
+    """The single-stack face (norm prologue only): fused within the
+    derived bound of the fallback, fallback bitwise the composition."""
+    lc = LinearConfig(d_in=96, d_out=128, impl="spm_general",
+                      backward="custom", use_kernel=True)
+    p = init_linear(KEY, lc)
+    np_ = init_rms_norm(96)
+    x = jax.random.normal(KEY, (8, 96))
+    y_off = norm_linear_apply(np_, p, x, lc, block_fuse=False)
+    ref = linear_apply(p, rms_norm(np_, x), lc)
+    np.testing.assert_array_equal(np.asarray(y_off), np.asarray(ref))
+    y_on = norm_linear_apply(np_, p, x, lc, block_fuse=True)
+    L1 = len(lc.spm_config().pairing.strides())
+    _assert_close(y_on, ref, jnp.float32, L1 + 8)
+
+

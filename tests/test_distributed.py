@@ -543,6 +543,44 @@ else:
                 assert not any(len(s) == 2 and s[0] == slab_rows
                                for s in out_shapes), "slab slice in body"
 
+    def test_cross_ending_schedule_folds_boundary_into_mix_epilogue():
+        """PR 5 leftover closed: a schedule ENDING on cross stages folds
+        d_out/bias onto the final mix epilogue's store instead of a
+        separate post-walk pass.  The fold is scale-ON-STORE (d_out
+        multiplies the mixed result AFTER the add) so it stays bitwise the
+        unfolded op — elastic re-sharding classifies the same pinned
+        stage local on a wider mesh and the two paths must agree.  Pinned
+        structurally: the shard body's slab-shaped ops are EXACTLY the
+        two-sided mix per cross stage (four muls, two adds, one role
+        select — the order-preserving form _cross_mix documents) plus the
+        ONE store-scale d_out mul and the single bias ride-along add on
+        the last; no second d_out broadcast and no other elementwise op
+        touches the slab."""
+        from collections import Counter
+        for use_bias in (True, False):
+            cfg = SPMConfig(n=64, n_stages=6, schedule="two_level",
+                            n_shards=4, backward="custom", use_kernel=True,
+                            use_bias=use_bias)
+            p = init_spm(KEY, cfg)
+            rows = 8
+            x = jax.random.normal(KEY, (rows, 64))
+            steps = spm_shard.plan_steps(64, cfg.pairing.strides(), 4)
+            assert steps[-1][0] == "cross"   # the premise of the test
+            n_cross = sum(1 for s in steps if s[0] == "cross")
+            with activation_sharding(_mesh(4), shard_feature=True):
+                jx = jax.make_jaxpr(lambda p, x: spm_apply(p, x, cfg))(p, x)
+            inside, _ = split_shard_map(jx.jaxpr)
+            slab = Counter()
+            for e in inside:
+                if any(len(v.aval.shape) == 2 and v.aval.shape[0] == rows
+                       for v in e.outvars):
+                    slab[e.primitive.name] += 1
+            assert slab["mul"] == 4 * n_cross + 1, dict(slab)
+            assert slab["add"] == 2 * n_cross + int(use_bias), dict(slab)
+            assert slab["select_n"] == n_cross, dict(slab)
+            for prim in ("sub", "pad", "gather", "dynamic_slice"):
+                assert slab[prim] == 0, dict(slab)
+
     def test_sharded_rect_no_pad_single_output_slice():
         """ISSUE 4 acceptance (rectangular widths): the sharded
         rectangular forward contains NO pad primitive and no

@@ -84,6 +84,33 @@ def test_tiny_rows_cap_the_row_block_not_the_budget():
                                               overlap_bufs=True)
 
 
+@pytest.mark.parametrize("dtype_bytes", [4, 2], ids=["f32", "bf16"])
+def test_block_accounting_adds_chain_live_buffers(dtype_bytes):
+    # the residual-block kernels keep THREE extra f32 activation tiles
+    # live across the whole chain (x-hat, pre-act u, post-act h) plus the
+    # (block_rows, 1) row statistics, on top of the per-run working set
+    from repro.kernels.spm_stack import block_vmem_bytes
+    rb, nt, L = 32, 1024, 14
+    assert block_vmem_bytes(rb, nt, L, dtype_bytes) == \
+        vmem_bytes(rb, nt, L, dtype_bytes) + 3 * rb * nt * 4 + rb * 4
+
+
+def test_block_budget_ceiling_respected():
+    # the block entry budgets ONE pseudo-run holding both stacks' strides
+    # at the full width (the chain never re-tiles between the stacks)
+    from repro.kernels.spm_stack import block_vmem_bytes
+    strides = SPMConfig(n=2048, n_stages=11,
+                        variant="general").pairing.strides()
+    runs = [(tuple(strides) * 2, 2048)]
+    br_block = pick_block_rows_for_plan(runs, 1 << 20, 4, block_bufs=True)
+    br_plain = pick_block_rows_for_plan(runs, 1 << 20, 4)
+    # reserving the chain buffers can only shrink the row block
+    assert 8 <= br_block <= br_plain
+    assert block_vmem_bytes(br_block, 2048, 22, 4) <= BUDGET
+    # tiny rows: the row cap binds identically with and without the bufs
+    assert pick_block_rows_for_plan(runs, 8, 4, block_bufs=True) == 8
+
+
 def test_pick_row_blocks_partitions_rows_into_kernel_multiples():
     from repro.parallel.spm_shard import pick_row_blocks
     # padded slab: every block a block_rows multiple, sizes sum to rows
